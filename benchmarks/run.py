@@ -1,0 +1,60 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (the harness contract).  Derived is
+modeled Mops (throughput figures), bits/key (memory figures), or a
+figure-specific annotation.  EXPERIMENTS.md §Paper-validation interprets the
+ratios against the paper's claims.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller key sets (CI-speed)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_figs
+    from benchmarks.common import emit
+
+    n = 100_000 if args.quick else 300_000
+    suites = [
+        ("fig3", lambda: paper_figs.fig3_motivation(min(n, 200_000))),
+        ("fig9", lambda: paper_figs.fig9_10_ycsb(n)),
+        ("fig11", lambda: paper_figs.fig11_sosd(n)),
+        ("fig12", lambda: paper_figs.fig12_mn_threads(n)),
+        ("fig14", lambda: paper_figs.fig14_load_factor(min(n, 200_000))),
+        ("fig15", lambda: paper_figs.fig15_num_pairs(
+            (50_000, 100_000, 200_000) if args.quick
+            else (200_000, 500_000, 800_000))),
+        ("fig16", lambda: paper_figs.fig16_cn_memory(
+            (100_000, 200_000) if args.quick
+            else (200_000, 1_000_000, 2_000_000))),
+        ("fig17", lambda: paper_figs.fig17_resize(min(n, 150_000))),
+        ("kernel_paged", kernel_bench.paged_attention_traffic),
+        ("kernel_lookup", kernel_bench.ludo_lookup_throughput),
+        ("kernel_pagetable", kernel_bench.page_table_memory),
+    ]
+    rows = []
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows.extend(fn())
+        except Exception as e:  # keep the harness running; report the miss
+            rows.append((f"{name}/ERROR", 0.0, repr(e)[:80]))
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

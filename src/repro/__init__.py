@@ -1,0 +1,2 @@
+"""repro: Outback (PVLDB'25) as a first-class feature of a multi-pod JAX
+LM training/serving framework. See DESIGN.md for the system map."""

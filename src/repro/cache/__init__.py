@@ -1,0 +1,4 @@
+from repro.cache.paged import (CuckooPageTable, LudoPageTable, PageAllocator,
+                               page_key)
+
+__all__ = ["CuckooPageTable", "LudoPageTable", "PageAllocator", "page_key"]

@@ -1,0 +1,182 @@
+"""Ludo-paged KV cache: the paper's decoupled index as a page table.
+
+Serving-side analogue of Outback (DESIGN.md §3.2):
+
+* **CN component** — the Ludo locator over page keys
+  ``key = (seq_id << 24) | logical_page``.  Costs ~(2.33 + 2/eps) bits per
+  page: for a pool of 1M pages (~128M tokens at ps=128) that's ~0.6 MB,
+  trivially replicated on every compute worker, and VMEM-resident for the
+  Pallas kernel's scalar prefetch.
+* **MN component** — the DMPH slot table holding physical page ids, plus the
+  page pool itself (the HBM hog).  A decode-step lookup is a pure gather:
+  the perfect-hash property means no probing, no fingerprint compare — the
+  page map is known *before* the attention kernel launches, which is exactly
+  what ``repro.kernels.paged_attention`` needs for scalar prefetch.
+
+``CuckooPageTable`` is the probing baseline (RACE analogue): two candidate
+buckets per key; a lookup must inspect BOTH (the kernel fetches 2x pages —
+``repro.kernels.cuckoo_paged_attention``).
+
+Both tables share the allocator; the benchmark + example quantify memory
+(bits/page) and lookup work (gathers/op) against each other.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.outback import OutbackShard
+from repro.core.store import make_uniform_keys  # noqa: F401 (re-export)
+from repro.core.hashing import hash_range, split_u64
+
+
+def page_key(seq_id, logical):
+    return (np.uint64(seq_id) << np.uint64(24)) | np.uint64(logical)
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int):
+        self.free = list(range(num_pages - 1, -1, -1))
+        self.num_pages = num_pages
+
+    def alloc(self) -> int:
+        if not self.free:
+            raise RuntimeError("KV page pool exhausted")
+        return self.free.pop()
+
+    def release(self, page: int) -> None:
+        self.free.append(page)
+
+    @property
+    def used(self) -> int:
+        return self.num_pages - len(self.free)
+
+
+class LudoPageTable:
+    """(seq, logical_page) -> physical page through the Outback index.
+
+    Bulk-built from the warmup working set; incremental allocations use the
+    paper's Insert protocol (free slot / reseed / overflow), sequence
+    teardown uses Delete.  ``lookup_batch`` is the jit-friendly pure-gather
+    path used on the decode hot loop.
+    """
+
+    def __init__(self, capacity_pages: int, *, load_factor: float = 0.85):
+        # seed the table with reserved sentinel keys so the DMPH structure
+        # exists before the first real page lands
+        seed_n = max(64, capacity_pages // 8)
+        keys = make_uniform_keys(seed_n, seed=0xFA6E) | np.uint64(1) << np.uint64(63)
+        self.shard = OutbackShard(keys, np.zeros(seed_n, np.uint64),
+                                  load_factor=load_factor,
+                                  num_buckets=max(
+                                      1, int(capacity_pages / (4 * load_factor))))
+        self.allocator = PageAllocator(capacity_pages)
+        self._live: dict[int, list[int]] = {}  # seq -> phys pages (teardown)
+
+    def append_page(self, seq_id: int, logical: int) -> int:
+        phys = self.allocator.alloc()
+        k = int(page_key(seq_id, logical))
+        self.shard.insert(k, phys)
+        self._live.setdefault(seq_id, []).append(phys)
+        return phys
+
+    def lookup(self, seq_id: int, logical: int) -> int | None:
+        r = self.shard.get(int(page_key(seq_id, logical)))
+        return None if r.value is None else int(r.value)
+
+    def lookup_batch(self, seq_id: int, num_pages: int, xp=np):
+        """Page map for one sequence — the decode-step fast path."""
+        keys = page_key(seq_id, np.arange(num_pages, dtype=np.uint64))
+        v_lo, v_hi, match = self.shard.get_batch(keys, xp)
+        return xp.asarray(v_lo).astype(xp.int32), match
+
+    def release_sequence(self, seq_id: int) -> int:
+        pages = self._live.pop(seq_id, [])
+        for i, phys in enumerate(pages):
+            self.shard.delete(int(page_key(seq_id, i)))
+            self.allocator.release(phys)
+        return len(pages)
+
+    def cn_bits_per_page(self) -> float:
+        return self.shard.cn_memory_bytes() * 8 / self.allocator.num_pages
+
+
+class CuckooPageTable:
+    """2-choice probing baseline: each key lands in one of two candidate
+    buckets of 4 slots with an 8-bit fingerprint; a reader must inspect both
+    candidates (the paged-attention baseline fetches both pages)."""
+
+    SLOTS = 4
+
+    def __init__(self, capacity_pages: int, *, load_factor: float = 0.7):
+        nb = max(2, int(np.ceil(capacity_pages / (self.SLOTS * load_factor))))
+        self.nb = nb
+        self.fp = np.zeros((nb, self.SLOTS), np.uint8)
+        self.val = np.full((nb, self.SLOTS), -1, np.int64)
+        self.key = np.zeros((nb, self.SLOTS), np.uint64)
+        self.allocator = PageAllocator(capacity_pages)
+        self._live: dict[int, list[int]] = {}
+
+    def _cands(self, k: int):
+        lo, hi = split_u64(np.uint64([k]))
+        b0 = int(hash_range(lo, hi, 0xCC0, self.nb)[0])
+        b1 = int(hash_range(lo, hi, 0xCC1, self.nb)[0])
+        fp = int((hash_range(lo, hi, 0xCCF, 255)[0] + 1))
+        return b0, b1, fp
+
+    def append_page(self, seq_id: int, logical: int) -> int:
+        phys = self.allocator.alloc()
+        k = int(page_key(seq_id, logical))
+        b0, b1, fp = self._cands(k)
+        for b in (b0, b1):
+            free = np.nonzero(self.val[b] < 0)[0]
+            if free.size:
+                s = free[0]
+                self.fp[b, s] = fp
+                self.val[b, s] = phys
+                self.key[b, s] = k
+                self._live.setdefault(seq_id, []).append(phys)
+                return phys
+        raise RuntimeError("cuckoo page table full (no eviction path)")
+
+    def lookup2(self, seq_id: int, logical: int):
+        """Returns ((cand0, cand1), select) — a reader must fetch both."""
+        k = int(page_key(seq_id, logical))
+        b0, b1, fp = self._cands(k)
+        cands, sel = [], 0
+        for ci, b in enumerate((b0, b1)):
+            hit = np.nonzero((self.fp[b] == fp) & (self.val[b] >= 0)
+                             & (self.key[b] == np.uint64(k)))[0]
+            if hit.size:
+                cands.append(int(self.val[b, hit[0]]))
+                sel = ci
+            else:
+                cands.append(0)
+        return (cands[0], cands[1]), sel
+
+    def lookup2_batch(self, seq_id: int, num_pages: int):
+        pm2 = np.zeros((num_pages, 2), np.int32)
+        sel = np.zeros((num_pages,), np.int32)
+        for i in range(num_pages):
+            (c0, c1), s = self.lookup2(seq_id, i)
+            pm2[i] = (c0, c1)
+            sel[i] = s
+        return pm2, sel
+
+    def release_sequence(self, seq_id: int) -> int:
+        pages = self._live.pop(seq_id, [])
+        for i in range(len(pages)):
+            k = page_key(seq_id, i)
+            b0, b1, fp = self._cands(int(k))
+            for b in (b0, b1):
+                hit = np.nonzero(self.key[b] == k)[0]
+                if hit.size:
+                    self.val[b, hit[0]] = -1
+                    self.key[b, hit[0]] = 0
+        for phys in pages:
+            self.allocator.release(phys)
+        return len(pages)
+
+    def table_bits_per_page(self) -> float:
+        return (self.fp.nbytes + self.val.nbytes + self.key.nbytes) * 8 \
+            / self.allocator.num_pages

@@ -1,0 +1,8 @@
+from repro.configs.base import (MLAConfig, MambaConfig, ModelConfig,
+                                MoEConfig, ShapeConfig, TrainConfig,
+                                SHAPES, SMOKE_SHAPES)
+from repro.configs.registry import ARCH_IDS, all_archs, get_config, register
+
+__all__ = ["MLAConfig", "MambaConfig", "ModelConfig", "MoEConfig",
+           "ShapeConfig", "TrainConfig", "SHAPES", "SMOKE_SHAPES",
+           "ARCH_IDS", "all_archs", "get_config", "register"]

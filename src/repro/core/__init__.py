@@ -1,0 +1,31 @@
+"""Outback's decoupled DMPH index — the paper's contribution, in JAX/numpy.
+
+Layering:
+  hashing / bitarray / slots   — shared primitives (np + jnp identical)
+  othello                      — Bloomier-filter bucket locator
+  ludo                         — DMPH build (cuckoo place + seed search)
+  outback                      — one shard: CN/MN split + §4.3 protocols
+  store                        — extendible-hashing directory + §4.4 resize
+  overflow / meter             — MN overflow cache, round-trip accounting
+  baselines                    — RACE / RPC-MICA / RPC-Cluster / RPC-Dummy
+  sharded_kvs                  — the index distributed over a device mesh
+"""
+
+from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.ludo import LudoBuildError, LudoCN, build as ludo_build
+from repro.core.meter import MSG_BYTES, CommMeter
+from repro.core.othello import Othello, OthelloBuildError, build as othello_build
+from repro.core.outback import GetResult, OutbackShard, ShardFullError
+from repro.core.overflow import OverflowCache
+from repro.core.sharded_kvs import (ShardedKVSState, build_sharded,
+                                    make_get_fn, place_state)
+from repro.core.store import OutbackStore, ResizeEvent, make_uniform_keys
+
+__all__ = [
+    "ClusterKVS", "CommMeter", "DummyKVS", "GetResult", "LudoBuildError",
+    "LudoCN", "MSG_BYTES", "MicaKVS", "Othello", "OthelloBuildError",
+    "OutbackShard", "OutbackStore", "OverflowCache", "RaceKVS",
+    "ResizeEvent", "ShardFullError", "ShardedKVSState", "build_sharded",
+    "ludo_build", "make_get_fn", "make_uniform_keys", "othello_build",
+    "place_state",
+]

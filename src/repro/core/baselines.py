@@ -1,0 +1,400 @@
+"""The paper's comparison systems (§5.1), re-built on the same substrate.
+
+All four share the KV heap layout with Outback so that differences come only
+from the *index* and its communication schedule:
+
+* ``RaceKVS``   — RACE hashing [66]: one-sided RDMA. Get = 2 round trips
+  (read both candidate bucket groups, then read the KV block); zero MN
+  compute; CN does the fingerprint selection + full-key check.
+* ``MicaKVS``   — RPC-MICA [20, 29]: two-sided; hopscotch-style table
+  (8-slot buckets, 2-bucket neighborhood). CN sends bucket + 8-bit
+  fingerprint; MN scans up to 16 slots, compares fingerprints, verifies the
+  full key on hit. 1 RT, MN-heavy.
+* ``ClusterKVS`` — RPC-Cluster hashing [11]: two-sided; 4-way associative
+  buckets chained through indirect buckets; 14-bit fingerprints. MN walks the
+  chain. 1 RT, MN-heavy.
+* ``DummyKVS``  — RPC-Dummy (§3): MN returns one fixed memory read — the
+  paper's upper bound for any RDMA-RPC system.
+
+Each exposes the same measurement hooks as ``OutbackShard``:
+``get``/``get_batch`` with meter accounting, plus ``mn_get_batch`` — the
+isolated memory-node work as a pure (jit-able) function, which is what the
+paper's single-MN-thread throughput experiments stress.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hashing import hash64_32, hash_range, split_u64
+from repro.core.meter import CommMeter
+
+_FP8_SEED = 0x0F0F8
+_FP14_SEED = 0x0F14E
+
+
+def _heap_from(keys: np.ndarray, values: np.ndarray):
+    lo, hi = split_u64(keys)
+    vlo, vhi = split_u64(values)
+    return lo.copy(), hi.copy(), vlo.copy(), vhi.copy()
+
+
+class _HeapMixin:
+    def _verify_and_read(self, addr: int, lo: int, hi: int):
+        if addr < 0:
+            return None
+        if int(self.h_klo[addr]) == lo and int(self.h_khi[addr]) == hi:
+            return (int(self.h_vhi[addr]) << 32) | int(self.h_vlo[addr])
+        return None
+
+
+class RaceKVS(_HeapMixin):
+    """One-sided baseline. Index: 2-choice bucket groups of 8 slots, 8-bit
+    fingerprints; the whole group is fetched per READ (64 B payload)."""
+
+    GROUP_SLOTS = 8
+    GROUP_BYTES = 8 * 8  # 8 slots x 8 B (fp + addr packed)
+
+    def __init__(self, keys: np.ndarray, values: np.ndarray, *,
+                 load_factor: float = 0.7, rng_seed: int = 0):
+        keys = np.asarray(keys, dtype=np.uint64)
+        n = keys.shape[0]
+        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        ng = max(2, int(np.ceil(n / (self.GROUP_SLOTS * load_factor))))
+        self.ng = ng
+        self.fp = np.zeros((ng, self.GROUP_SLOTS), dtype=np.uint8)
+        self.addr = np.full((ng, self.GROUP_SLOTS), -1, dtype=np.int64)
+        self.meter = CommMeter()
+        lo, hi = split_u64(keys)
+        g0 = hash_range(lo, hi, 0xACE0, ng).astype(np.int64)
+        g1 = hash_range(lo, hi, 0xACE1, ng).astype(np.int64)
+        fps = self._fp(lo, hi)
+        fill = np.zeros(ng, dtype=np.int64)
+        for i in range(n):  # build is offline; plain 2-choice placement
+            a, b = g0[i], g1[i]
+            g = a if fill[a] <= fill[b] else b
+            if fill[g] >= self.GROUP_SLOTS:
+                g = b if g == a else a
+                if fill[g] >= self.GROUP_SLOTS:
+                    raise RuntimeError("RACE table full; lower load factor")
+            self.fp[g, fill[g]] = fps[i]
+            self.addr[g, fill[g]] = i
+            fill[g] += 1
+
+    @staticmethod
+    def _fp(lo, hi, xp=np):
+        return (hash64_32(lo, hi, _FP8_SEED, xp) & xp.uint32(0xFF)).astype(xp.uint8)
+
+    def get(self, key: int):
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        l32, h32 = np.uint32(lo), np.uint32(hi)
+        g0 = int(hash_range(l32, h32, 0xACE0, self.ng))
+        g1 = int(hash_range(l32, h32, 0xACE1, self.ng))
+        fp = int(self._fp(l32, h32))
+        # RT 1: read both candidate groups (doorbell-batched one-sided READs).
+        self.meter.add(rts=1, req=16, resp=2 * self.GROUP_BYTES,
+                       cn_hash=3, mn_reads=0)
+        val = None
+        cand = [(g, s) for g in (g0, g1) for s in range(self.GROUP_SLOTS)
+                if self.addr[g, s] >= 0 and int(self.fp[g, s]) == fp]
+        self.meter.add(0, cn_cmp=2 * self.GROUP_SLOTS)
+        # RT 2 (+ extra on fp false positives): read the KV block, verify.
+        for g, s in cand:
+            self.meter.add(0, rts=1, req=16, resp=32, cn_cmp=1)
+            val = self._verify_and_read(int(self.addr[g, s]), lo, hi)
+            if val is not None:
+                break
+        if not cand:
+            self.meter.add(0, rts=1, req=16, resp=32)  # miss still pays RT2
+        return val
+
+    def get_batch(self, keys: np.ndarray, xp=np, arrays=None):
+        keys = np.asarray(keys, dtype=np.uint64)
+        lo, hi = split_u64(keys)
+        lo, hi = xp.asarray(lo), xp.asarray(hi)
+        fp_t, addr_t, klo, khi, vlo, vhi = (
+            (xp.asarray(self.fp), xp.asarray(self.addr),
+             xp.asarray(self.h_klo), xp.asarray(self.h_khi),
+             xp.asarray(self.h_vlo), xp.asarray(self.h_vhi))
+            if arrays is None else arrays)
+        g0 = hash_range(lo, hi, 0xACE0, self.ng, xp).astype(xp.int32)
+        g1 = hash_range(lo, hi, 0xACE1, self.ng, xp).astype(xp.int32)
+        fp = self._fp(lo, hi, xp)
+        # CN-side selection over the 16 fetched slots; fingerprint false
+        # positives cost an extra KV-block read (RACE pays an extra RT there).
+        fps = xp.concatenate([fp_t[g0], fp_t[g1]], axis=1)
+        addrs = xp.concatenate([addr_t[g0], addr_t[g1]], axis=1)
+        rows = xp.arange(keys.shape[0])
+        remaining = (fps == fp[:, None]) & (addrs >= 0)
+        match = xp.zeros(keys.shape[0], dtype=bool)
+        best = xp.zeros(keys.shape[0], dtype=xp.int32)
+        for _ in range(3):
+            first = xp.argmax(remaining, axis=1)
+            has = remaining[rows, first]
+            a = xp.where(has, addrs[rows, first], 0).astype(xp.int32)
+            good = has & (klo[a] == lo) & (khi[a] == hi)
+            best = xp.where(good & ~match, a, best)
+            match = match | good
+            if xp is np:
+                remaining = remaining.copy()
+                remaining[rows, first] = False
+            else:
+                remaining = remaining.at[rows, first].set(False)
+        self.meter.add(int(keys.shape[0]), rts=2, req=32,
+                       resp=2 * self.GROUP_BYTES + 32,
+                       cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS + 1)
+        return vlo[best], vhi[best], match
+
+    def mn_get_batch(self, *args, **kw):
+        raise NotImplementedError("RACE is one-sided: no MN compute to time")
+
+    def index_bytes(self) -> int:
+        return self.fp.nbytes + self.addr.nbytes
+
+
+class MicaKVS(_HeapMixin):
+    """Two-sided hopscotch/linear-probing baseline (RPC-MICA).
+
+    Insert walks forward from the home bucket to the first bucket with a free
+    lane (no deletes => the scan invariant holds: a query may stop at the
+    first not-full bucket).  The batched MN kernel scans a fixed window of
+    ``SCAN_BUCKETS`` buckets — its per-op MN compute is what the paper's
+    Fig. 3(b) CPU breakdown attributes to the RPC callback."""
+
+    BUCKET_SLOTS = 8
+    SCAN_BUCKETS = 4  # batched-MN scan window
+
+    def __init__(self, keys: np.ndarray, values: np.ndarray, *,
+                 load_factor: float = 0.7, rng_seed: int = 0):
+        keys = np.asarray(keys, dtype=np.uint64)
+        n = keys.shape[0]
+        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        nbk = max(2, int(np.ceil(n / (self.BUCKET_SLOTS * load_factor))))
+        self.nb = nbk
+        self.fp = np.zeros((nbk, self.BUCKET_SLOTS), dtype=np.uint8)
+        self.addr = np.full((nbk, self.BUCKET_SLOTS), -1, dtype=np.int64)
+        self.meter = CommMeter()
+        lo, hi = split_u64(keys)
+        b = hash_range(lo, hi, 0x111CA, nbk).astype(np.int64)
+        fps = RaceKVS._fp(lo, hi)
+        fill = np.zeros(nbk, dtype=np.int64)
+        for i in range(n):
+            g = int(b[i])
+            for _ in range(nbk):
+                if fill[g] < self.BUCKET_SLOTS:
+                    self.fp[g, fill[g]] = fps[i]
+                    self.addr[g, fill[g]] = i
+                    fill[g] += 1
+                    break
+                g = (g + 1) % nbk
+            else:
+                raise RuntimeError("MICA table full")
+
+    def get(self, key: int):
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        l32, h32 = np.uint32(lo), np.uint32(hi)
+        g = int(hash_range(l32, h32, 0x111CA, self.nb))
+        fp = int(RaceKVS._fp(l32, h32))
+        self.meter.add(rts=1, req=16, resp=32, cn_hash=2)
+        for _ in range(self.nb):  # MN probing walk
+            self.meter.add(0, mn_reads=1, mn_cmp=self.BUCKET_SLOTS)
+            full = True
+            for s in range(self.BUCKET_SLOTS):
+                if self.addr[g, s] < 0:
+                    full = False
+                    continue
+                if int(self.fp[g, s]) == fp:
+                    self.meter.add(0, mn_reads=1, mn_cmp=1)
+                    val = self._verify_and_read(int(self.addr[g, s]), lo, hi)
+                    if val is not None:
+                        return val
+            if not full:
+                return None  # linear-probing early termination
+            g = (g + 1) % self.nb
+        return None
+
+    def mn_get_batch(self, bucket, fp, lo, hi, arrays, xp=np):
+        """The isolated MN work per request batch (what one MN thread runs)."""
+        fp_t, addr_t, klo, khi, vlo, vhi = arrays
+        window_f = [fp_t[(bucket + d) % xp.int32(self.nb)]
+                    for d in range(self.SCAN_BUCKETS)]
+        window_a = [addr_t[(bucket + d) % xp.int32(self.nb)]
+                    for d in range(self.SCAN_BUCKETS)]
+        fps = xp.concatenate(window_f, axis=1)
+        addrs = xp.concatenate(window_a, axis=1)
+        rows = xp.arange(bucket.shape[0])
+        # all fp hits in the window need MN key-verification reads; take the
+        # first verified one (vectorised over up to 3 candidates).
+        hit = (fps == fp[:, None]) & (addrs >= 0)
+        ok = xp.zeros(bucket.shape[0], dtype=bool)
+        best = xp.zeros(bucket.shape[0], dtype=xp.int32)
+        remaining = hit
+        for _ in range(3):
+            first = xp.argmax(remaining, axis=1)
+            has = remaining[rows, first]
+            a = xp.where(has, addrs[rows, first], 0).astype(xp.int32)
+            good = has & (klo[a] == lo) & (khi[a] == hi)
+            best = xp.where(good & ~ok, a, best)
+            ok = ok | good
+            if xp is np:
+                remaining = remaining.copy()
+                remaining[rows, first] = False
+            else:
+                remaining = remaining.at[rows, first].set(False)
+        return vlo[best], vhi[best], ok
+
+    def get_batch(self, keys: np.ndarray, xp=np, arrays=None):
+        keys = np.asarray(keys, dtype=np.uint64)
+        lo, hi = split_u64(keys)
+        lo, hi = xp.asarray(lo), xp.asarray(hi)
+        if arrays is None:
+            arrays = (xp.asarray(self.fp), xp.asarray(self.addr),
+                      xp.asarray(self.h_klo), xp.asarray(self.h_khi),
+                      xp.asarray(self.h_vlo), xp.asarray(self.h_vhi))
+        b = hash_range(lo, hi, 0x111CA, self.nb, xp).astype(xp.int32)
+        fp = RaceKVS._fp(lo, hi, xp)
+        out = self.mn_get_batch(b, fp, lo, hi, arrays, xp)
+        self.meter.add(int(keys.shape[0]), rts=1, req=16, resp=32, cn_hash=2,
+                       mn_reads=self.SCAN_BUCKETS + 1,
+                       mn_cmp=self.SCAN_BUCKETS * self.BUCKET_SLOTS + 1)
+        return out
+
+    def index_bytes(self) -> int:
+        return self.fp.nbytes + self.addr.nbytes
+
+
+class ClusterKVS(_HeapMixin):
+    """Two-sided chained-associative baseline (RPC-Cluster hashing)."""
+
+    BUCKET_SLOTS = 4
+    MAX_CHAIN = 4
+
+    def __init__(self, keys: np.ndarray, values: np.ndarray, *,
+                 load_factor: float = 0.8, rng_seed: int = 0):
+        keys = np.asarray(keys, dtype=np.uint64)
+        n = keys.shape[0]
+        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        nbk = max(2, int(np.ceil(n / (self.BUCKET_SLOTS * load_factor))))
+        cap = nbk + nbk // 2 + 8  # main + indirect bucket arena
+        self.nb = nbk
+        self.fp = np.zeros((cap, self.BUCKET_SLOTS), dtype=np.uint16)  # 14-bit
+        self.addr = np.full((cap, self.BUCKET_SLOTS), -1, dtype=np.int64)
+        self.nxt = np.full(cap, -1, dtype=np.int64)  # chain pointer
+        self.free_top = nbk
+        self.cap = cap
+        self.meter = CommMeter()
+        lo, hi = split_u64(keys)
+        b = hash_range(lo, hi, 0xC1C1, nbk).astype(np.int64)
+        fps = self._fp14(lo, hi)
+        for i in range(n):
+            self._insert_chain(int(b[i]), int(fps[i]), i)
+
+    @staticmethod
+    def _fp14(lo, hi, xp=np):
+        return (hash64_32(lo, hi, _FP14_SEED, xp) & xp.uint32(0x3FFF)).astype(xp.uint16)
+
+    def _insert_chain(self, g: int, fp: int, addr: int) -> None:
+        hops = 0
+        while True:
+            row = self.addr[g]
+            free = np.nonzero(row < 0)[0]
+            if free.size:
+                self.fp[g, free[0]] = fp
+                self.addr[g, free[0]] = addr
+                return
+            if self.nxt[g] < 0:
+                if self.free_top >= self.cap or hops >= self.MAX_CHAIN:
+                    raise RuntimeError("cluster chain arena full")
+                self.nxt[g] = self.free_top
+                self.free_top += 1
+            g = int(self.nxt[g])
+            hops += 1
+
+    def get(self, key: int):
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        l32, h32 = np.uint32(lo), np.uint32(hi)
+        g = int(hash_range(l32, h32, 0xC1C1, self.nb))
+        fp = int(self._fp14(l32, h32))
+        self.meter.add(rts=1, req=16, resp=32, cn_hash=2, mn_hash=0)
+        while g >= 0:  # MN walks the chain
+            self.meter.add(0, mn_reads=1, mn_cmp=self.BUCKET_SLOTS)
+            for s in range(self.BUCKET_SLOTS):
+                if self.addr[g, s] >= 0 and int(self.fp[g, s]) == fp:
+                    self.meter.add(0, mn_reads=1, mn_cmp=1)
+                    val = self._verify_and_read(int(self.addr[g, s]), lo, hi)
+                    if val is not None:
+                        return val
+            g = int(self.nxt[g])
+        return None
+
+    def mn_get_batch(self, bucket, fp, lo, hi, arrays, xp=np):
+        """MN work: walk up to MAX_CHAIN bucket hops, all lanes compared."""
+        fp_t, addr_t, nxt, klo, khi, vlo, vhi = arrays
+        n = bucket.shape[0]
+        rows = xp.arange(n)
+        best_a = xp.zeros(n, dtype=xp.int32)
+        found = xp.zeros(n, dtype=bool)
+        g = bucket
+        for _ in range(self.MAX_CHAIN):
+            live = g >= 0
+            gg = xp.where(live, g, 0).astype(xp.int32)
+            hit = (fp_t[gg] == fp[:, None]) & (addr_t[gg] >= 0) & live[:, None]
+            first = xp.argmax(hit, axis=1)
+            a = xp.where(hit[rows, first], addr_t[gg, first], 0).astype(xp.int32)
+            ok = hit[rows, first] & (klo[a] == lo) & (khi[a] == hi)
+            best_a = xp.where(ok & ~found, a, best_a)
+            found = found | ok
+            g = xp.where(live & ~found, nxt[gg].astype(g.dtype), -1)
+        return vlo[best_a], vhi[best_a], found
+
+    def get_batch(self, keys: np.ndarray, xp=np, arrays=None):
+        keys = np.asarray(keys, dtype=np.uint64)
+        lo, hi = split_u64(keys)
+        lo, hi = xp.asarray(lo), xp.asarray(hi)
+        if arrays is None:
+            arrays = (xp.asarray(self.fp), xp.asarray(self.addr),
+                      xp.asarray(self.nxt),
+                      xp.asarray(self.h_klo), xp.asarray(self.h_khi),
+                      xp.asarray(self.h_vlo), xp.asarray(self.h_vhi))
+        b = hash_range(lo, hi, 0xC1C1, self.nb, xp).astype(xp.int32)
+        fp = self._fp14(lo, hi, xp)
+        out = self.mn_get_batch(b, fp, lo, hi, arrays, xp)
+        # Average chain length ~1.2 at lf 0.8; account the worst-case walk the
+        # vectorised MN kernel actually performs.
+        self.meter.add(int(keys.shape[0]), rts=1, req=16, resp=32, cn_hash=2,
+                       mn_reads=2, mn_cmp=self.BUCKET_SLOTS + 1)
+        return out
+
+    def index_bytes(self) -> int:
+        return self.fp.nbytes + self.addr.nbytes + self.nxt.nbytes
+
+
+class DummyKVS(_HeapMixin):
+    """RPC-Dummy: the MN answers every request with one fixed memory read."""
+
+    def __init__(self, keys: np.ndarray, values: np.ndarray, **_):
+        keys = np.asarray(keys, dtype=np.uint64)
+        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        self.n = keys.shape[0]
+        self.meter = CommMeter()
+
+    def get(self, key: int):
+        self.meter.add(rts=1, req=16, resp=32, mn_reads=1)
+        return (int(self.h_vhi[0]) << 32) | int(self.h_vlo[0])
+
+    def mn_get_batch(self, idx, arrays, xp=np):
+        vlo, vhi = arrays
+        a = (idx % xp.int32(self.n)).astype(xp.int32)
+        return vlo[a], vhi[a], xp.ones(idx.shape[0], dtype=bool)
+
+    def get_batch(self, keys: np.ndarray, xp=np, arrays=None):
+        keys = np.asarray(keys, dtype=np.uint64)
+        if arrays is None:
+            arrays = (xp.asarray(self.h_vlo), xp.asarray(self.h_vhi))
+        idx = xp.asarray((keys % np.uint64(self.n)).astype(np.int32))
+        out = self.mn_get_batch(idx, arrays, xp)
+        self.meter.add(int(keys.shape[0]), rts=1, req=16, resp=32, mn_reads=1)
+        return out
+
+    def index_bytes(self) -> int:
+        return 0

@@ -1,0 +1,43 @@
+"""Packed bit arrays over uint32 words, usable from numpy and jax.
+
+The Othello bucket locator is two plain bit arrays; memory accounting in the
+paper is in bits/key, so we store exactly ``ceil(m/32)`` words and index with
+shift/mask — identical semantics host- and device-side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def alloc_bits(m: int) -> np.ndarray:
+    """Allocate an m-bit array (zeroed), packed into uint32 words."""
+    return np.zeros((max(1, (int(m) + 31) // 32),), dtype=np.uint32)
+
+
+def get_bit(words, idx, xp=np):
+    """Read bit(s) ``idx`` (any integer array) from packed ``words``."""
+    idx = xp.asarray(idx).astype(xp.uint32)
+    w = words[(idx >> xp.uint32(5)).astype(xp.int32)]
+    return (w >> (idx & xp.uint32(31))) & xp.uint32(1)
+
+
+def set_bit(words: np.ndarray, idx: int, value: int) -> None:
+    """Host-only in-place bit write (construction path)."""
+    w, b = int(idx) >> 5, int(idx) & 31
+    if value:
+        words[w] |= np.uint32(1 << b)
+    else:
+        words[w] &= np.uint32(~np.uint32(1 << b))
+
+
+def flip_bits(words: np.ndarray, idxs: np.ndarray) -> None:
+    """Host-only in-place xor-flip of a set of distinct bit positions."""
+    idxs = np.asarray(idxs, dtype=np.int64)
+    w = idxs >> 5
+    b = np.uint32(1) << (idxs & 31).astype(np.uint32)
+    np.bitwise_xor.at(words, w, b)
+
+
+def nbits(words: np.ndarray) -> int:
+    return int(words.shape[0]) * 32

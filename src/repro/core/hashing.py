@@ -1,0 +1,121 @@
+"""Integer hash primitives shared by host (numpy) and device (jax) code.
+
+Keys are 64-bit, represented as two uint32 lanes ``(lo, hi)`` so that every
+device-side computation stays in 32-bit integer arithmetic (TPU-native lane
+width; ``jax_enable_x64`` is never required).  The host build path uses the
+same functions on numpy arrays — both namespaces implement C-style wrapping
+uint32 arithmetic, so host-built tables and device lookups agree bit-for-bit.
+
+All hash functions are murmur3-style finalizer mixes parameterised by a
+32-bit ``seed``.  They are cheap (≈6 int ops), statistically strong enough
+for the hashing schemes in the paper (Othello arrays, cuckoo candidate
+buckets, Ludo slot seeds, fingerprints), and identical across numpy/jax.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Murmur3 / splitmix-derived multiplicative constants.
+_C1 = 0x85EBCA6B
+_C2 = 0xC2B2AE35
+_C3 = 0x27D4EB2F
+_C4 = 0x165667B1
+_GOLDEN = 0x9E3779B9
+
+U32 = np.uint32
+U32_MASK = np.uint32(0xFFFFFFFF)
+
+
+import contextlib
+
+
+def _as_u32(x, xp):
+    return xp.asarray(x).astype(xp.uint32)
+
+
+def _wrapok(xp):
+    """numpy warns on (intended, C-style) uint32 wraparound for 0-d arrays;
+    jax wraps silently.  Silence only the numpy overflow warning locally."""
+    if xp is np:
+        return np.errstate(over="ignore")
+    return contextlib.nullcontext()
+
+
+def fmix32(h, xp=np):
+    """Murmur3 32-bit finalizer. Bijective on uint32."""
+    h = _as_u32(h, xp)
+    with _wrapok(xp):
+        h = h ^ (h >> 16)
+        h = h * xp.uint32(_C1)
+        h = h ^ (h >> 13)
+        h = h * xp.uint32(_C2)
+        h = h ^ (h >> 16)
+    return h
+
+
+def hash64_32(lo, hi, seed, xp=np):
+    """Hash a 64-bit key (two uint32 lanes) + 32-bit seed -> uint32.
+
+    This is the single primitive every index structure in ``repro.core``
+    derives its hash families from (different ``seed`` => independent
+    function, as in the paper's h_A/h_B/h_a/h_b/fingerprint/slot hashes).
+    """
+    lo = _as_u32(lo, xp)
+    hi = _as_u32(hi, xp)
+    seed = _as_u32(seed, xp)
+    with _wrapok(xp):
+        h = seed ^ xp.uint32(_GOLDEN)
+        h = fmix32(h ^ lo, xp) * xp.uint32(_C3)
+        h = fmix32(h ^ hi, xp) * xp.uint32(_C4)
+    return fmix32(h, xp)
+
+
+def hash_range(lo, hi, seed, size, xp=np):
+    """Hash a 64-bit key into ``[0, size)`` (size is a traced/int scalar)."""
+    h = hash64_32(lo, hi, seed, xp)
+    return (h % _as_u32(size, xp)).astype(xp.uint32)
+
+
+def slot_hash(lo, hi, bucket_seed, xp=np):
+    """Ludo in-bucket slot locator: seeded hash of the key -> slot in [0,4).
+
+    ``bucket_seed`` is the paper's 8-bit per-bucket seed found by brute
+    force so the (<=4) keys of a bucket land on distinct slots.
+    """
+    lo = _as_u32(lo, xp)
+    hi = _as_u32(hi, xp)
+    s = _as_u32(bucket_seed, xp)
+    with _wrapok(xp):
+        h = fmix32(lo ^ (s * xp.uint32(_C1)) ^ (hi * xp.uint32(_C2)), xp)
+    return (h & xp.uint32(3)).astype(xp.uint32)
+
+
+def fingerprint6(lo, hi, xp=np):
+    """The 6-bit slot fingerprint from the paper's bucket layout (Fig. 5)."""
+    return (hash64_32(lo, hi, 0xF1A9, xp) >> xp.uint32(13)) & xp.uint32(0x3F)
+
+
+def split_u64(keys: np.ndarray):
+    """Host helper: uint64 keys -> (lo, hi) uint32 lanes."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    lo = (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (keys >> np.uint64(32)).astype(np.uint32)
+    return lo, hi
+
+
+def join_u64(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Host helper: (lo, hi) uint32 lanes -> uint64 keys."""
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(lo, np.uint64)
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Host-only 64-bit mixer (key-set generation, shard assignment)."""
+    x = np.asarray(x, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        x = x + np.uint64(0x9E3779B97F4A7C15)
+        z = x
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+    return z

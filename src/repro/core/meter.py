@@ -1,0 +1,63 @@
+"""Round-trip / bytes / compute accounting for the RDMA-proxy evaluation.
+
+The paper's figures of merit are throughput under constrained memory-node
+CPU, round trips per op, and memory per key.  Without RNICs we report the
+*causes* directly: per-operation round trips, on-wire bytes (64-byte padded
+messages, as in the paper's methodology §5.1), and the split of compute
+between compute-node side and memory-node side (hash ops, fingerprint/key
+comparisons, dependent memory reads).  Every KVS implementation in
+``repro.core`` feeds the same meter so baselines are comparable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+MSG_BYTES = 64  # every RPC message padded to two cache lines (paper §5.1)
+
+
+@dataclasses.dataclass
+class CommMeter:
+    ops: int = 0
+    round_trips: int = 0
+    req_bytes: int = 0
+    resp_bytes: int = 0
+    # memory-node side (the scarce resource in disaggregated memory)
+    mn_hash_ops: int = 0
+    mn_cmp_ops: int = 0  # fingerprint + key comparisons
+    mn_mem_reads: int = 0  # dependent memory accesses (index + heap)
+    mn_mem_writes: int = 0
+    # compute-node side (abundant)
+    cn_hash_ops: int = 0
+    cn_cmp_ops: int = 0
+
+    def add(self, n: int = 1, *, rts: int = 0, req: int = 0, resp: int = 0,
+            mn_hash: int = 0, mn_cmp: int = 0, mn_reads: int = 0,
+            mn_writes: int = 0, cn_hash: int = 0, cn_cmp: int = 0) -> None:
+        """Account ``n`` operations with the given *per-op* costs."""
+        self.ops += n
+        self.round_trips += n * rts
+        self.req_bytes += n * max(req, MSG_BYTES if rts else 0)
+        self.resp_bytes += n * resp
+        self.mn_hash_ops += n * mn_hash
+        self.mn_cmp_ops += n * mn_cmp
+        self.mn_mem_reads += n * mn_reads
+        self.mn_mem_writes += n * mn_writes
+        self.cn_hash_ops += n * cn_hash
+        self.cn_cmp_ops += n * cn_cmp
+
+    def merge(self, other: "CommMeter") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+    def per_op(self) -> dict[str, float]:
+        n = max(1, self.ops)
+        return {f.name: getattr(self, f.name) / n for f in dataclasses.fields(self)
+                if f.name != "ops"}
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+    def snapshot(self) -> dict[str, int]:
+        return dataclasses.asdict(self)

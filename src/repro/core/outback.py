@@ -1,0 +1,394 @@
+"""Outback's decoupled DMPH index — the paper's core contribution (§4).
+
+One ``OutbackShard`` is the paper's (compute-shard, memory-node) pair:
+
+* **CN component** (compute-heavy, memory-light): ``LudoCN`` — Othello bucket
+  locator + per-bucket seeds.  All Get-path compute happens here: 2 Othello
+  hashes + 2 candidate-bucket hashes + 1 seeded slot hash.
+* **MN component** (memory-heavy, compute-light): the DMPH slot table
+  (packed 64-bit slots: cache/fp/len/addr — Fig. 5), the latest seeds array,
+  the overflow cache, and the KV heap.  On the Get fast path the MN performs
+  *zero* hash/compare work: one slot read + one heap read, both pure
+  dereferences — this is the property the whole paper is built on.
+
+Protocols implemented exactly as §4.3:
+  Get (1 RT; CN full-key check; Makeup-Get with ind_slot = -1 on mismatch),
+  Insert (3 cases: free slot / MN re-seed + seed propagation / overflow
+  cache + cache bit), Update/Delete (fingerprint short-circuit + full-key
+  verify, cache-bit redirect to the overflow cache), and the s_slow/s_stop
+  thresholds that arm index resizing (``repro.core.resize``).
+
+Batched device paths (`get_batch`, `update_batch`, `insert_batch` fast case)
+are jit-compatible: CN math is vectorised; MN work is pure gathers — the
+communication seam between the two is where the sharded engine
+(``repro.core.sharded_kvs``) places its single all_to_all pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import ludo, slots
+from repro.core.hashing import fingerprint6, slot_hash, split_u64
+from repro.core.meter import CommMeter
+from repro.core.overflow import OverflowCache
+
+GET_REQ_BYTES = 8  # ind_bucket + ind_slot, packed (padded to MSG_BYTES on wire)
+KV_BLOCK_BYTES = 32  # klen(8)+vlen(8)+key(8)+value(8) — the paper's workloads
+
+
+class ShardFullError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class GetResult:
+    value: int | None
+    round_trips: int
+    makeup: bool
+
+
+class OutbackShard:
+    """One shard: CN view + MN state + the RDMA-RPC protocol between them."""
+
+    def __init__(self, keys: np.ndarray, values: np.ndarray, *,
+                 load_factor: float = 0.95, heap_slack: float = 1.30,
+                 overflow_frac: float = 0.08, rng_seed: int = 0,
+                 num_buckets: int | None = None, oth_ma: int | None = None,
+                 oth_mb: int | None = None, heap_cap: int | None = None):
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = np.asarray(values, dtype=np.uint64)
+        n = keys.shape[0]
+        lo, hi = split_u64(keys)
+        build = ludo.build(lo, hi, load_factor=load_factor, rng_seed=rng_seed,
+                           num_buckets=num_buckets, oth_ma=oth_ma, oth_mb=oth_mb)
+        self.load_factor = load_factor
+        self.cn = build.cn  # CN-cached locator+seeds (the decoupled half)
+        nb = build.cn.num_buckets
+
+        # ---- memory node state ----
+        self.slots_lo = np.zeros((nb, 4), dtype=np.uint32)
+        self.slots_hi = np.zeros((nb, 4), dtype=np.uint32)
+        self.seeds_mn = build.cn.seeds.copy()  # MN keeps the latest seeds
+        if heap_cap is None:
+            heap_cap = max(16, int(np.ceil(n * heap_slack)) + 64)
+        self.heap_klo = np.zeros(heap_cap, dtype=np.uint32)
+        self.heap_khi = np.zeros(heap_cap, dtype=np.uint32)
+        self.heap_vlo = np.zeros(heap_cap, dtype=np.uint32)
+        self.heap_vhi = np.zeros(heap_cap, dtype=np.uint32)
+        self.heap_top = 0
+        self.overflow = OverflowCache(max(64, int(n * overflow_frac)))
+        self.meter = CommMeter()
+        self.frozen = False  # resize in progress: inserts/deletes rejected
+
+        # Bulk-populate from the build assignment.
+        vlo, vhi = split_u64(values)
+        addrs = self._heap_alloc_bulk(lo, hi, vlo, vhi)
+        fp = fingerprint6(lo, hi)
+        s_lo, s_hi = slots.pack(0, fp, KV_BLOCK_BYTES, addrs, 0)
+        placed = build.bucket.astype(np.int64)
+        self.slots_lo[placed, build.slot] = s_lo
+        self.slots_hi[placed, build.slot] = s_hi
+        for i in build.fallback:  # statistically empty (see ludo.py)
+            self.overflow.insert(int(lo[i]), int(hi[i]), int(addrs[i]))
+        self.n_keys = n
+
+    # ------------------------------------------------------------------ heap
+    def _heap_alloc_bulk(self, klo, khi, vlo, vhi) -> np.ndarray:
+        n = klo.shape[0]
+        if self.heap_top + n > self.heap_klo.shape[0]:
+            self._heap_grow(self.heap_top + n)
+        a = np.arange(self.heap_top, self.heap_top + n, dtype=np.uint32)
+        self.heap_klo[a] = klo
+        self.heap_khi[a] = khi
+        self.heap_vlo[a] = vlo
+        self.heap_vhi[a] = vhi
+        self.heap_top += n
+        return a
+
+    def _heap_grow(self, need: int) -> None:
+        cap = max(need, int(self.heap_klo.shape[0] * 1.5) + 64)
+        for name in ("heap_klo", "heap_khi", "heap_vlo", "heap_vhi"):
+            old = getattr(self, name)
+            new = np.zeros(cap, dtype=np.uint32)
+            new[: old.shape[0]] = old
+            setattr(self, name, new)
+
+    def _heap_write(self, lo, hi, vlo, vhi) -> int:
+        if self.heap_top >= self.heap_klo.shape[0]:
+            self._heap_grow(self.heap_top + 1)
+        a = self.heap_top
+        self.heap_klo[a], self.heap_khi[a] = lo, hi
+        self.heap_vlo[a], self.heap_vhi[a] = vlo, vhi
+        self.heap_top += 1
+        return a
+
+    # ------------------------------------------------------------- protocols
+    def get(self, key: int) -> GetResult:
+        """Single-op Get, exactly the paper's Fig. 6(a) message sequence."""
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        # CN: locator math (5 hashes), then ONE round trip carrying 8 bytes.
+        b, s = self.cn.locate(np.uint32([lo]), np.uint32([hi]))
+        b, s = int(b[0]), int(s[0])
+        self.meter.add(rts=1, req=GET_REQ_BYTES, resp=KV_BLOCK_BYTES,
+                       cn_hash=5, mn_reads=2)
+        # MN: pure dereference — slot, then heap block. No compute.
+        f = slots.unpack(self.slots_lo[b, s], self.slots_hi[b, s])
+        if int(f["len"]) != 0:
+            addr = int(f["addr_lo"])
+            k_lo, k_hi = int(self.heap_klo[addr]), int(self.heap_khi[addr])
+            # CN: full-key check on the returned block.
+            self.meter.add(0, cn_cmp=1)
+            if (k_lo, k_hi) == (lo, hi):
+                val = (int(self.heap_vhi[addr]) << 32) | int(self.heap_vlo[addr])
+                return GetResult(val, 1, False)
+        if int(f["cache"]) == 0 and int(f["len"]) != 0:
+            # Mismatch without cache bit: key may still sit in another slot
+            # after an MN re-seed the CN hasn't learned yet -> makeup.
+            pass
+        return self._makeup_get(lo, hi, b)
+
+    def _makeup_get(self, lo: int, hi: int, bucket: int) -> GetResult:
+        """Makeup Get (ind_slot = -1): MN searches overflow cache, then the
+        bucket's (<=4) blocks; returns the fresh seed if it re-seeded."""
+        addr, probes = self.overflow.lookup(lo, hi)
+        self.meter.add(rts=1, req=GET_REQ_BYTES + 8, resp=KV_BLOCK_BYTES,
+                       mn_hash=1, mn_cmp=probes, mn_reads=probes)
+        if addr is not None:
+            val = (int(self.heap_vhi[addr]) << 32) | int(self.heap_vlo[addr])
+            return GetResult(val, 2, True)
+        for s in range(4):
+            f = slots.unpack(self.slots_lo[bucket, s], self.slots_hi[bucket, s])
+            if int(f["len"]) == 0:
+                continue
+            a = int(f["addr_lo"])
+            self.meter.add(0, mn_cmp=1, mn_reads=2)
+            if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
+                # Seed changed MN-side; CN refreshes its copy (paper §4.3.1).
+                self.cn.seeds[bucket] = self.seeds_mn[bucket]
+                val = (int(self.heap_vhi[a]) << 32) | int(self.heap_vlo[a])
+                return GetResult(val, 2, True)
+        return GetResult(None, 2, True)
+
+    def insert(self, key: int, value: int) -> str:
+        """Insert per §4.3.2. Returns the resolution case for accounting:
+        'slot' | 'reseed' | 'overflow' | 'update' | 'frozen'."""
+        if self.frozen:
+            return "frozen"
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        # CN sends ind_bucket + full KV (not ind_slot: MN owns latest seeds).
+        b_arr, _ = self.cn.locate(np.uint32([lo]), np.uint32([hi]))
+        b = int(b_arr[0])
+        self.meter.add(rts=1, req=8 + KV_BLOCK_BYTES, resp=8,
+                       cn_hash=4, mn_hash=1, mn_writes=1)
+        # MN: seeded slot with the *latest* seed.
+        s = int(slot_hash(np.uint32(lo), np.uint32(hi), self.seeds_mn[b]))
+        f = slots.unpack(self.slots_lo[b, s], self.slots_hi[b, s])
+        fp = int(fingerprint6(np.uint32(lo), np.uint32(hi)))
+
+        if int(f["len"]) != 0:
+            # Occupied: fingerprint short-circuit, then full-key compare.
+            self.meter.add(0, mn_cmp=1)
+            if int(f["fp"]) == fp:
+                a = int(f["addr_lo"])
+                self.meter.add(0, mn_cmp=1, mn_reads=1)
+                if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
+                    # Resolves to Update (in place: fixed-size values).
+                    self.heap_vlo[a] = value & 0xFFFFFFFF
+                    self.heap_vhi[a] = (value >> 32) & 0xFFFFFFFF
+                    return "update"
+
+        addr = self._heap_write(lo, hi, value & 0xFFFFFFFF, (value >> 32) & 0xFFFFFFFF)
+
+        if int(f["len"]) == 0:  # case 1: free slot
+            s_lo, s_hi = slots.pack(0, fp, KV_BLOCK_BYTES, addr, 0)
+            self.slots_lo[b, s], self.slots_hi[b, s] = s_lo, s_hi
+            self.n_keys += 1
+            return "slot"
+
+        # case 2: bucket has a free slot somewhere -> MN brute-forces a new
+        # seed over existing keys + the new one, rewrites the bucket layout,
+        # and returns the seed to the CN (which propagates it shard-wide).
+        occ = [t for t in range(4)
+               if int(slots.unpack_len(self.slots_hi[b, t])) != 0]
+        if len(occ) < 4:
+            addrs = [int(self.slots_lo[b, t]) for t in occ]
+            k_lo = np.array([int(self.heap_klo[a]) for a in addrs] + [lo], np.uint32)
+            k_hi = np.array([int(self.heap_khi[a]) for a in addrs] + [hi], np.uint32)
+            self.meter.add(0, mn_reads=len(occ))
+            new_seed = ludo.find_bucket_seed(k_lo, k_hi)
+            # Account the brute force: ~(tries x keys) hashes on the MN.
+            self.meter.add(0, mn_hash=(new_seed + 1 if new_seed is not None
+                                       else ludo.MAX_SEED) * len(k_lo))
+            if new_seed is not None:
+                old_lo = self.slots_lo[b].copy()
+                old_hi = self.slots_hi[b].copy()
+                self.slots_lo[b] = 0
+                self.slots_hi[b] = 0
+                new_slots = slot_hash(k_lo, k_hi, np.uint32(new_seed))
+                for i, t in enumerate(occ):  # move surviving slots
+                    self.slots_lo[b, int(new_slots[i])] = old_lo[t]
+                    self.slots_hi[b, int(new_slots[i])] = old_hi[t]
+                s_lo, s_hi = slots.pack(0, fp, KV_BLOCK_BYTES, addr, 0)
+                self.slots_lo[b, int(new_slots[-1])] = s_lo
+                self.slots_hi[b, int(new_slots[-1])] = s_hi
+                self.seeds_mn[b] = new_seed
+                self.cn.seeds[b] = new_seed  # returned in the RPC response
+                self.n_keys += 1
+                return "reseed"
+
+        # case 3: all four slots taken -> overflow cache + cache bit.
+        ok, probes = self.overflow.insert(lo, hi, addr)
+        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_writes=1)
+        if not ok:
+            raise ShardFullError("overflow cache full: s_stop breached")
+        self.slots_hi[b, s] |= np.uint32(1 << slots.CACHE_SHIFT)
+        self.n_keys += 1
+        return "overflow"
+
+    def update(self, key: int, value: int) -> bool:
+        """Update per §4.3.3 (1 RT; fp + full-key verify on the MN)."""
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        b_arr, s_arr = self.cn.locate(np.uint32([lo]), np.uint32([hi]))
+        b, s = int(b_arr[0]), int(s_arr[0])
+        self.meter.add(rts=1, req=8 + KV_BLOCK_BYTES, resp=8,
+                       cn_hash=5, mn_reads=2, mn_cmp=1)
+        f = slots.unpack(self.slots_lo[b, s], self.slots_hi[b, s])
+        if int(f["len"]) != 0:
+            a = int(f["addr_lo"])
+            if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
+                self.heap_vlo[a] = value & 0xFFFFFFFF
+                self.heap_vhi[a] = (value >> 32) & 0xFFFFFFFF
+                self.meter.add(0, mn_writes=1)
+                return True
+        if int(f["cache"]) == 1:  # redirect to overflow cache
+            addr, probes = self.overflow.lookup(lo, hi)
+            self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_reads=probes)
+            if addr is not None:
+                self.heap_vlo[addr] = value & 0xFFFFFFFF
+                self.heap_vhi[addr] = (value >> 32) & 0xFFFFFFFF
+                self.meter.add(0, mn_writes=1)
+                return True
+        # Stale CN seed: retry against every slot of the bucket (MN-side).
+        for t in range(4):
+            ft = slots.unpack(self.slots_lo[b, t], self.slots_hi[b, t])
+            if int(ft["len"]) == 0 or t == s:
+                continue
+            a = int(ft["addr_lo"])
+            self.meter.add(0, mn_cmp=1, mn_reads=1)
+            if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
+                self.heap_vlo[a] = value & 0xFFFFFFFF
+                self.heap_vhi[a] = (value >> 32) & 0xFFFFFFFF
+                self.meter.add(0, mn_writes=1)
+                self.cn.seeds[b] = self.seeds_mn[b]
+                return True
+        return False
+
+    def delete(self, key: int) -> bool:
+        """Delete per §4.3.3: mark the slot length zero."""
+        if self.frozen:
+            return False
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        b_arr, s_arr = self.cn.locate(np.uint32([lo]), np.uint32([hi]))
+        b, s = int(b_arr[0]), int(s_arr[0])
+        self.meter.add(rts=1, req=8 + 8, resp=8, cn_hash=5,
+                       mn_reads=2, mn_cmp=1)
+        f = slots.unpack(self.slots_lo[b, s], self.slots_hi[b, s])
+        if int(f["len"]) != 0:
+            a = int(f["addr_lo"])
+            if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
+                cache_bit = np.uint32(int(f["cache"]) << slots.CACHE_SHIFT)
+                self.slots_lo[b, s] = 0
+                self.slots_hi[b, s] = cache_bit  # keep cache hint
+                self.meter.add(0, mn_writes=1)
+                self.n_keys -= 1
+                return True
+        ok, probes = self.overflow.delete(lo, hi)
+        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_writes=1 if ok else 0)
+        if ok:
+            self.n_keys -= 1
+        return ok
+
+    # ------------------------------------------------- batched (device) path
+    def cn_arrays(self, xp=np):
+        """The CN-cached arrays, converted for the target namespace."""
+        oth = self.cn.othello
+        return (xp.asarray(oth.words_a), xp.asarray(oth.words_b),
+                xp.asarray(self.cn.seeds))
+
+    def mn_arrays(self, xp=np):
+        return (xp.asarray(self.slots_lo), xp.asarray(self.slots_hi),
+                xp.asarray(self.heap_klo), xp.asarray(self.heap_khi),
+                xp.asarray(self.heap_vlo), xp.asarray(self.heap_vhi))
+
+    def get_batch(self, keys: np.ndarray, xp=np, cn=None, mn=None):
+        """Vectorised Get over a key batch.
+
+        Returns (v_lo, v_hi, match).  Pure function of (cn, mn) arrays — pass
+        device arrays + xp=jnp to run it jitted; mismatches (stale seeds /
+        overflow residents) are resolved by the host makeup path.
+        """
+        lo, hi = split_u64(np.asarray(keys, dtype=np.uint64))
+        lo, hi = xp.asarray(lo), xp.asarray(hi)
+        cn = self.cn_arrays(xp) if cn is None else cn
+        mn = self.mn_arrays(xp) if mn is None else mn
+        out = outback_get_batch(lo, hi, cn, mn, self.cn.othello, self.cn.num_buckets, xp)
+        n = int(keys.shape[0])
+        self.meter.add(n, rts=1, req=GET_REQ_BYTES, resp=KV_BLOCK_BYTES,
+                       cn_hash=5, cn_cmp=1, mn_reads=2)
+        return out
+
+    # ------------------------------------------------------------ accounting
+    def cn_memory_bytes(self) -> int:
+        return self.cn.memory_bytes()
+
+    def mn_index_bytes(self) -> int:
+        return (self.slots_lo.nbytes + self.slots_hi.nbytes
+                + self.seeds_mn.nbytes + self.overflow.cap * 12)
+
+    def dmph_load(self) -> float:
+        return self.n_keys / (self.cn.num_buckets * 4)
+
+    def needs_resize(self) -> bool:
+        """The paper's s_slow trigger: DMPH load 97% or overflow half full."""
+        return self.dmph_load() >= 0.97 or self.overflow.fill_ratio >= 0.5
+
+    def must_stop(self) -> bool:
+        """The paper's s_stop trigger: overflow cache over 90% full."""
+        return self.overflow.fill_ratio >= 0.9
+
+    def live_pairs(self):
+        """All live (keys, values) as uint64 arrays (resize/rebuild path)."""
+        lens = slots.unpack_len(self.slots_hi)
+        b_idx, s_idx = np.nonzero(lens != 0)
+        addrs = self.slots_lo[b_idx, s_idx].astype(np.int64)
+        o_lo, o_hi, o_addr = self.overflow.items()
+        addrs = np.concatenate([addrs, o_addr.astype(np.int64)])
+        keys = (self.heap_khi[addrs].astype(np.uint64) << np.uint64(32)) | \
+            self.heap_klo[addrs].astype(np.uint64)
+        vals = (self.heap_vhi[addrs].astype(np.uint64) << np.uint64(32)) | \
+            self.heap_vlo[addrs].astype(np.uint64)
+        return keys, vals
+
+
+def outback_get_batch(lo, hi, cn, mn, oth, num_buckets, xp=np):
+    """The jit-friendly core of the batched Get (CN math + MN gathers)."""
+    words_a, words_b, seeds = cn
+    slots_lo, slots_hi, h_klo, h_khi, h_vlo, h_vhi = mn
+    # ---- CN compute ----
+    choice = oth.lookup(lo, hi, xp, words_a=words_a, words_b=words_b)
+    b0, b1 = ludo.candidate_buckets(lo, hi, num_buckets, xp)
+    bucket = xp.where(choice.astype(xp.bool_), b1, b0).astype(xp.int32)
+    slot = slot_hash(lo, hi, seeds[bucket], xp).astype(xp.int32)
+    # ---- one round trip; MN side: two dependent gathers, zero compute ----
+    s_lo = slots_lo[bucket, slot]
+    s_hi = slots_hi[bucket, slot]
+    length = slots.unpack_len(s_hi, xp)
+    addr = slots.unpack_addr32(s_lo, s_hi, xp).astype(xp.int32)
+    k_lo, k_hi = h_klo[addr], h_khi[addr]
+    v_lo, v_hi = h_vlo[addr], h_vhi[addr]
+    # ---- CN full-key check ----
+    match = (k_lo == lo) & (k_hi == hi) & (length != 0)
+    return v_lo, v_hi, match

@@ -1,0 +1,100 @@
+"""The memory-node overflow cache (paper §4.2/§4.3.2).
+
+Holds (key -> heap address) pairs that could not be placed in the DMPH table
+without re-seeding more than one bucket or resizing.  The paper uses a plain
+hash table here — served by the MN *only* on the rare Makeup-Get path, so its
+compute cost is accounted to the memory node.
+
+We keep it as an open-addressing (linear probing) table in flat arrays so the
+batched makeup path can run vectorised, plus exact host-side semantics for
+the protocol code.  Capacity is sized from the DMPH table; the two resize
+thresholds (s_slow / s_stop) are evaluated against it by ``OutbackShard``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hashing import hash_range
+
+
+class OverflowCache:
+    _PROBE_LIMIT = 512
+
+    def __init__(self, capacity: int):
+        capacity = max(8, int(capacity))
+        self.cap = capacity
+        self.k_lo = np.zeros(capacity, dtype=np.uint32)
+        self.k_hi = np.zeros(capacity, dtype=np.uint32)
+        self.addr = np.zeros(capacity, dtype=np.uint32)
+        self.used = np.zeros(capacity, dtype=bool)
+        self.size = 0
+        self._seed = 0x0F10C
+
+    # -- host protocol ops (memory-node side) --------------------------------
+    def _probe(self, lo: int, hi: int):
+        """Yield probe positions; returns (pos_of_key | None, first_free | None)."""
+        h = int(hash_range(np.uint32(lo), np.uint32(hi), self._seed, self.cap))
+        free = None
+        for i in range(self._PROBE_LIMIT):
+            p = (h + i) % self.cap
+            if not self.used[p]:
+                if free is None:
+                    free = p
+                return None, free, i + 1
+            if int(self.k_lo[p]) == lo and int(self.k_hi[p]) == hi:
+                return p, free, i + 1
+        return None, free, self._PROBE_LIMIT
+
+    def insert(self, lo: int, hi: int, addr: int) -> tuple[bool, int]:
+        pos, free, probes = self._probe(lo, hi)
+        if pos is not None:  # overwrite
+            self.addr[pos] = addr
+            return True, probes
+        if free is None:
+            return False, probes
+        self.k_lo[free], self.k_hi[free] = lo, hi
+        self.addr[free] = addr
+        self.used[free] = True
+        self.size += 1
+        return True, probes
+
+    def lookup(self, lo: int, hi: int) -> tuple[int | None, int]:
+        pos, _, probes = self._probe(lo, hi)
+        return (int(self.addr[pos]) if pos is not None else None), probes
+
+    def delete(self, lo: int, hi: int) -> tuple[bool, int]:
+        pos, _, probes = self._probe(lo, hi)
+        if pos is None:
+            return False, probes
+        # Backward-shift deletion to keep linear probing correct.
+        self.used[pos] = False
+        self.size -= 1
+        nxt = (pos + 1) % self.cap
+        while self.used[nxt]:
+            lo2, hi2 = int(self.k_lo[nxt]), int(self.k_hi[nxt])
+            home = int(hash_range(np.uint32(lo2), np.uint32(hi2), self._seed, self.cap))
+            if _between(home, pos, nxt, self.cap):
+                self.k_lo[pos], self.k_hi[pos] = self.k_lo[nxt], self.k_hi[nxt]
+                self.addr[pos] = self.addr[nxt]
+                self.used[pos] = True
+                self.used[nxt] = False
+                pos = nxt
+            nxt = (nxt + 1) % self.cap
+        return True, probes
+
+    def items(self):
+        idx = np.nonzero(self.used)[0]
+        return self.k_lo[idx], self.k_hi[idx], self.addr[idx]
+
+    @property
+    def fill_ratio(self) -> float:
+        return self.size / self.cap
+
+
+def _between(home: int, pos: int, cur: int, cap: int) -> bool:
+    """True if ``home`` is in the (cyclic) range (cur, pos] — i.e. the entry at
+    ``cur`` may legally move back to ``pos``."""
+    if pos <= cur:
+        return home <= pos or home > cur
+    return pos >= home > cur

@@ -1,0 +1,67 @@
+"""The packed DMPH slot bitfield from the paper (Fig. 5).
+
+Each bucket is 32 bytes = 4 slots; each slot is 64 bits:
+
+    cache bit (1) | fingerprint (6) | length (9) | data address (48)
+
+We store a slot as two uint32 lanes so device code never needs 64-bit ints:
+
+    hi: [31]=cache  [30:25]=fp  [24:16]=len  [15:0]=addr<47:32>
+    lo: addr<31:0>
+
+``length`` is the KV-block byte length (0 <=> empty slot, exactly the
+paper's emptiness/delete marker); ``address`` is the offset of the block in
+the memory node's KV heap.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+CACHE_SHIFT = 31
+FP_SHIFT = 25
+LEN_SHIFT = 16
+FP_MASK = 0x3F
+LEN_MASK = 0x1FF
+ADDR_HI_MASK = 0xFFFF
+
+
+def pack(cache, fp, length, addr_lo, addr_hi, xp=np):
+    """Pack slot fields -> (lo, hi) uint32 lanes."""
+    u = xp.uint32
+    hi = (
+        (xp.asarray(cache).astype(xp.uint32) << u(CACHE_SHIFT))
+        | ((xp.asarray(fp).astype(xp.uint32) & u(FP_MASK)) << u(FP_SHIFT))
+        | ((xp.asarray(length).astype(xp.uint32) & u(LEN_MASK)) << u(LEN_SHIFT))
+        | (xp.asarray(addr_hi).astype(xp.uint32) & u(ADDR_HI_MASK))
+    )
+    lo = xp.asarray(addr_lo).astype(xp.uint32)
+    return lo, hi
+
+
+def unpack(lo, hi, xp=np):
+    """Unpack (lo, hi) lanes -> dict of slot fields (all uint32)."""
+    u = xp.uint32
+    hi = xp.asarray(hi).astype(xp.uint32)
+    return {
+        "cache": (hi >> u(CACHE_SHIFT)) & u(1),
+        "fp": (hi >> u(FP_SHIFT)) & u(FP_MASK),
+        "len": (hi >> u(LEN_SHIFT)) & u(LEN_MASK),
+        "addr_hi": hi & u(ADDR_HI_MASK),
+        "addr_lo": xp.asarray(lo).astype(xp.uint32),
+    }
+
+
+def unpack_len(hi, xp=np):
+    u = xp.uint32
+    return (xp.asarray(hi).astype(xp.uint32) >> u(LEN_SHIFT)) & u(LEN_MASK)
+
+
+def unpack_addr32(lo, hi, xp=np):
+    """48-bit address truncated to its low 32 bits.
+
+    All experiment heaps are < 2^32 entries; the full 48-bit field is kept in
+    storage (paper layout) but arithmetic stays 32-bit on device.
+    """
+    del hi
+    return xp.asarray(lo).astype(xp.uint32)

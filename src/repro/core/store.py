@@ -1,0 +1,259 @@
+"""Outback store: extendible hashing directory + the resize protocol (§4.4).
+
+The directory is the paper's additional hash layer (Fig. 7): ``2^global_depth``
+entries, each pointing at one DMPH table (an ``OutbackShard``) with a local
+depth.  A key routes by the low ``global_depth`` bits of a dedicated directory
+hash.  When a table's overflow cache crosses ``s_slow`` the store *splits* it:
+
+  1. PRE_RESIZE is broadcast to the shard's compute nodes (we count the
+     messages and the one-sided RC setup exactly as §4.4 describes);
+  2. a new pair of DMPH tables is rebuilt host-side from the live pairs —
+     Get/Update keep being served from the stale table during the rebuild,
+     Insert/Delete get FALSE'd and buffered (replayed after the swap);
+  3. compute nodes fetch the new locator via simulated one-sided reads of the
+     registered area ``(N_cNode, len, GlobalD, seeds, A, B)`` — we account the
+     exact byte volume — and decrement ``N_cNode`` (FAA);
+  4. the stale table is dropped and buffered mutations are replayed.
+
+Wall-clock of step 2 is recorded so the Fig.-17 benchmark can report the
+throughput dip during resizing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.hashing import hash64_32, split_u64, splitmix64
+from repro.core.meter import CommMeter, MSG_BYTES
+from repro.core.outback import OutbackShard
+
+_DIR_SEED = 0xD14EC7
+
+
+@dataclasses.dataclass
+class ResizeEvent:
+    step: int  # op index at which the resize happened
+    table_keys: int
+    rebuild_seconds: float
+    locator_bytes: int  # one-sided fetch volume per compute node
+    buffered_mutations: int
+
+
+class OutbackStore:
+    """Directory of Outback DMPH tables with runtime resizing."""
+
+    def __init__(self, keys: np.ndarray, values: np.ndarray, *,
+                 load_factor: float = 0.85, initial_depth: int = 0,
+                 num_compute_nodes: int = 2, rng_seed: int = 0):
+        self.load_factor = load_factor
+        self.num_compute_nodes = num_compute_nodes
+        self.global_depth = initial_depth
+        self.rng_seed = rng_seed
+        self.meter = CommMeter()
+        self.resize_events: list[ResizeEvent] = []
+        self._op_count = 0
+
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = np.asarray(values, dtype=np.uint64)
+        dir_idx = self._dir_hash(keys) & np.uint64((1 << initial_depth) - 1)
+        self.local_depth: list[int] = []
+        tables: list[OutbackShard] = []
+        for e in range(1 << initial_depth):
+            m = dir_idx == e
+            tables.append(OutbackShard(keys[m], values[m],
+                                       load_factor=load_factor,
+                                       rng_seed=rng_seed + e))
+            self.local_depth.append(initial_depth)
+        # directory[i] -> table index (tables may be shared across entries)
+        self.directory = list(range(1 << initial_depth))
+        self.tables = tables
+        self._buffer: list = []
+        self._open_split = None
+
+    # ------------------------------------------------------------- routing
+    def _dir_hash(self, keys: np.ndarray) -> np.ndarray:
+        lo, hi = split_u64(np.asarray(keys, dtype=np.uint64))
+        return hash64_32(lo, hi, _DIR_SEED).astype(np.uint64)
+
+    def _entry(self, key: int) -> int:
+        h = int(self._dir_hash(np.uint64([key]))[0])
+        return h & ((1 << self.global_depth) - 1)
+
+    def _table(self, key: int) -> OutbackShard:
+        return self.tables[self.directory[self._entry(key)]]
+
+    # ------------------------------------------------------------ data ops
+    def get(self, key: int):
+        self._op_count += 1
+        return self._table(key).get(key)
+
+    def update(self, key: int, value: int) -> bool:
+        self._op_count += 1
+        return self._table(key).update(key, value)
+
+    def delete(self, key: int) -> bool:
+        self._op_count += 1
+        t = self._table(key)
+        if t.frozen:
+            self._buffer.append(("delete", key, 0))
+            return False
+        return t.delete(key)
+
+    def insert(self, key: int, value: int) -> str:
+        self._op_count += 1
+        t = self._table(key)
+        if t.frozen:
+            # Paper: FALSE status; MN buffers and replays post-resize.
+            self._buffer.append(("insert", key, value))
+            self.meter.add(rts=1, req=MSG_BYTES, resp=8)
+            return "frozen"
+        case = t.insert(key, value)
+        if t.needs_resize() and self._open_split is None:
+            self._split(self.directory[self._entry(key)])
+        return case
+
+    def get_batch(self, keys: np.ndarray, xp=np):
+        """Vectorised Get across the directory (single-table fast path)."""
+        self._op_count += len(keys)
+        if len(self.tables) == 1:
+            return self.tables[0].get_batch(keys, xp)
+        keys = np.asarray(keys, dtype=np.uint64)
+        idx = (self._dir_hash(keys) & np.uint64((1 << self.global_depth) - 1)).astype(np.int64)
+        v_lo = np.zeros(keys.shape[0], np.uint32)
+        v_hi = np.zeros(keys.shape[0], np.uint32)
+        match = np.zeros(keys.shape[0], bool)
+        tbl = np.asarray([self.directory[i] for i in idx], dtype=np.int64)
+        for t in np.unique(tbl):
+            m = tbl == t
+            lo, hi, mt = self.tables[int(t)].get_batch(keys[m], xp)
+            v_lo[m], v_hi[m], match[m] = np.asarray(lo), np.asarray(hi), np.asarray(mt)
+        return v_lo, v_hi, match
+
+    # -------------------------------------------------------------- resize
+    def _split(self, t_idx: int) -> None:
+        h = self.begin_split(t_idx)
+        h.build()
+        h.finish()
+
+    def begin_split(self, t_idx: int) -> "SplitHandle":
+        """Freeze the table and open a resize window (PRE_RESIZE phase).
+
+        Benchmarks interleave data ops between ``begin_split`` and
+        ``finish`` to reproduce the paper's throughput-during-resize study
+        (Fig. 17): Gets/Updates keep hitting the stale table, Inserts/Deletes
+        are FALSE'd and buffered.
+        """
+        if getattr(self, "_open_split", None) is not None:
+            raise RuntimeError("a resize is already in flight")
+        depth = self.local_depth[t_idx]
+        if depth == self.global_depth:
+            # Double the directory (paper Fig. 7, GlobalD += 1).
+            self.directory = self.directory + list(self.directory)
+            self.global_depth += 1
+        # PRE_RESIZE broadcast + RC setup with every compute node.
+        self.meter.add(self.num_compute_nodes, rts=1, req=MSG_BYTES, resp=8)
+        self.tables[t_idx].frozen = True
+        self._buffer = []
+        h = SplitHandle(self, t_idx, depth)
+        self._open_split = h
+        return h
+
+    def _finish_split(self, h: "SplitHandle") -> None:
+        t_idx, depth = h.t_idx, h.depth
+        # One-sided locator fetch by every compute node (§4.4): polls of
+        # (N_cNode, len), the bulk read, and the FAA decrement.
+        per_cn = 0
+        for t in (h.t_lo, h.t_hi):
+            oth = t.cn.othello
+            per_cn += (8 + 8 + 8 + t.cn.seeds.nbytes
+                       + oth.words_a.nbytes + oth.words_b.nbytes)
+        self.meter.add(self.num_compute_nodes, rts=3, req=16, resp=per_cn)
+
+        # Swap directory pointers.
+        self.tables.append(h.t_hi)
+        hi_idx = len(self.tables) - 1
+        self.tables[t_idx] = h.t_lo
+        self.local_depth[t_idx] = depth + 1
+        self.local_depth.append(depth + 1)
+        for e in range(len(self.directory)):
+            if self.directory[e] == t_idx and (e >> depth) & 1:
+                self.directory[e] = hi_idx
+
+        buffered, self._buffer = self._buffer, []
+        self._open_split = None
+        self.resize_events.append(ResizeEvent(
+            self._op_count, h.n_live, h.rebuild_seconds, per_cn, len(buffered)))
+        for op, k, v in buffered:  # replay on the fresh tables
+            if op == "insert":
+                self.insert(k, v)
+            else:
+                self.delete(k)
+
+    # --------------------------------------------------------- accounting
+    @property
+    def n_keys(self) -> int:
+        seen, total = set(), 0
+        for t in self.tables:
+            if id(t) not in seen:
+                seen.add(id(t))
+                total += t.n_keys
+        return total
+
+    def cn_memory_bytes(self) -> int:
+        seen, total = set(), 0
+        for t in self.tables:
+            if id(t) not in seen:
+                seen.add(id(t))
+                total += t.cn_memory_bytes()
+        return total
+
+    def meter_total(self) -> CommMeter:
+        m = CommMeter()
+        m.merge(self.meter)
+        seen = set()
+        for t in self.tables:
+            if id(t) not in seen:
+                seen.add(id(t))
+                m.merge(t.meter)
+        return m
+
+
+class SplitHandle:
+    """An in-flight table split: freeze -> build -> finish (swap + replay)."""
+
+    def __init__(self, store: OutbackStore, t_idx: int, depth: int):
+        self.store, self.t_idx, self.depth = store, t_idx, depth
+        self.t_lo = self.t_hi = None
+        self.n_live = 0
+        self.rebuild_seconds = 0.0
+
+    def build(self) -> None:
+        """Rebuild the two successor DMPH tables (the slow, host-side part —
+        the paper measures ~3 s for 20M keys on a single MN thread)."""
+        store, depth = self.store, self.depth
+        table = store.tables[self.t_idx]
+        t0 = time.perf_counter()
+        keys, vals = table.live_pairs()
+        side = (store._dir_hash(keys) >> np.uint64(depth)) & np.uint64(1) != 0
+        self.t_lo = OutbackShard(keys[~side], vals[~side],
+                                 load_factor=store.load_factor,
+                                 rng_seed=store.rng_seed + 101 * len(store.tables))
+        self.t_hi = OutbackShard(keys[side], vals[side],
+                                 load_factor=store.load_factor,
+                                 rng_seed=store.rng_seed + 101 * len(store.tables) + 1)
+        self.n_live = int(keys.shape[0])
+        self.rebuild_seconds = time.perf_counter() - t0
+
+    def finish(self) -> None:
+        self.store._finish_split(self)
+
+
+def make_uniform_keys(n: int, seed: int = 1) -> np.ndarray:
+    """Deterministic unique 64-bit key set (FB/OSM-style random IDs)."""
+    keys = splitmix64(np.arange(1, int(n * 1.05) + 16, dtype=np.uint64) + np.uint64(seed << 32))
+    keys = np.unique(keys)[:n]
+    assert keys.shape[0] == n
+    return keys

@@ -1,0 +1,189 @@
+"""Pallas TPU kernel: flash-decode over an Outback/Ludo-paged KV pool.
+
+This is the paper's insight transplanted to the TPU memory system
+(DESIGN.md §2): because the page table is a *perfect-hash* index, the
+physical page of every logical page is known **before** the kernel launches
+— no probing, no fingerprint compare, no second fetch.  That is exactly the
+precondition for Pallas **scalar prefetch**: the page map rides in SMEM, the
+BlockSpec ``index_map`` reads it, and the DMA engine streams precisely the
+owned pages HBM->VMEM while the VPU/MXU computes the previous block.  The
+"memory node" here is the HBM page pool + DMA sequencer: computation-free,
+like Outback's MN.
+
+``cuckoo_paged_attention_kernel`` is the probing baseline (RACE-analogue):
+a 2-choice page table must fetch BOTH candidate pages and select in-kernel —
+2x index-side DMA bytes and a wasted select, quantifying at kernel level the
+same communication saving the paper measures at network level.
+
+Layouts (decode, one sequence; batch is mapped outside):
+  q:        (n_kv, group, d)   GQA: query heads grouped under their KV head
+  k_pool:   (P, ps, n_kv, d)   physical page pool (pages on the leading dim
+                               so one grid step == one page DMA)
+  v_pool:   (P, ps, n_kv, d)
+  page_map: (L,) int32         scalar-prefetched; L = ceil(seq/ps)
+  lens:     (1,) int32         valid token count (masks the last page)
+Outputs are flash partials (o, m, l) so sequence-parallel decode can combine
+across devices with a single collective phase (ref.combine_flash_partials).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_step(q, k, v, page_pos, ps, seq_len, m_ref, l_ref, acc_ref, valid):
+    """One page of online softmax. q (n_kv, g, d); k,v (ps, n_kv, d)."""
+    d = q.shape[-1]
+    kt = k.transpose(1, 0, 2).astype(jnp.float32)  # (n_kv, ps, d)
+    vt = v.transpose(1, 0, 2).astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), kt,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) / jnp.sqrt(float(d))  # (n_kv,g,ps)
+    pos = page_pos * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where((pos < seq_len) & valid, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, vt, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)  # (n_kv, g, d)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+
+def _ludo_kernel(pm_ref, len_ref, q_ref, k_ref, v_ref,
+                 o_ref, m_out_ref, l_out_ref, m_ref, l_ref, acc_ref, *, ps):
+    i = pl.program_id(0)
+    n_pages = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _flash_step(q_ref[...], k_ref[0], v_ref[0], i, ps, len_ref[0],
+                m_ref, l_ref, acc_ref, valid=True)
+
+    @pl.when(i == n_pages - 1)
+    def _fin():
+        l = l_ref[...]
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+                      ).astype(o_ref.dtype)
+        m_out_ref[...] = m_ref[...]
+        l_out_ref[...] = l
+
+
+def paged_attention_kernel(q, k_pool, v_pool, page_map, lens, *,
+                           interpret: bool = True):
+    """Ludo-paged flash decode. Returns (o, m, l) flash partials."""
+    n_kv, g, d = q.shape
+    P, ps = k_pool.shape[0], k_pool.shape[1]
+    L = page_map.shape[0]
+    kern = functools.partial(_ludo_kernel, ps=ps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((n_kv, g, d), lambda i, pm, ln: (0, 0, 0)),
+            # THE Outback trick: the perfect-hash page map drives the DMA.
+            pl.BlockSpec((1, ps, n_kv, d), lambda i, pm, ln: (pm[i], 0, 0, 0)),
+            pl.BlockSpec((1, ps, n_kv, d), lambda i, pm, ln: (pm[i], 0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((n_kv, g, d), lambda i, pm, ln: (0, 0, 0)),
+            pl.BlockSpec((n_kv, g), lambda i, pm, ln: (0, 0)),
+            pl.BlockSpec((n_kv, g), lambda i, pm, ln: (0, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, g), jnp.float32),
+            pltpu.VMEM((n_kv, g), jnp.float32),
+            pltpu.VMEM((n_kv, g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((n_kv, g, d), jnp.float32),
+                   jax.ShapeDtypeStruct((n_kv, g), jnp.float32),
+                   jax.ShapeDtypeStruct((n_kv, g), jnp.float32)),
+        interpret=interpret,
+    )(page_map, lens, q, k_pool, v_pool)
+
+
+def _cuckoo_kernel(pm2_ref, sel_ref, len_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_out_ref, l_out_ref, m_ref, l_ref, acc_ref, *, ps):
+    """Baseline: grid is 2x pages; both candidates stream in, only the
+    selected one contributes.  The wasted half is real DMA traffic."""
+    i = pl.program_id(0)
+    n_steps = pl.num_programs(0)
+    page = i // 2
+    cand = i % 2
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = sel_ref[page] == cand
+    _flash_step(q_ref[...], k_ref[0], v_ref[0], page, ps, len_ref[0],
+                m_ref, l_ref, acc_ref, valid=valid)
+
+    @pl.when(i == n_steps - 1)
+    def _fin():
+        l = l_ref[...]
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+                      ).astype(o_ref.dtype)
+        m_out_ref[...] = m_ref[...]
+        l_out_ref[...] = l
+
+
+def cuckoo_paged_attention_kernel(q, k_pool, v_pool, page_map2, select, lens,
+                                  *, interpret: bool = True):
+    """2-choice paged baseline: page_map2 (L, 2) candidates, select (L,) in
+    {0,1} marks the true page (in a real cuckoo table the kernel would learn
+    this only after comparing fetched tags — it must fetch both)."""
+    n_kv, g, d = q.shape
+    ps = k_pool.shape[1]
+    L = page_map2.shape[0]
+    kern = functools.partial(_cuckoo_kernel, ps=ps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(2 * L,),
+        in_specs=[
+            pl.BlockSpec((n_kv, g, d), lambda i, pm, sel, ln: (0, 0, 0)),
+            pl.BlockSpec((1, ps, n_kv, d),
+                         lambda i, pm, sel, ln: (pm[i // 2, i % 2], 0, 0, 0)),
+            pl.BlockSpec((1, ps, n_kv, d),
+                         lambda i, pm, sel, ln: (pm[i // 2, i % 2], 0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((n_kv, g, d), lambda i, pm, sel, ln: (0, 0, 0)),
+            pl.BlockSpec((n_kv, g), lambda i, pm, sel, ln: (0, 0)),
+            pl.BlockSpec((n_kv, g), lambda i, pm, sel, ln: (0, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, g), jnp.float32),
+            pltpu.VMEM((n_kv, g), jnp.float32),
+            pltpu.VMEM((n_kv, g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((n_kv, g, d), jnp.float32),
+                   jax.ShapeDtypeStruct((n_kv, g), jnp.float32),
+                   jax.ShapeDtypeStruct((n_kv, g), jnp.float32)),
+        interpret=interpret,
+    )(page_map2, select, lens, q, k_pool, v_pool)

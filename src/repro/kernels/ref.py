@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: each kernel's test sweeps shapes/dtypes and
+asserts allclose against these functions.  They are also what the model code
+uses on non-TPU backends (and inside the 512-device dry-run lowering, where
+emulated kernels would only bloat the HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ludo, slots
+from repro.core.hashing import hash64_32, slot_hash
+
+
+def ludo_lookup_ref(key_lo, key_hi, words_a, words_b, seeds,
+                    *, ma, mb, nb, seed_a, seed_b):
+    """Batched CN locator math: keys -> (bucket, slot). uint32 in, int32 out."""
+    ia = hash64_32(key_lo, key_hi, seed_a, jnp) % jnp.uint32(ma)
+    ib = hash64_32(key_lo, key_hi, seed_b, jnp) % jnp.uint32(mb)
+    bit_a = (words_a[(ia >> jnp.uint32(5)).astype(jnp.int32)]
+             >> (ia & jnp.uint32(31))) & jnp.uint32(1)
+    bit_b = (words_b[(ib >> jnp.uint32(5)).astype(jnp.int32)]
+             >> (ib & jnp.uint32(31))) & jnp.uint32(1)
+    choice = (bit_a ^ bit_b).astype(jnp.bool_)
+    b0, b1 = ludo.candidate_buckets(key_lo, key_hi, nb, jnp)
+    bucket = jnp.where(choice, b1, b0).astype(jnp.int32)
+    slot = slot_hash(key_lo, key_hi,
+                     seeds[bucket].astype(jnp.uint32), jnp).astype(jnp.int32)
+    return bucket, slot
+
+
+def slot_unpack_ref(s_lo, s_hi):
+    """Packed 64-bit DMPH slots -> (cache, fp, length, addr) int32/uint32."""
+    f = slots.unpack(s_lo, s_hi, jnp)
+    return (f["cache"].astype(jnp.int32), f["fp"].astype(jnp.int32),
+            f["len"].astype(jnp.int32), f["addr_lo"])
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_map, seq_len):
+    """Flash-decode oracle over a paged KV pool (one sequence).
+
+    q:        (n_kv, group, d)     — GQA query heads grouped per KV head
+    k_pool:   (P, ps, n_kv, d)     — physical page pool
+    v_pool:   (P, ps, n_kv, d)
+    page_map: (L,) int32           — logical page -> physical page (from the
+                                     Ludo locator; the kernel never probes)
+    seq_len:  ()  int32            — valid tokens
+    Returns (o, m, l): the flash partials so cross-device sequence
+    parallelism can combine them ((n_kv, g, d), (n_kv, g), (n_kv, g)).
+    """
+    L = page_map.shape[0]
+    ps = k_pool.shape[1]
+    k = k_pool[page_map]  # (L, ps, n_kv, d)
+    v = v_pool[page_map]
+    n_kv, g, d = q.shape
+    k = k.reshape(L * ps, n_kv, d).transpose(1, 0, 2)  # (n_kv, S, d)
+    v = v.reshape(L * ps, n_kv, d).transpose(1, 0, 2)
+    scores = jnp.einsum("hgd,hsd->hgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    pos = jnp.arange(L * ps)
+    scores = jnp.where(pos[None, None, :] < seq_len, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)
+    p = jnp.exp(scores - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("hgs,hsd->hgd", p, v.astype(jnp.float32))
+    o = o / l[..., None]
+    return o, m, l
+
+
+def combine_flash_partials(o_parts, m_parts, l_parts):
+    """Combine flash partials from independent KV ranges (the one-phase
+    cross-device reduction used by sequence-parallel decode).
+
+    Each ``o`` is normalized by its own ``l``; re-weight by
+    ``exp(m - m_max) * l`` and renormalize by the global denominator.
+    """
+    m_max = jnp.max(jnp.stack(m_parts), axis=0)  # (n_kv, g)
+    num, den = 0.0, 0.0
+    for o, m, l in zip(o_parts, m_parts, l_parts):
+        w = jnp.exp(m - m_max) * l
+        num = num + o * w[..., None]
+        den = den + w
+    return num / den[..., None]
+
+
+def fused_norm_matmul_ref(x, gamma, w, *, eps=1e-6):
+    """RMSNorm(x) @ w — the dense-arch QKV/MLP entry hot spot."""
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((nrm * gamma.astype(jnp.float32)) @ w.astype(jnp.float32)).astype(x.dtype)

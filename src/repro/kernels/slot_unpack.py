@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: vectorized unpack of the 64-bit DMPH slot bitfield.
+
+The MN-side "work" of an Outback Get: shift/mask a fetched slot word into
+{cache, fp, len, addr}.  Pure VPU integer ops — the point of the kernel is to
+demonstrate (and measure) that the memory-node side of the paper's index is
+computation-free even at kernel granularity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.slots import CACHE_SHIFT, FP_MASK, FP_SHIFT, LEN_MASK, LEN_SHIFT
+
+DEFAULT_BLOCK = 2048
+
+
+def _kernel(lo_ref, hi_ref, cache_ref, fp_ref, len_ref, addr_ref):
+    hi = hi_ref[...]
+    u = jnp.uint32
+    cache_ref[...] = ((hi >> u(CACHE_SHIFT)) & u(1)).astype(jnp.int32)
+    fp_ref[...] = ((hi >> u(FP_SHIFT)) & u(FP_MASK)).astype(jnp.int32)
+    len_ref[...] = ((hi >> u(LEN_SHIFT)) & u(LEN_MASK)).astype(jnp.int32)
+    # addr_hi (bits 15:0 of `hi`) is zero in all experiment heaps (< 2^32
+    # blocks), so the 48-bit address is just `lo`.
+    addr_ref[...] = lo_ref[...]
+
+
+def slot_unpack_kernel(s_lo, s_hi, *, block: int = DEFAULT_BLOCK,
+                       interpret: bool = True):
+    B = s_lo.shape[0]
+    assert B % block == 0, (B, block)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // block,),
+        in_specs=[spec, spec],
+        out_specs=(spec, spec, spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((B,), jnp.int32),
+                   jax.ShapeDtypeStruct((B,), jnp.int32),
+                   jax.ShapeDtypeStruct((B,), jnp.int32),
+                   jax.ShapeDtypeStruct((B,), jnp.uint32)),
+        interpret=interpret,
+    )(s_lo, s_hi)

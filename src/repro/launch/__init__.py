@@ -1,0 +1,7 @@
+# NOTE: never import repro.launch.dryrun from here — it sets XLA_FLAGS for
+# 512 placeholder devices at import time and must only run as __main__.
+from repro.launch.mesh import (make_debug_mesh, make_production_mesh,
+                               shardings_for, tree_expand_pod)
+
+__all__ = ["make_debug_mesh", "make_production_mesh", "shardings_for",
+           "tree_expand_pod"]

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and the production meshes need 512
+placeholder CPU devices (2 pods x 16 x 16).  Smoke tests and benches import
+everything EXCEPT this module and see 1 device.
+
+Per cell this driver:
+  1. builds the full config + abstract inputs (ShapeDtypeStructs — nothing
+     is allocated);
+  2. ``jit(step, in_shardings=...).lower(...).compile()`` on the production
+     mesh — success proves the sharding/collective program is coherent;
+  3. records ``memory_analysis`` (fits-per-device evidence),
+     ``cost_analysis`` FLOPs/bytes, and the §Roofline three terms parsed
+     from the optimized HLO, into experiments/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_archs, get_config
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.launch import roofline as roof
+from repro.launch.mesh import make_production_mesh, shardings_for
+from repro.models import lm as lm_mod
+from repro.models.lm import LM, Leaf
+from repro.train import abstract_state, make_train_step, state_pspecs
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("long_500k needs sub-quadratic attention; "
+                f"{cfg.name} is pure full-attention (DESIGN.md §4)")
+    return None
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the input batch."""
+    B = shape.global_batch
+    S = shape.seq_len
+    bspec = "data" if B % 16 == 0 else None
+    sds, specs = {}, {}
+    if shape.kind in ("train", "prefill"):
+        S_text = S - cfg.vision_tokens if cfg.vision_tokens else S
+        sds["tokens"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+        specs["tokens"] = P(bspec, None)
+        if shape.kind == "train":
+            sds["labels"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+            specs["labels"] = P(bspec, None)
+        if cfg.vision_tokens:
+            sds["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.d_model), jnp.float32)
+            specs["patches"] = P(bspec, None, None)
+        if cfg.is_encdec:
+            sds["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+            specs["frames"] = P(bspec, None, None)
+    else:  # decode: one token per sequence
+        sds["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        specs["tokens"] = P(bspec, None)
+    return sds, specs
+
+
+def _cache_specs(model: LM, shape: ShapeConfig):
+    cfg = model.cfg
+    max_seq = shape.seq_len
+    if cfg.attn_kind == "swa" and cfg.window:
+        max_seq = min(max_seq, cfg.window)  # rolling-window cache
+    tmpl = model.cache_template(shape.global_batch, max_seq)
+    is_leaf = lambda x: isinstance(x, Leaf)
+    sds = jax.tree.map(
+        lambda lf: jax.ShapeDtypeStruct(lf.shape, lm_mod._np_dtype(lf.dtype)),
+        tmpl, is_leaf=is_leaf)
+    specs = jax.tree.map(lambda lf: lf.spec, tmpl, is_leaf=is_leaf)
+    return sds, specs
+
+
+VARIANTS = {
+    "padheads": {"pad_attn_heads": True},
+    "seqcache": {"cache_seq_shard": True},
+    "moegather": {"moe_gather_decode": True},
+}
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str | None = None):
+    """Returns (fn, abstract_args, cfg, shape) for the cell."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if variant:
+        for v in variant.split("+"):
+            cfg = _dc.replace(cfg, **VARIANTS[v])
+    shape = SHAPES[shape_name]
+    model = LM(cfg, mesh=mesh)
+    batch_sds, batch_specs = _batch_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(remat="block")
+        step = make_train_step(model, tcfg, mesh=mesh)
+        st_sds = abstract_state(model.abstract())
+        dsz = mesh.shape["data"] * mesh.shape.get("pod", 1)
+        st_specs = state_pspecs(model.pspecs(), model.abstract(),
+                                data_size=dsz, zero1=True)
+        in_shard = (shardings_for(mesh, st_specs),
+                    shardings_for(mesh, batch_specs))
+        out_shard = (shardings_for(mesh, st_specs), None)
+        fn = jax.jit(step, in_shardings=in_shard, out_shardings=out_shard,
+                     donate_argnums=(0,))
+        return fn, (st_sds, batch_sds), cfg, shape
+
+    params_sds = model.abstract()
+    params_shard = shardings_for(mesh, model.pspecs())
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch)
+        fn = jax.jit(prefill_fn, in_shardings=(params_shard,
+                                               shardings_for(mesh, batch_specs)))
+        return fn, (params_sds, batch_sds), cfg, shape
+
+    cache_sds, cache_specs = _cache_specs(model, shape)
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(params_shard,
+                               shardings_for(mesh, batch_specs["tokens"]),
+                               shardings_for(mesh, cache_specs)),
+                 donate_argnums=(2,))
+    return fn, (params_sds, batch_sds["tokens"], cache_sds), cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             variant: str | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = cell_skip_reason(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips}
+    if reason:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        return rec
+
+    t0 = time.time()
+    fn, args, cfg, shape = build_cell(arch, shape_name, mesh, variant)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        if mem is not None and hasattr(mem, k):
+            mem_rec[k] = int(getattr(mem, k))
+    # independent per-device argument estimate (full-sharding upper bound)
+    mem_rec["arguments_per_device_estimate"] = _arg_bytes_per_device(args, chips)
+
+    tmpl = lm_mod.param_template(cfg)
+    n_dense, n_expert = roof.count_params_split(tmpl, Leaf)
+    mf = roof.model_flops_for(cfg, shape, n_dense, n_expert)
+    hlo = compiled.as_text()
+    rl = roof.analyse(compiled, chips=chips, model_flops=mf, hlo_text=hlo)
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_rec,
+        "roofline": rl.to_dict(),
+        "n_params_dense": n_dense,
+        "n_params_expert": n_expert,
+        "hlo_bytes": len(hlo),
+    })
+    return rec
+
+
+def _arg_bytes_per_device(args, chips: int) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(args):
+        total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total // chips  # upper bound assumes full sharding
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="'+'-joined perf variants: " + ",".join(VARIANTS))
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    cells = []
+    archs = all_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    for a, s, mp in cells:
+        tag = f"{a}__{s}__{'pod2' if mp else 'pod1'}"
+        if args.variant:
+            tag += "__" + args.variant.replace("+", "_")
+        out = os.path.join(OUT_DIR, tag + ".json")
+        if args.skip_done and os.path.exists(out):
+            print(f"[dryrun] {tag}: cached")
+            continue
+        print(f"[dryrun] {tag}: running...", flush=True)
+        try:
+            rec = run_cell(a, s, multi_pod=mp, variant=args.variant)
+        except Exception as e:  # a failing cell is a bug — record it loudly
+            rec = {"arch": a, "shape": s, "mesh": "pod2" if mp else "pod1",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" dominant={r['dominant']}"
+                     f" step={r['step_time_s']:.4f}s mfu={r['mfu']:.3f}"
+                     f" compile={rec['compile_s']}s")
+        print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Production meshes + sharding-spec utilities.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def expand_pod(spec: P) -> P:
+    """Rewrite a ('data','model') PartitionSpec for a ('pod','data','model')
+    mesh: every 'data' entry becomes ('pod','data') so the batch dims span
+    both pods."""
+    out = []
+    for entry in spec:
+        if entry == "data":
+            out.append(("pod", "data"))
+        elif isinstance(entry, tuple) and "data" in entry:
+            flat = []
+            for e in entry:
+                flat.extend(["pod", "data"] if e == "data" else [e])
+            out.append(tuple(flat))
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def tree_expand_pod(spec_tree):
+    return jax.tree.map(
+        lambda s: expand_pod(s) if isinstance(s, P) else s, spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_for(mesh: Mesh, spec_tree):
+    multi = "pod" in mesh.axis_names
+    tree = tree_expand_pod(spec_tree) if multi else spec_tree
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,202 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), TPU v5e-class constants:
+
+    compute_s    = HLO_FLOPs        / (chips * 197e12  FLOP/s bf16)
+    memory_s     = HLO_bytes        / (chips * 819e9   B/s HBM)
+    collective_s = collective_bytes / (chips * 50e9    B/s/link ICI)
+
+``cost_analysis`` flops/bytes come from the compiled executable;
+collective_bytes is NOT in cost_analysis, so we parse the optimized HLO and
+sum output-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (tuple outputs included).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), N from the param
+template (embeddings excluded), D = tokens per step; the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.*?)\s*"
+    r"(all-reduce|all-gather|all-to-all|reduce-scatter|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output bytes per collective kind over the optimized HLO.
+
+    '-start' ops are counted once ('-done' carries the same buffer and is
+    skipped); with SPMD partitioning the shapes are per-device, i.e. bytes
+    crossing this chip's links.
+    """
+    out: dict[str, int] = {}
+    seen_done = 0
+    for m in _COLL_RE.finditer(hlo_text):
+        sig, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            seen_done += 1
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(sig)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    hbm_bytes: float  # per device
+    coll_bytes: float  # per device
+    coll_by_kind: dict
+    chips: int
+    model_flops: float  # whole step, all chips
+    raw_xla_flops: float = 0.0  # uncorrected cost_analysis (reference)
+    raw_xla_bytes: float = 0.0
+    hbm_bytes_upper: float = 0.0  # op-materialized upper bound
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        t = self.step_time_s
+        return (self.model_flops / (self.chips * PEAK_FLOPS * t)) if t else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+            "raw_xla_flops": self.raw_xla_flops,
+            "raw_xla_bytes": self.raw_xla_bytes,
+            "hbm_bytes_upper": self.hbm_bytes_upper,
+        }
+
+
+def analyse(compiled, *, chips: int, model_flops: float,
+            hlo_text: str | None = None) -> Roofline:
+    """Derive the three terms from the compiled artifact.
+
+    ``compiled.cost_analysis()`` counts while bodies ONCE (scan-heavy modules
+    come out ~L x too small — verified), so the primary numbers come from the
+    trip-count-corrected HLO walk in ``repro.launch.hlo_analysis``; the raw
+    XLA numbers are retained in ``raw_xla_*`` fields for reference.
+    """
+    from repro.launch import hlo_analysis
+
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_analysis.analyse_text(txt)
+    raw = compiled.cost_analysis()
+    if isinstance(raw, list):
+        raw = raw[0]
+    r = Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
+                 coll_bytes=cost.coll_total,
+                 coll_by_kind={k: int(v) for k, v in cost.coll_bytes.items()},
+                 chips=chips, model_flops=model_flops)
+    r.raw_xla_flops = float(raw.get("flops", 0.0)) if raw else 0.0
+    r.raw_xla_bytes = float(raw.get("bytes accessed", 0.0)) if raw else 0.0
+    r.hbm_bytes_upper = cost.bytes_upper
+    return r
+
+
+# --------------------------------------------------------- MODEL_FLOPS
+def model_flops_for(cfg, shape, n_params_dense: float,
+                    n_params_expert: float) -> float:
+    """6*N_active*D; decode steps process 1 token per sequence."""
+    if cfg.moe is not None:
+        frac = (cfg.moe.top_k + cfg.moe.num_shared) / cfg.moe.num_experts
+        n_active = n_params_dense + n_params_expert * frac
+    else:
+        n_active = n_params_dense
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one new token per sequence
+        return 2.0 * n_active * tokens  # forward only
+    tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0  # fwd+bwd vs fwd
+    return mult * n_active * tokens
+
+
+def count_params_split(template, leaf_cls) -> tuple[float, float]:
+    """(dense_params, expert_params) from a param template, embeddings and
+    router excluded from 'dense', expert tensors counted separately."""
+    import jax
+    dense = expert = 0.0
+    for path, lf in jax.tree_util.tree_flatten_with_path(
+            template, is_leaf=lambda x: isinstance(x, leaf_cls))[0]:
+        names = [str(getattr(p, "key", p)) for p in path]
+        n = float(np.prod(lf.shape))
+        if any(k in names for k in ("embed", "lm_head")):
+            continue
+        if names[-1] in ("w_gate", "w_up", "w_down") and len(lf.shape) == 4:
+            expert += n  # stacked (L, E, d, f) expert tensors
+        else:
+            dense += n
+    return dense, expert

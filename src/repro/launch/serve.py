@@ -1,0 +1,42 @@
+"""Serving launcher: continuous batching over --arch (reduced on CPU).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.lm import LM
+from repro.serve import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = LM(cfg)
+    eng = Engine(model, model.init(0), lanes=args.lanes,
+                 max_seq=args.max_seq)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(rid=i,
+                           prompt=list(rng.integers(1, cfg.vocab_size, 6)),
+                           max_new=args.max_new))
+    eng.run()
+    print(f"finished={eng.stats.finished} decode_steps={eng.stats.decode_steps} "
+          f"prefill_tokens={eng.stats.prefill_tokens}")
+
+
+if __name__ == "__main__":
+    main()

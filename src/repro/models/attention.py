@@ -1,0 +1,308 @@
+"""Attention variants: GQA (full / sliding-window), MLA — train, prefill and
+decode paths, plus the pure-JAX double-blocked flash attention used inside
+``jit`` (compact HLO: scan-over-chunks with online softmax; O(qc*kc) peak
+memory instead of O(S^2)).
+
+On-TPU serving uses the Pallas paged kernel (repro.kernels.paged_attention);
+these jnp paths are the oracle semantics and the dry-run lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k, n_heads: int):
+    """GQA repeat via static gather: (B,S,Hkv,d) -> (B,S,H,d).
+
+    A static ``take`` (head h reads kv head h // g) instead of a
+    broadcast+reshape so GSPMD can shard the OUTPUT head dim independently of
+    the (replicated or Hkv-sharded) input — no within-head resharding.
+    """
+    Hkv = k.shape[2]
+    if Hkv == n_heads:
+        return k
+    idx = jnp.arange(n_heads, dtype=jnp.int32) // (n_heads // Hkv)
+    return jnp.take(k, idx, axis=2)
+
+
+# ---------------------------------------------------------------- flash core
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    q_chunk: int = 512, kv_chunk: int = 512, scale=None):
+    """Double-blocked causal attention (plain MHA: repeat GQA KV first with
+    ``repeat_kv``).  q (B,Sq,H,d), k/v (B,Sk,H,d|dv).  ``window`` enables
+    sliding-window masking (mixtral).  Returns (B,Sq,H,dv).
+    """
+    B, Sq, H, d = q.shape
+    Sk = k.shape[1]
+    dv = v.shape[-1]  # may differ from the QK head dim (MLA)
+    scale = scale if scale is not None else d ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad ragged sequence lengths (whisper: 1500 frames) up to the chunking
+    # grid; padded KV positions are masked below, padded Q rows sliced off.
+    Sq0, Sk0 = Sq, Sk
+    if Sq % q_chunk:
+        pq = q_chunk - Sq % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        Sq += pq
+    if Sk % kv_chunk:
+        pk = kv_chunk - Sk % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        Sk += pk
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    # offset of q positions relative to k positions (prefill: same; decode
+    # with cache handled separately) — in REAL (unpadded) coordinates
+    q_off = Sk0 - Sq0
+
+    qr = q.reshape(B, nq, q_chunk, H, d).astype(jnp.float32) * scale
+    kr = k.reshape(B, nk, kv_chunk, H, d).astype(jnp.float32)
+    vr = v.reshape(B, nk, kv_chunk, H, dv).astype(jnp.float32)
+
+    def q_body(_, qi):
+        qc = qi["q"]  # (B, qc, H, d)
+        iq = qi["i"]
+
+        def kv_body(carry, ki):
+            m_prev, l_prev, acc = carry
+            kc, vc, ik = ki["k"], ki["v"], ki["i"]
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc)
+            qpos = q_off + iq * q_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 2)
+            kpos = ik * kv_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 3)
+            mask = kpos < Sk0  # padded KV tail is invalid
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, dv), jnp.float32)
+        ks = {"k": kr.transpose(1, 0, 2, 3, 4), "v": vr.transpose(1, 0, 2, 3, 4),
+              "i": jnp.arange(nk)}
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), ks)
+        o = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,H,qc,dv)
+        return None, o.transpose(0, 2, 1, 3)  # (B,qc,H,dv)
+
+    qs = {"q": qr.transpose(1, 0, 2, 3, 4), "i": jnp.arange(nq)}
+    _, outs = jax.lax.scan(q_body, None, qs)  # (nq,B,qc,H,dv)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, dv)
+    return out[:, :Sq0]
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window: int | None = None,
+                     kv_idx=None):
+    """Single-token decode vs a (B, Smax, Hkv, d) cache; q (B,1,H,d).
+
+    KV heads are repeated at read time (sharded by GSPMD on the q-head dim).
+    Positions >= length are masked; sliding window additionally masks
+    positions <= length-1-window.
+    """
+    B, _, H, d = q.shape
+    if kv_idx is not None:
+        kf = jnp.take(k_cache, kv_idx, axis=2).astype(jnp.float32)
+        vf = jnp.take(v_cache, kv_idx, axis=2).astype(jnp.float32)
+    else:
+        kf = repeat_kv(k_cache, H).astype(jnp.float32)
+        vf = repeat_kv(v_cache, H).astype(jnp.float32)
+    qf = q.reshape(B, H, d).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    pos = jnp.arange(k_cache.shape[1])[None, None, :]
+    mask = pos < length[:, None, None]
+    if window is not None:
+        mask &= pos > (length[:, None, None] - 1 - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", p, vf)
+    return o.reshape(B, 1, H, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- GQA box
+def gqa_params_shape(cfg):
+    """Head-major 3-D projections: (d, H, hd) / (H, hd, d).
+
+    The head dim is a real tensor axis so TP sharding never has to split
+    inside a head (DESIGN.md §5; the 2-D flat layout forced within-head
+    resharding whenever H*hd/tp straddled a head boundary).
+    """
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    shapes = {
+        "wq": (d, H, hd), "wk": (d, Hkv, hd), "wv": (d, Hkv, hd),
+        "wo": (H, hd, d),
+    }
+    if cfg.qkv_bias:
+        shapes.update({"bq": (H, hd), "bk": (Hkv, hd), "bv": (Hkv, hd)})
+    if cfg.qk_norm:
+        shapes.update({"q_norm": (hd,), "k_norm": (hd,)})
+    return shapes
+
+
+def gqa_kv_map(cfg, H_eff: int):
+    """Static q-head -> kv-head mapping; pad heads (beyond cfg.num_heads)
+    reuse kv head 0 — their wo rows are zero so they contribute nothing."""
+    g = max(1, cfg.num_heads // cfg.num_kv_heads)
+    idx = jnp.minimum(jnp.arange(H_eff, dtype=jnp.int32),
+                      cfg.num_heads - 1) // g
+    return idx
+
+
+def gqa_apply(p, x, cfg, *, positions, mode: str, cache=None):
+    """mode: 'train' | 'prefill' (returns cache) | 'decode' (uses cache).
+
+    ``H`` is read from the weights so the head-padding variant
+    (cfg.pad_attn_heads) flows through transparently.
+    """
+    B, S, d = x.shape
+    H, hd = p["wq"].shape[1], cfg.head_dim
+    Hkv = p["wk"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]) + (p["bq"] if cfg.qkv_bias else 0)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]) + (p["bk"] if cfg.qkv_bias else 0)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]) + (p["bv"] if cfg.qkv_bias else 0)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.window if cfg.attn_kind == "swa" else None
+
+    kv_idx = gqa_kv_map(cfg, H)
+    pad_mask = None
+    if H > cfg.num_heads:  # head-padding variant: pad heads contribute zero
+        pad_mask = (jnp.arange(H) < cfg.num_heads).astype(jnp.float32)
+    if mode in ("train", "prefill"):
+        o = flash_attention(q, jnp.take(k, kv_idx, axis=2),
+                            jnp.take(v, kv_idx, axis=2),
+                            causal=True, window=window)
+        if pad_mask is not None:
+            o = o * pad_mask[None, None, :, None]
+        out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+        if mode == "prefill":
+            return out, (k, v)
+        return out
+    # decode: cache = (k_cache, v_cache, length); the new token is written at
+    # per-row `length` (callers pass positions=length for RoPE). SWA uses a
+    # rolling cache: slot = length % window_size, all-written-slots valid.
+    _, _, length = cache
+    W = cache[0].shape[1]
+    rolling = window is not None and W <= window
+    slot = length % W if rolling else length
+    k_cache = _write_at(cache[0], k, slot)
+    v_cache = _write_at(cache[1], v, slot)
+    if rolling:
+        valid = jnp.minimum(length + 1, W)
+        o = decode_attention(q, k_cache, v_cache, valid, window=None,
+                             kv_idx=kv_idx)
+    else:
+        o = decode_attention(q, k_cache, v_cache, length + 1, window=window,
+                             kv_idx=kv_idx)
+    if pad_mask is not None:
+        o = o * pad_mask[None, None, :, None].astype(o.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    return out, (k_cache, v_cache)
+
+
+def _write_at(cache, kv, length):
+    """Scatter one token (B,1,Hkv,d) into (B,Smax,Hkv,d) at per-row length."""
+    B = cache.shape[0]
+    oh = jax.nn.one_hot(length, cache.shape[1], dtype=cache.dtype)  # (B,Smax)
+    return cache * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * \
+        kv.astype(cache.dtype)
+
+
+# ------------------------------------------------------------------- MLA box
+def mla_params_shape(cfg):
+    d = cfg.d_model
+    m = cfg.mla
+    H = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": (d, m.q_lora_rank),
+        "q_a_norm": (m.q_lora_rank,),
+        "wq_b": (m.q_lora_rank, H * qk_dim),
+        "wkv_a": (d, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_a_norm": (m.kv_lora_rank,),
+        "wk_b": (m.kv_lora_rank, H * m.qk_nope_head_dim),
+        "wv_b": (m.kv_lora_rank, H * m.v_head_dim),
+        "wo": (H * m.v_head_dim, d),
+    }
+
+
+def mla_apply(p, x, cfg, *, positions, mode: str, cache=None):
+    """Multi-head latent attention (deepseek-v3).
+
+    Cache stores only the compressed latent (kv_lora_rank + rope dims per
+    token) — decode uses the absorbed-matmul form so K/V are never expanded.
+    """
+    B, S, d = x.shape
+    m = cfg.mla
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    q = rms_norm(x @ p["wq_a"], p["q_a_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]  # (B,S, r + dr)
+    c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_a_norm"])
+    k_rope = apply_rope(kv_a[..., m.kv_lora_rank:][:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0, :]
+
+    wk_b = p["wk_b"].reshape(m.kv_lora_rank, H, dn)
+    if mode in ("train", "prefill"):
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, wk_b)
+        v = jnp.einsum("bsr,rhd->bshd", c_kv,
+                       p["wv_b"].reshape(m.kv_lora_rank, H, dv))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+            axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = flash_attention(qq, k, v, causal=True, scale=scale)
+        out = o.reshape(B, S, H * dv).astype(x.dtype) @ p["wo"]
+        if mode == "prefill":
+            return out, (c_kv, k_rope)
+        return out
+
+    # ---- decode (absorbed): scores over the latent cache directly --------
+    c_cache, r_cache, length = cache
+    c_cache = _write_at2(c_cache, c_kv, length)
+    r_cache = _write_at2(r_cache, k_rope, length)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))  # (B,1,H,r)
+    s = jnp.einsum("bshr,btr->bhst", q_abs, c_cache.astype(jnp.float32))
+    s += jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                    r_cache.astype(jnp.float32))
+    s *= scale
+    pos = jnp.arange(c_cache.shape[1])[None, None, None, :]
+    s = jnp.where(pos < (length + 1)[:, None, None, None], s, NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)  # (B,H,1,T)
+    o_lat = jnp.einsum("bhst,btr->bshr", attn, c_cache.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhd->bshd", o_lat,
+                   p["wv_b"].reshape(m.kv_lora_rank, H, dv).astype(jnp.float32))
+    out = o.reshape(B, 1, H * dv).astype(x.dtype) @ p["wo"]
+    return out, (c_cache, r_cache)
+
+
+def _write_at2(cache, row, length):
+    """Scatter (B,1,D) rows into (B,T,D) at per-row length."""
+    oh = jax.nn.one_hot(length, cache.shape[1], dtype=cache.dtype)
+    return cache * (1 - oh[:, :, None]) + oh[:, :, None] * row.astype(cache.dtype)

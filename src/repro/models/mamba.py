@@ -1,0 +1,108 @@
+"""Mamba (selective SSM) block — jamba's attention-free mixer.
+
+Train/prefill run the linear recurrence with ``jax.lax.associative_scan``
+(O(log S) depth, TPU-friendly; HLO stays compact).  Decode carries the
+(B, d_inner, d_state) SSM state + a (B, d_conv-1, d_inner) conv tail —
+constant memory per sequence, which is why jamba runs the ``long_500k``
+shape that full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import silu
+
+
+def mamba_params_shape(cfg):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.expand * d
+    return {
+        "w_in": (d, 2 * di),          # -> (x, z)
+        "conv_w": (mc.d_conv, di),
+        "conv_b": (di,),
+        "w_bcdt": (di, 2 * mc.d_state + mc.dt_rank),
+        "w_dt": (mc.dt_rank, di),
+        "dt_bias": (di,),
+        "A_log": (di, mc.d_state),
+        "D": (di,),
+        "w_out": (di, d),
+    }
+
+
+def _ssm_scan(x, dt, A, B, C, D):
+    """Selective scan. x,dt (B,S,di); A (di,N); B,C (B,S,N). Returns y, last_h."""
+    Ab = jnp.exp(dt[..., None] * A[None, None])            # (B,S,di,N)
+    Bx = dt[..., None] * B[:, :, None, :] * x[..., None]   # (B,S,di,N)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_c, b_c = jax.lax.associative_scan(combine, (Ab, Bx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", b_c, C) + D[None, None] * x
+    return y, b_c[:, -1]  # last hidden state (B,di,N)
+
+
+def mamba_apply(p, x, cfg, *, mode: str, cache=None):
+    """mode 'train' -> y; 'prefill' -> (y, state); 'decode' -> (y, state)."""
+    B, S, d = x.shape
+    mc = cfg.mamba
+    di = mc.expand * d
+    xz = x @ p["w_in"]
+    xi, z = xz[..., :di], xz[..., di:]
+
+    if mode in ("train", "prefill"):
+        # causal depthwise conv1d
+        pad = jnp.pad(xi, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+        xc = sum(pad[:, i:i + S] * p["conv_w"][i][None, None]
+                 for i in range(mc.d_conv)) + p["conv_b"]
+        xc = silu(xc)
+        bcdt = xc @ p["w_bcdt"]
+        Bm = bcdt[..., : mc.d_state]
+        Cm = bcdt[..., mc.d_state: 2 * mc.d_state]
+        dt = jax.nn.softplus(
+            bcdt[..., 2 * mc.d_state:] @ p["w_dt"] + p["dt_bias"])
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, last_h = _ssm_scan(xc.astype(jnp.float32), dt.astype(jnp.float32),
+                              A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                              p["D"].astype(jnp.float32))
+        out = (silu(z) * y.astype(x.dtype)) @ p["w_out"]
+        if mode == "prefill":
+            conv_tail = (pad[:, -(mc.d_conv - 1):] if mc.d_conv > 1
+                         else jnp.zeros((B, 0, di), x.dtype))
+            return out, (last_h.astype(jnp.float32), conv_tail)
+        return out
+
+    # ---- decode: one token, constant state --------------------------------
+    h_prev, conv_tail = cache  # (B,di,N), (B,d_conv-1,di)
+    window = jnp.concatenate([conv_tail, xi], axis=1)  # (B,d_conv,di)
+    xc = sum(window[:, i] * p["conv_w"][i][None]
+             for i in range(mc.d_conv)) + p["conv_b"]
+    xc = silu(xc)  # (B,di)
+    bcdt = xc @ p["w_bcdt"]
+    Bm = bcdt[..., : mc.d_state]
+    Cm = bcdt[..., mc.d_state: 2 * mc.d_state]
+    dt = jax.nn.softplus(bcdt[..., 2 * mc.d_state:] @ p["w_dt"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Ab = jnp.exp(dt[..., None] * A[None])                  # (B,di,N)
+    h = Ab * h_prev + dt[..., None] * Bm[:, None, :] * xc[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + p["D"][None] * xc
+    out = (silu(z[:, 0]) * y.astype(x.dtype)) @ p["w_out"]
+    new_tail = window[:, 1:] if mc.d_conv > 1 else conv_tail
+    return out[:, None], (h, new_tail)
+
+
+def mamba_init_cache(cfg, batch, dtype=jnp.float32):
+    mc = cfg.mamba
+    di = mc.expand * cfg.d_model
+    return (jnp.zeros((batch, di, mc.d_state), jnp.float32),
+            jnp.zeros((batch, max(mc.d_conv - 1, 0), di), dtype))
+
+
+def default_dt_rank(d_model: int) -> int:
+    return max(1, int(np.ceil(d_model / 16)))

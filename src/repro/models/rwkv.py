@@ -1,0 +1,160 @@
+"""RWKV6 ("Finch") block — attention-free mixer with data-dependent decay.
+
+Time-mix recurrence per head (K = V = head_size):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,     w_t = exp(-exp(w0 + lora(x_t)))
+
+Train/prefill use the **chunked** form (linear-attention style): intra-chunk
+is a C x C masked matmul with cumulative-decay weighting, inter-chunk applies
+the carried state — O(S*C) work, compact HLO (one lax.scan over chunks), MXU
+friendly.  Decode is a constant-size state update, hence rwkv6 runs the
+``long_500k`` shape.
+
+Faithfulness notes (DESIGN.md §7): token-shift uses static learned lerp
+(RWKV6's dynamic DDLerp-on-mix omitted; the *decay* LoRA — the Finch
+signature — is kept); LayerNorm is replaced by RMSNorm for uniformity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_CLIP = 80.0  # exponent safety net; inactive for w_log in [-WLOG_FLOOR, 0]
+_LORA = 32  # decay LoRA rank
+WLOG_FLOOR = 4.0  # per-step decay floor e^-4: with chunk 16 the cumulative
+# exponent stays within +-64, exactly representable in f32 — the chunked
+# factorization is then EXACT (decays below e^-4/step are ~0 after 2 tokens).
+
+
+def rwkv_params_shape(cfg):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    return {
+        "mu_r": (d,), "mu_k": (d,), "mu_v": (d,), "mu_w": (d,), "mu_g": (d,),
+        "w_r": (d, d), "w_k": (d, d), "w_v": (d, d), "w_g": (d, d),
+        "w_o": (d, d),
+        "w0": (H, hs), "wl_a": (d, _LORA), "wl_b": (_LORA, d),
+        "u": (H, hs),
+        "ln_x": (d,),
+        # channel mix
+        "mu_ck": (d,), "mu_cr": (d,),
+        "c_k": (d, cfg.d_ff), "c_v": (cfg.d_ff, d), "c_r": (d, d),
+    }
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay logits (B,S,H,hs), log-space <= 0."""
+    H, hs = p["w0"].shape
+    lora = jnp.tanh(xw @ p["wl_a"]) @ p["wl_b"]
+    w_log = -jnp.exp(jnp.clip(p["w0"].reshape(-1) + lora, -8.0, 4.0))
+    w_log = jnp.maximum(w_log, -WLOG_FLOOR)
+    return w_log.reshape(*xw.shape[:-1], H, hs)  # negative log-decay
+
+
+def _shift(x, x_prev):
+    """Token shift: x_{t-1} sequence (B,S,d) given previous-token carry."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(p, x, cfg, *, mode, cache=None, chunk: int = 16):
+    B, S, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+
+    if mode == "decode":
+        x_prev, state = cache  # (B,d), (B,H,hs,hs)
+        xs = x_prev[:, None]
+    else:
+        x_prev = jnp.zeros((B, d), x.dtype)
+        state = jnp.zeros((B, H, hs, hs), jnp.float32)
+        xs = _shift(x, x_prev)
+
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(B, S, H, hs)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(B, S, H, hs)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(B, S, H, hs)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["w_g"])
+    w_log = _decay(p, mix(p["mu_w"]))  # (B,S,H,hs), <= 0
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = p["u"].astype(jnp.float32)
+
+    if mode == "decode":
+        # y = r (S + diag(u) k v^T); S' = diag(w) S + k v^T
+        kv = jnp.einsum("bshk,bshv->bhkv", kf, vf)
+        y = jnp.einsum("bshk,bhkv->bshv", rf, state + u[None, :, :, None] * kv)
+        new_state = jnp.exp(w_log[:, 0])[..., None] * state + kv
+        out = (y.reshape(B, S, d).astype(x.dtype) * g) @ p["w_o"]
+        return out, (x[:, -1], new_state)
+
+    # ---- chunked parallel form -------------------------------------------
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    n = S // C
+    rc = rf.reshape(B, n, C, H, hs).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,hs)
+    kc = kf.reshape(B, n, C, H, hs).transpose(1, 0, 3, 2, 4)
+    vc = vf.reshape(B, n, C, H, hs).transpose(1, 0, 3, 2, 4)
+    wc = w_log.astype(jnp.float32).reshape(B, n, C, H, hs).transpose(1, 0, 3, 2, 4)
+
+    def chunk_step(S0, inp):
+        r_, k_, v_, w_ = inp  # (B,H,C,hs)
+        cw = jnp.cumsum(w_, axis=2)  # inclusive cumulative log-decay
+        cw_excl = cw - w_  # exclusive
+        # intra-chunk: A[i,l] = sum_k r_i k_l exp(cw_excl_i - cw_l), l < i
+        r_t = r_ * jnp.exp(jnp.clip(cw_excl, -_CLIP, _CLIP))
+        k_t = k_ * jnp.exp(jnp.clip(-cw, -_CLIP, _CLIP))
+        A = jnp.einsum("bhik,bhlk->bhil", r_t, k_t)
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        # diagonal: the current token's own (u-boosted) contribution
+        diag = jnp.einsum("bhik,bhik->bhi", r_ * u[None, :, None, :], k_)
+        A = A + diag[..., None] * jnp.eye(C)[None, None]
+        y_intra = jnp.einsum("bhil,bhlv->bhiv", A, v_)
+        y_inter = jnp.einsum("bhik,bhkv->bhiv", r_t, S0)
+        # state update: S' = diag(exp(cw_C)) S0 + sum_l exp(cw_C - cw_l) k_l v_l
+        wC = cw[:, :, -1:, :]  # (B,H,1,hs)
+        k_dec = k_ * jnp.exp(jnp.clip(wC - cw, -_CLIP, _CLIP))
+        S1 = jnp.exp(jnp.clip(wC[:, :, 0, :], -_CLIP, _CLIP))[..., None] * S0 \
+            + jnp.einsum("bhlk,bhlv->bhkv", k_dec, v_)
+        return S1, y_intra + y_inter
+
+    state_f, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, d)  # (B,n*C,H*hs)
+    out = (y.astype(x.dtype) * g) @ p["w_o"]
+    if mode == "prefill":
+        return out, (x[:, -1], state_f)
+    return out
+
+
+def channel_mix(p, x, *, mode, cache=None):
+    B, S, d = x.shape
+    if mode == "decode":
+        x_prev = cache
+        xs = x_prev[:, None]
+    else:
+        xs = _shift(x, jnp.zeros((B, d), x.dtype))
+    xk = x + (xs - x) * p["mu_ck"]
+    xr = x + (xs - x) * p["mu_cr"]
+    h = jnp.square(jax.nn.relu(xk @ p["c_k"])) @ p["c_v"]
+    out = jax.nn.sigmoid(xr @ p["c_r"]) * h
+    if mode == "train":
+        return out
+    return out, x[:, -1]
+
+
+def rwkv_init_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    return {
+        "att_x": jnp.zeros((batch, d), dtype),
+        "att_s": jnp.zeros((batch, H, hs, hs), jnp.float32),
+        "ffn_x": jnp.zeros((batch, d), dtype),
+    }

@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, EngineStats, Request
+
+__all__ = ["Engine", "EngineStats", "Request"]

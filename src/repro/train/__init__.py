@@ -1,0 +1,9 @@
+from repro.train.checkpoint import latest_step, restore, save
+from repro.train.data import Prefetcher, SyntheticLM
+from repro.train.optimizer import (TrainState, abstract_state, adamw_update,
+                                   init_state, lr_schedule, state_pspecs)
+from repro.train.step import make_train_step
+
+__all__ = ["latest_step", "restore", "save", "Prefetcher", "SyntheticLM",
+           "TrainState", "abstract_state", "adamw_update", "init_state",
+           "lr_schedule", "state_pspecs", "make_train_step"]

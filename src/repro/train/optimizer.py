@@ -1,0 +1,115 @@
+"""AdamW + cosine schedule + ZeRO-1 optimizer-state sharding specs.
+
+No optax dependency: the update is ~30 lines and owning it lets the ZeRO-1
+spec tree shard ``m``/``v`` over the ``data`` axis (params stay TP-sharded /
+DP-replicated, grads arrive DP-reduced; GSPMD turns the update into
+dynamic-slice + all-gather — exactly ZeRO-1's reduce-scatter/all-gather
+communication pattern, chosen by the compiler from the sharding specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    m: Any
+    v: Any
+    step: jnp.ndarray  # scalar int32
+    ef: Any = None  # error-feedback residual (int8 grad compression)
+
+    def tree(self):
+        t = {"params": self.params, "m": self.m, "v": self.v, "step": self.step}
+        if self.ef is not None:
+            t["ef"] = self.ef
+        return t
+
+
+def init_state(params, *, compression: bool = False) -> TrainState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    ef = (jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+          if compression else None)
+    return TrainState(params, zeros(params), zeros(params),
+                      jnp.zeros((), jnp.int32), ef)
+
+
+def abstract_state(abstract_params, *, compression: bool = False) -> TrainState:
+    f32 = lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32)
+    ef = jax.tree.map(f32, abstract_params) if compression else None
+    return TrainState(abstract_params,
+                      jax.tree.map(f32, abstract_params),
+                      jax.tree.map(f32, abstract_params),
+                      jax.ShapeDtypeStruct((), jnp.int32), ef)
+
+
+def zero1_spec(param_spec: P, shape: tuple, data_size: int) -> P:
+    """Add 'data' sharding on the first free, divisible dim (ZeRO-1)."""
+    spec = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (s, dim) in enumerate(zip(spec, shape)):
+        if s is None and dim % max(data_size, 1) == 0 and dim >= data_size:
+            spec[i] = "data"
+            return P(*spec)
+    return P(*spec)
+
+
+def state_pspecs(param_pspecs, abstract_params, *, data_size: int,
+                 zero1: bool = True, compression: bool = False) -> TrainState:
+    if zero1:
+        opt = jax.tree.map(
+            lambda sp, x: zero1_spec(sp, x.shape, data_size),
+            param_pspecs, abstract_params)
+    else:
+        opt = param_pspecs
+    ef = opt if compression else None
+    return TrainState(param_pspecs, opt, opt, P(), ef)
+
+
+def lr_schedule(cfg: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.learning_rate * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_update(cfg: TrainConfig, state: TrainState, grads) -> TrainState:
+    """One AdamW step with global-norm clipping."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + 1e-8) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, state.params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return dataclasses.replace(state, params=new_p, m=new_m, v=new_v,
+                               step=step)
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "m", "v", "step", "ef"],
+    meta_fields=[])

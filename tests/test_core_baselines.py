@@ -1,0 +1,79 @@
+"""Baseline KVSs: correctness + the comparative claims the paper relies on."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.hashing import splitmix64
+from repro.core.outback import OutbackShard
+from repro.core.store import make_uniform_keys
+
+N = 30_000
+
+
+@pytest.fixture(scope="module")
+def data():
+    keys = make_uniform_keys(N, 7)
+    return keys, splitmix64(keys)
+
+
+@pytest.mark.parametrize("cls", [RaceKVS, MicaKVS, ClusterKVS])
+def test_baseline_get_correct(cls, data):
+    keys, vals = data
+    kvs = cls(keys, vals)
+    for i in range(0, N, 997):
+        assert kvs.get(int(keys[i])) == int(vals[i])
+    assert kvs.get(2**63 + 12345) is None
+
+
+@pytest.mark.parametrize("cls", [RaceKVS, MicaKVS, ClusterKVS, DummyKVS])
+def test_baseline_get_batch(cls, data):
+    keys, vals = data
+    kvs = cls(keys, vals)
+    v_lo, v_hi, match = kvs.get_batch(keys[:4096])
+    if cls is DummyKVS:
+        return  # dummy returns arbitrary blocks by design
+    m = np.asarray(match)
+    assert m.mean() > 0.999
+    got = (np.asarray(v_hi).astype(np.uint64) << np.uint64(32)) | np.asarray(v_lo)
+    np.testing.assert_array_equal(got[m], vals[:4096][m])
+
+
+def test_round_trip_ordering(data):
+    """Outback: 1 RT.  RPC baselines: 1 RT.  RACE (one-sided): 2 RTs."""
+    keys, vals = data
+    out = OutbackShard(keys, vals, load_factor=0.85)
+    race, mica = RaceKVS(keys, vals), MicaKVS(keys, vals)
+    for kvs in (out, race, mica):
+        kvs.meter.reset()
+        kvs.get_batch(keys[:1024])
+    po = out.meter.per_op()
+    pr = race.meter.per_op()
+    pm = mica.meter.per_op()
+    assert po["round_trips"] == 1 and pm["round_trips"] == 1
+    assert pr["round_trips"] == 2
+
+
+def test_mn_compute_ordering(data):
+    """The paper's central claim: Outback's MN does no index compute while
+    RPC baselines burn MN cycles on probing/compares."""
+    keys, vals = data
+    out = OutbackShard(keys, vals, load_factor=0.85)
+    mica, clus = MicaKVS(keys, vals), ClusterKVS(keys, vals)
+    for kvs in (out, mica, clus):
+        kvs.meter.reset()
+        kvs.get_batch(keys[:1024])
+    assert out.meter.mn_cmp_ops == 0 and out.meter.mn_hash_ops == 0
+    assert mica.meter.mn_cmp_ops > 0
+    assert clus.meter.mn_cmp_ops > 0
+
+
+def test_onwire_bytes_ordering(data):
+    """RACE moves bucket groups over the wire; Outback moves 8-byte indices."""
+    keys, vals = data
+    out = OutbackShard(keys, vals, load_factor=0.85)
+    race = RaceKVS(keys, vals)
+    out.meter.reset(), race.meter.reset()
+    out.get_batch(keys[:1024])
+    race.get_batch(keys[:1024])
+    assert race.meter.resp_bytes > out.meter.resp_bytes

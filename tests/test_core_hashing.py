@@ -1,0 +1,97 @@
+"""Primitives: hashing, bit arrays, slot bitfields — np/jnp equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitarray, slots
+from repro.core.hashing import (fingerprint6, fmix32, hash64_32, hash_range,
+                                join_u64, slot_hash, split_u64, splitmix64)
+
+u32s = st.integers(min_value=0, max_value=2**32 - 1)
+u64s = st.integers(min_value=0, max_value=2**64 - 1)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(u32s, min_size=1, max_size=64), u32s)
+def test_fmix32_np_jnp_agree(vals, seed):
+    a = np.asarray(vals, dtype=np.uint32)
+    np_out = fmix32(a ^ np.uint32(seed), np)
+    j_out = fmix32(jnp.asarray(a) ^ jnp.uint32(seed), jnp)
+    np.testing.assert_array_equal(np_out, np.asarray(j_out))
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(u64s, min_size=1, max_size=64), u32s)
+def test_hash64_np_jnp_agree(keys, seed):
+    lo, hi = split_u64(np.asarray(keys, dtype=np.uint64))
+    np_out = hash64_32(lo, hi, seed, np)
+    j_out = hash64_32(jnp.asarray(lo), jnp.asarray(hi), jnp.uint32(seed), jnp)
+    np.testing.assert_array_equal(np_out, np.asarray(j_out))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(u64s, min_size=1, max_size=64),
+       st.integers(min_value=1, max_value=10_000))
+def test_hash_range_in_bounds(keys, size):
+    lo, hi = split_u64(np.asarray(keys, dtype=np.uint64))
+    h = hash_range(lo, hi, 7, size)
+    assert (h < size).all()
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(u64s, min_size=1, max_size=64), st.integers(0, 255))
+def test_slot_hash_range_and_agreement(keys, seed):
+    lo, hi = split_u64(np.asarray(keys, dtype=np.uint64))
+    s_np = slot_hash(lo, hi, np.uint32(seed))
+    s_j = slot_hash(jnp.asarray(lo), jnp.asarray(hi), jnp.uint32(seed), jnp)
+    assert (s_np < 4).all()
+    np.testing.assert_array_equal(s_np, np.asarray(s_j))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(u64s, min_size=1, max_size=32, unique=True))
+def test_split_join_roundtrip(keys):
+    k = np.asarray(keys, dtype=np.uint64)
+    lo, hi = split_u64(k)
+    np.testing.assert_array_equal(join_u64(lo, hi), k)
+
+
+def test_fingerprint_is_6bit():
+    lo, hi = split_u64(splitmix64(np.arange(1, 10_001, dtype=np.uint64)))
+    fp = fingerprint6(lo, hi)
+    assert (fp < 64).all()
+    # fingerprints should be reasonably uniform
+    counts = np.bincount(fp, minlength=64)
+    assert counts.min() > 0
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.integers(0, 4095), min_size=1, max_size=256),
+       st.integers(min_value=4096, max_value=8192))
+def test_bitarray_set_get(bits_on, m):
+    words = bitarray.alloc_bits(m)
+    for b in bits_on:
+        bitarray.set_bit(words, b, 1)
+    idx = np.arange(4096)
+    got = bitarray.get_bit(words, idx)
+    expect = np.zeros(4096, dtype=np.uint32)
+    expect[np.asarray(sorted(set(bits_on)))] = 1
+    np.testing.assert_array_equal(got, expect)
+    # jnp path agrees
+    got_j = bitarray.get_bit(jnp.asarray(words), jnp.asarray(idx), jnp)
+    np.testing.assert_array_equal(np.asarray(got_j), expect)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(0, 1), st.integers(0, 63), st.integers(0, 511),
+       u32s, st.integers(0, 0xFFFF))
+def test_slot_pack_unpack_roundtrip(cache, fp, length, alo, ahi):
+    lo, hi = slots.pack(cache, fp, length, alo, ahi)
+    f = slots.unpack(lo, hi)
+    assert int(f["cache"]) == cache
+    assert int(f["fp"]) == fp
+    assert int(f["len"]) == length
+    assert int(f["addr_lo"]) == alo
+    assert int(f["addr_hi"]) == ahi
+    assert int(slots.unpack_len(hi)) == length

@@ -1,0 +1,97 @@
+"""Distributed KVS: single-device mesh in-process + 8-device subprocess."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import sharded_kvs as skv
+from repro.core.hashing import split_u64, splitmix64
+from repro.core.store import make_uniform_keys
+
+
+def _run(mesh_shape, num_shards, n=20_000, batch=2048, variant="outback"):
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    keys = make_uniform_keys(n)
+    vals = splitmix64(keys)
+    st = skv.build_sharded(keys, vals, num_shards=num_shards,
+                           data_parallel=mesh_shape[0], load_factor=0.85)
+    arrays = skv.place_state(mesh, st)
+    ndev = mesh_shape[0] * mesh_shape[1]
+    fn, _ = skv.make_get_fn(mesh, st, batch // ndev, variant=variant)
+    q = keys[np.random.default_rng(3).integers(0, n, batch)]
+    qlo, qhi = split_u64(q)
+    qs = NamedSharding(mesh, P(("data", "model")))
+    qlo = jax.device_put(jnp.asarray(qlo), qs)
+    qhi = jax.device_put(jnp.asarray(qhi), qs)
+    v_lo, v_hi, match = fn(qlo, qhi, *arrays)
+    match = np.asarray(match)
+    got = (np.asarray(v_hi).astype(np.uint64) << np.uint64(32)) | np.asarray(v_lo)
+    return match, got, splitmix64(q)
+
+
+@pytest.mark.parametrize("variant", ["outback", "race"])
+def test_sharded_kvs_single_device(variant):
+    match, got, expect = _run((1, 1), 1, variant=variant)
+    assert match.all()
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_bin_by_roundtrip():
+    tgt = jnp.asarray(np.random.default_rng(0).integers(0, 4, 128), jnp.int32)
+    idxmap = skv.bin_by(tgt, 4, 64)
+    x = jnp.arange(128, dtype=jnp.uint32) + 100
+    binned = skv.take(x, idxmap, 0xFFFFFFFF)
+    back = skv.unbin(idxmap, binned, 128, 0)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_bin_by_capacity_drop():
+    # all targets equal, capacity 8 -> exactly 8 survive
+    tgt = jnp.zeros(32, jnp.int32)
+    idxmap = skv.bin_by(tgt, 2, 8)
+    assert int((idxmap < 32).sum()) == 8
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import sharded_kvs as skv
+    from repro.core.hashing import split_u64, splitmix64
+    from repro.core.store import make_uniform_keys
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    keys = make_uniform_keys(40_000)
+    vals = splitmix64(keys)
+    st = skv.build_sharded(keys, vals, num_shards=4, data_parallel=2)
+    arrays = skv.place_state(mesh, st)
+    B = 8192
+    fn, _ = skv.make_get_fn(mesh, st, B // 8)
+    q = keys[np.random.default_rng(0).integers(0, keys.shape[0], B)]
+    qlo, qhi = split_u64(q)
+    qs = NamedSharding(mesh, P(("data", "model")))
+    qlo = jax.device_put(jnp.asarray(qlo), qs)
+    qhi = jax.device_put(jnp.asarray(qhi), qs)
+    v_lo, v_hi, match = fn(qlo, qhi, *arrays)
+    assert np.asarray(match).all(), np.asarray(match).mean()
+    got = (np.asarray(v_hi).astype(np.uint64) << np.uint64(32)) | np.asarray(v_lo)
+    assert (got == splitmix64(q)).all()
+    print("MULTIDEV_OK")
+""")
+
+
+def test_sharded_kvs_eight_devices_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "MULTIDEV_OK" in out.stdout, out.stderr[-2000:]

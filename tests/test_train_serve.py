@@ -1,0 +1,241 @@
+"""Training substrate + serving engine + paged cache tests."""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cache import CuckooPageTable, LudoPageTable
+from repro.configs import TrainConfig, get_config
+from repro.models.lm import LM
+from repro.serve import Engine, Request
+from repro.train import (Prefetcher, SyntheticLM, init_state, latest_step,
+                         lr_schedule, make_train_step, restore, save)
+from repro.train.optimizer import state_pspecs, zero1_spec
+from jax.sharding import PartitionSpec as P
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("llama3.2-1b", reduced=True)
+    model = LM(cfg)
+    return cfg, model, model.init(0)
+
+
+def test_train_step_decreases_loss_on_learnable_data(tiny):
+    cfg, model, params = tiny
+    tcfg = TrainConfig(total_steps=40, warmup_steps=4, learning_rate=2e-3)
+    state = init_state(params)
+    step = jax.jit(make_train_step(model, tcfg))  # no donation: params fixture is shared
+    # learnable: constant token sequence
+    toks = jnp.ones((4, 32), jnp.int32) * 7
+    batch = {"tokens": toks, "labels": toks}
+    first = None
+    for _ in range(25):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first * 0.5  # memorizes a constant stream
+
+
+def test_grad_accum_matches_full_batch(tiny):
+    cfg, model, params = tiny
+    src = SyntheticLM(cfg.vocab_size, 32, 8)
+    batch = {k: jnp.asarray(v) for k, v in src.global_batch_at(0).items()}
+    t0 = TrainConfig(microbatch=0, learning_rate=1e-3)
+    t1 = TrainConfig(microbatch=4, learning_rate=1e-3)
+    s0, m0 = jax.jit(make_train_step(model, t0))(init_state(params), batch)
+    s1, m1 = jax.jit(make_train_step(model, t1))(init_state(params), batch)
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]), rtol=5e-2)
+    # parameters move in the same direction at comparable magnitude
+    d0 = jax.tree.leaves(s0.params)[0] - jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(s1.params)[0] - jax.tree.leaves(params)[0]
+    cos = float(jnp.sum(d0 * d1) / (jnp.linalg.norm(d0) * jnp.linalg.norm(d1)))
+    assert cos > 0.9
+
+
+def test_checkpoint_restart_is_bitexact(tiny):
+    cfg, model, params = tiny
+    tcfg = TrainConfig(total_steps=20, warmup_steps=2)
+    step = jax.jit(make_train_step(model, tcfg))
+    src = SyntheticLM(cfg.vocab_size, 32, 4)
+    state = init_state(params)
+    for i in range(3):
+        state, _ = step(state, {k: jnp.asarray(v)
+                                for k, v in src.global_batch_at(i).items()})
+    d = tempfile.mkdtemp()
+    save(d, int(state.step), state.tree())
+    # continue 2 more steps
+    stateA = state
+    for i in (3, 4):
+        stateA, mA = step(stateA, {k: jnp.asarray(v)
+                                   for k, v in src.global_batch_at(i).items()})
+    # restart from checkpoint, replay the same data (deterministic pipeline)
+    t = restore(d, state.tree())
+    stateB = dataclasses.replace(init_state(params), params=t["params"],
+                                 m=t["m"], v=t["v"],
+                                 step=jnp.asarray(t["step"]))
+    for i in (3, 4):
+        stateB, mB = step(stateB, {k: jnp.asarray(v)
+                                   for k, v in src.global_batch_at(i).items()})
+    np.testing.assert_allclose(float(mA["loss"]), float(mB["loss"]), rtol=1e-6)
+
+
+def test_checkpoint_retention_and_latest():
+    d = tempfile.mkdtemp()
+    tree = {"a": jnp.arange(4.0)}
+    for s in (1, 2, 3, 4, 5):
+        save(d, s, tree, retain=2)
+    assert latest_step(d) == 5
+    import os
+    kept = [x for x in os.listdir(d) if x.startswith("step_")]
+    assert len(kept) == 2
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 64), st.integers(1, 1024))
+def test_lr_schedule_bounds(warm, total):
+    tcfg = TrainConfig(warmup_steps=warm, total_steps=max(total, warm + 1),
+                       learning_rate=1e-3)
+    for s in [0, warm, total // 2, total]:
+        lr = float(lr_schedule(tcfg, jnp.int32(s)))
+        assert 0.0 <= lr <= 1e-3 + 1e-9
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.sampled_from([(16, 2048), (8, 64, 64), (2048,), (3, 5)]),
+       st.integers(2, 16))
+def test_zero1_spec_validity(shape, data):
+    spec = zero1_spec(P(), shape, data)
+    for ax, dim in zip(spec, shape):
+        if ax == "data":
+            assert dim % data == 0
+
+
+def test_data_pipeline_deterministic_replay():
+    src = SyntheticLM(1000, 16, 4, seed=3)
+    a = src.global_batch_at(7)
+    b = src.global_batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    p1 = Prefetcher(src)
+    p1.seek(5)
+    first = p1.get()
+    np.testing.assert_array_equal(first["tokens"],
+                                  src.global_batch_at(5)["tokens"])
+
+
+def test_engine_serves_all(tiny):
+    cfg, model, params = tiny
+    eng = Engine(model, params, lanes=2, max_seq=48)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=[1, 2, 3], max_new=4))
+    eng.run()
+    assert eng.stats.finished == 4
+
+
+def test_engine_park_resume_preserves_state():
+    cfg = get_config("rwkv6-1.6b", reduced=True)
+    model = LM(cfg)
+    eng = Engine(model, model.init(0), lanes=2, max_seq=64)
+    eng.submit(Request(rid=1, prompt=[4, 5, 6], max_new=30))
+    for _ in range(3):
+        eng.step()
+    before = np.asarray(eng.cache["length"])[0]
+    rid = eng.park(0)
+    lane = eng.resume(rid)
+    after = np.asarray(eng.cache["length"])[lane]
+    assert after == before
+
+
+# ------------------------------------------------------------- paged cache
+def test_ludo_page_table_full_protocol():
+    pt = LudoPageTable(2048)
+    seqs = {s: 12 + s for s in range(6)}
+    expect = {}
+    for s, n in seqs.items():
+        for l in range(n):
+            expect[(s, l)] = pt.append_page(s, l)
+    for (s, l), phys in expect.items():
+        assert pt.lookup(s, l) == phys
+    pm, ok = pt.lookup_batch(3, seqs[3])
+    assert np.asarray(ok).all()
+    np.testing.assert_array_equal(
+        np.asarray(pm), [expect[(3, l)] for l in range(seqs[3])])
+    freed = pt.release_sequence(3)
+    assert freed == seqs[3]
+    assert pt.lookup(3, 0) is None
+    # pages are reusable after release
+    p = pt.append_page(99, 0)
+    assert pt.lookup(99, 0) == p
+    assert pt.cn_bits_per_page() < 8.0  # the decoupling claim
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(2, 6), st.integers(4, 24))
+def test_page_tables_agree(n_seq, pages_per_seq):
+    lt = LudoPageTable(4096)
+    ct = CuckooPageTable(4096)
+    for s in range(n_seq):
+        for l in range(pages_per_seq):
+            lt.append_page(s, l)
+            ct.append_page(s, l)
+    for s in range(n_seq):
+        pm, ok = lt.lookup_batch(s, pages_per_seq)
+        assert np.asarray(ok).all()
+        pm2, sel = ct.lookup2_batch(s, pages_per_seq)
+        for l in range(pages_per_seq):
+            assert pm2[l, sel[l]] >= 0
+
+
+_INT8_POD = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, re
+from repro.configs import TrainConfig, get_config
+from repro.models.lm import LM
+from repro.train import SyntheticLM, init_state, make_train_step
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = get_config("llama3.2-1b", reduced=True)
+model = LM(cfg, mesh=None)  # GSPMD-auto inside the pod-manual region
+params = model.init(0)
+src = SyntheticLM(cfg.vocab_size, 32, 8)
+batch = {k: jnp.asarray(v) for k, v in src.global_batch_at(0).items()}
+with mesh:
+    s0, m0 = jax.jit(make_train_step(model, TrainConfig(learning_rate=1e-3),
+                                     mesh=None))(init_state(params), batch)
+    t1 = TrainConfig(learning_rate=1e-3, grad_compression="int8")
+    step1 = jax.jit(make_train_step(model, t1, mesh=mesh))
+    s1, m1 = step1(init_state(params, compression=True), batch)
+    assert abs(float(m0["loss"]) - float(m1["loss"])) < 1e-3
+    d0 = np.asarray(jax.tree.leaves(s0.params)[0]
+                    - jax.tree.leaves(params)[0], np.float32)
+    d1 = np.asarray(jax.tree.leaves(s1.params)[0]
+                    - jax.tree.leaves(params)[0], np.float32)
+    cos = float((d0 * d1).sum()
+                / (np.linalg.norm(d0) * np.linalg.norm(d1) + 1e-12))
+    assert cos > 0.8, cos  # per-step int8 noise; error feedback carries rest
+    ef = np.asarray(jax.tree.leaves(s1.ef)[0], np.float32)
+    assert (np.abs(ef) > 0).any()  # residual populated
+    txt = step1.lower(init_state(params, compression=True),
+                      batch).compile().as_text()
+    assert re.findall(r"s8\\[[\\d,]*\\][^\\n]*collective-permute", txt)
+    print("INT8_POD_OK", round(cos, 3))
+"""
+
+
+def test_int8_pod_gradient_compression_subprocess():
+    """int8 inter-pod grad exchange: int8 on the wire, EF residual, update
+    direction preserved — on a 2-pod fake mesh."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _INT8_POD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "INT8_POD_OK" in out.stdout, out.stderr[-1500:]
