@@ -16,6 +16,7 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import slots as slots_mod
 from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.cn_cache import CNKeyCache, cache_probe
 from repro.core.hashing import hash_range, split_u64
 from repro.core.outback import OutbackShard
 from repro.core.store import OutbackStore
@@ -239,6 +240,73 @@ def fig16_cn_memory(sizes=(200_000, 1_000_000, 2_000_000)):
             mb_100m = sh.cn_memory_bytes() / n * 100e6 / 1e6
             rows.append((f"fig16/n{n}/lf{lf}", round(bits, 3),
                          f"{mb_100m:.1f}MB@100M"))
+    return rows
+
+
+def zipf_cache(n=200_000, thetas=(0.0, 0.9, 1.2), budget_bytes_per_key=8,
+               warm_batches=4):
+    """YCSB-C under zipfian skew, CN cache on vs off (not a paper figure —
+    the FlexKV/DINOMO-style extension in repro.core.cn_cache).
+
+    Per theta: modeled Mops and on-wire bytes/op for the same key set and
+    query stream, with a fixed CN budget of ``budget_bytes_per_key`` per
+    stored key.  Cache-off is the unmodified Outback Get path."""
+    keys = C.fb_like_keys(n)
+    vals = C.values_for(keys)
+    rows = []
+    for theta in thetas:
+        idx = C.zipf_indices(n, BATCH, theta=theta, seed=5)
+        q = keys[idx]
+        # ---- cache off: byte-for-byte today's Get path -------------------
+        sh = OutbackShard(keys, vals, load_factor=0.85)
+        (cn_fn, cn_args), (mn_fn, mn_args) = outback_parts(sh, q)
+        t_cn = C.time_batched(cn_fn, *cn_args) / BATCH * 1e6
+        t_mn = C.time_batched(mn_fn, *mn_args) / BATCH * 1e6
+        sh.meter.reset()
+        sh.get_batch(q)
+        p = sh.meter.per_op()
+        off = C.Measured("outback", t_mn, t_cn, p["round_trips"],
+                         p["req_bytes"], p["resp_bytes"],
+                         p["mn_mem_reads"], p["mn_cmp_ops"])
+        off_bytes = p["req_bytes"] + p["resp_bytes"]
+        off_mops = off.modeled_mops(mn_threads=1)
+        rows.append((f"zipf/theta{theta}/cache_off", round(t_mn + t_cn, 4),
+                     round(off_mops, 2)))
+        # ---- cache on: fixed CN budget, adaptive admission ---------------
+        cache = CNKeyCache(budget_bytes_per_key * n)
+        shc = OutbackShard(keys, vals, load_factor=0.85, cn_cache=cache)
+        for w in range(warm_batches):  # let admission converge on FRESH
+            widx = C.zipf_indices(n, BATCH, theta=theta, seed=100 + w)
+            shc.get_batch(keys[widx])  # draws, never the measured batch
+        shc.meter.reset()
+        shc.get_batch(q)
+        m = shc.meter
+        # normalise over the BATCH keys, not m.ops: makeup trips count a
+        # second meter op for their lane, which would skew the denominator
+        on_bytes = (m.req_bytes + m.resp_bytes) / BATCH
+        miss_rate = 1.0 - (m.cache_hits + m.cache_neg_hits) / BATCH
+        # CN probe cost is real work — measure the jitted probe kernel.
+        lo, hi = split_u64(q[:BATCH])
+        lo, hi = jnp.asarray(lo), jnp.asarray(hi)
+        car = cache.arrays(jnp)
+        nsets = cache.nsets
+        probe = jax.jit(lambda lo, hi, *a: cache_probe(lo, hi, a, nsets, jnp))
+        t_probe = C.time_batched(probe, lo, hi, *car) / BATCH * 1e6
+        # MN only sees the misses (poll+post included); the CN's own probe +
+        # locator work bounds the other side.  Report the binding limit.
+        mn_us = miss_rate * (C.RPC_OVERHEAD_S * 1e6 + t_mn)
+        cn_us = t_cn + t_probe
+        on_mops = 1.0 / max(mn_us, cn_us, 1e-9)
+        rows.append((f"zipf/theta{theta}/cache_on",
+                     round(t_mn * miss_rate + t_cn + t_probe, 4),
+                     round(on_mops, 2)))
+        saved = 1.0 - on_bytes / max(off_bytes, 1e-9)
+        rows.append((f"zipf/theta{theta}/wire_bytes_saved",
+                     round(on_bytes, 2),
+                     f"{saved:.1%}(hit={1 - miss_rate:.2f})"))
+        rows.append((f"zipf/theta{theta}/cn_cache_mb",
+                     round(cache.memory_bytes() / 1e6, 3),
+                     f"budget={budget_bytes_per_key}B/key"))
     return rows
 
 

@@ -16,10 +16,15 @@ import time
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Outback paper-figure reproductions + extensions.")
     ap.add_argument("--quick", action="store_true",
                     help="smaller key sets (CI-speed)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="substring filter over suite names: fig3, fig9, "
+                         "fig11, fig12, fig14, fig15, fig16, fig17, zipf "
+                         "(CN hot-key cache on/off across skew), "
+                         "kernel_paged, kernel_lookup, kernel_pagetable")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, paper_figs
@@ -39,6 +44,7 @@ def main() -> None:
             (100_000, 200_000) if args.quick
             else (200_000, 1_000_000, 2_000_000))),
         ("fig17", lambda: paper_figs.fig17_resize(min(n, 150_000))),
+        ("zipf", lambda: paper_figs.zipf_cache(min(n, 200_000))),
         ("kernel_paged", kernel_bench.paged_attention_traffic),
         ("kernel_lookup", kernel_bench.ludo_lookup_throughput),
         ("kernel_pagetable", kernel_bench.page_table_memory),

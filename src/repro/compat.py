@@ -1,0 +1,31 @@
+"""Version-compatibility shims for the pinned third-party stack.
+
+The CI image pins ``jax`` at a 0.4.x release where ``shard_map`` still
+lives under ``jax.experimental`` and speaks the old kwarg dialect
+(``check_rep``, ``auto``); newer releases export ``jax.shard_map`` with
+``check_vma`` / ``axis_names``.  Import it from here and use the *new*
+dialect everywhere — the shim translates when running on old jax:
+
+    from repro.compat import shard_map
+"""
+
+from __future__ import annotations
+
+try:  # jax >= 0.6: the new public API, nothing to translate
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4-0.5
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  axis_names=None):
+        kw = {}
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        if axis_names is not None:
+            # new API: manualize exactly ``axis_names``; legacy equivalent:
+            # every other mesh axis stays automatic.
+            kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+
+__all__ = ["shard_map"]

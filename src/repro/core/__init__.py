@@ -12,20 +12,23 @@ Layering:
 """
 
 from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.cn_cache import (CNCacheStats, CNKeyCache, ShardedCNCache,
+                                 cache_probe, neg_probe)
 from repro.core.ludo import LudoBuildError, LudoCN, build as ludo_build
 from repro.core.meter import MSG_BYTES, CommMeter
 from repro.core.othello import Othello, OthelloBuildError, build as othello_build
 from repro.core.outback import GetResult, OutbackShard, ShardFullError
 from repro.core.overflow import OverflowCache
 from repro.core.sharded_kvs import (ShardedKVSState, build_sharded,
-                                    make_get_fn, place_state)
+                                    make_get_fn, place_cache, place_state)
 from repro.core.store import OutbackStore, ResizeEvent, make_uniform_keys
 
 __all__ = [
-    "ClusterKVS", "CommMeter", "DummyKVS", "GetResult", "LudoBuildError",
-    "LudoCN", "MSG_BYTES", "MicaKVS", "Othello", "OthelloBuildError",
-    "OutbackShard", "OutbackStore", "OverflowCache", "RaceKVS",
-    "ResizeEvent", "ShardFullError", "ShardedKVSState", "build_sharded",
-    "ludo_build", "make_get_fn", "make_uniform_keys", "othello_build",
-    "place_state",
+    "CNCacheStats", "CNKeyCache", "ClusterKVS", "CommMeter", "DummyKVS",
+    "GetResult", "LudoBuildError", "LudoCN", "MSG_BYTES", "MicaKVS",
+    "Othello", "OthelloBuildError", "OutbackShard", "OutbackStore",
+    "OverflowCache", "RaceKVS", "ResizeEvent", "ShardFullError",
+    "ShardedCNCache", "ShardedKVSState", "build_sharded", "cache_probe",
+    "ludo_build", "make_get_fn", "make_uniform_keys", "neg_probe",
+    "othello_build", "place_cache", "place_state",
 ]

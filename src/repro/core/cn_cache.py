@@ -1,0 +1,429 @@
+"""Compute-node adaptive hot-key cache (the CN cache).
+
+Outback's Get path is already one round trip, but *every* Get still crosses
+the CN->MN wire.  Under the skewed (zipfian) YCSB distributions the paper
+evaluates, a small compute-node cache of hot KV pairs eliminates the round
+trip entirely for the head of the distribution — the FlexKV/DINOMO argument:
+compute nodes have abundant CPU and a little spare memory, so spend a fixed
+byte budget there to absorb skew before it reaches the scarce memory node.
+
+Structure (all flat numpy arrays so the probe is jit-exportable):
+
+* **value table** — W-way set-associative over ``nsets`` (power of two)
+  sets; per way the key lanes (k_lo/k_hi), value lanes (v_lo/v_hi), a
+  validity byte and a CLOCK reference byte.  Hits set the ref bit; eviction
+  scans the set CLOCK-style (clearing ref bits) from a per-set hand.
+* **admission sketch** — a 2-row count-min sketch of saturating uint8
+  counters estimating per-key access frequency (TinyLFU-lite).  A missed
+  key is admitted only once its estimate reaches ``admit_threshold`` and,
+  when the set is full, only if it beats the CLOCK victim's estimate — one
+  burst of cold keys cannot flush the hot set.  The sketch is halved every
+  ``aging_window`` observations so the cache *adapts* when the hot set
+  drifts.
+* **negative cache** — a small direct-mapped key-only table of keys known
+  absent.  A repeated Get of a missing key normally costs the full 2-RT
+  makeup path; after ``admit_threshold`` misses the CN answers it locally.
+
+Coherence rules (exercised by ``tests/test_cn_cache.py``):
+
+* ``Update``  -> refresh the cached value in place, clear any negative entry;
+* ``Delete``  -> drop the positive entry (the next Get re-learns absence);
+* ``Insert``  -> clear the negative entry (the key now exists), refresh the
+  value if the insert resolved to an in-place update;
+* **resize**  -> the directory split invalidates every cached entry routed
+  to the table being rebuilt (``OutbackStore`` calls ``invalidate_where``),
+  mirroring how the seed-propagation path refreshes stale CN seeds.
+
+The pure functions ``cache_probe`` / ``neg_probe`` run identically under
+numpy and jax.numpy; ``repro.core.sharded_kvs`` places per-device replicas
+(``ShardedCNCache``) and probes *before* the routing ``all_to_all`` pair so
+cache hits never enter the bins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hashing import hash64_32, join_u64
+
+_SET_SEED = 0xCACE5E7
+_SKETCH_SEED_A = 0x5EE71
+_SKETCH_SEED_B = 0x5EE72
+_NEG_SEED = 0x0FF5E7
+
+ENTRY_BYTES = 18  # k_lo+k_hi+v_lo+v_hi (16) + valid/ref bits + set-hand share
+NEG_ENTRY_BYTES = 9  # k_lo+k_hi + valid bit
+
+
+@dataclasses.dataclass
+class CNCacheStats:
+    hits: int = 0
+    neg_hits: int = 0
+    misses: int = 0
+    admitted: int = 0
+    evicted: int = 0
+    invalidated: int = 0
+    neg_admitted: int = 0
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.neg_hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return (self.hits + self.neg_hits) / max(1, self.lookups)
+
+
+def _pow2_at_most(x: int) -> int:
+    return 1 << max(0, int(x).bit_length() - 1)
+
+
+class CNKeyCache:
+    """Fixed-budget CN-side hot-KV cache with frequency-based admission."""
+
+    WAYS = 4
+
+    def __init__(self, budget_bytes: int, *, ways: int = WAYS,
+                 admit_threshold: int = 2, neg_frac: float = 0.10,
+                 sketch_frac: float = 0.20):
+        if budget_bytes < 1024:
+            raise ValueError("CN cache budget below 1 KiB is meaningless")
+        self.budget_bytes = int(budget_bytes)
+        self.ways = ways
+        self.admit_threshold = int(admit_threshold)
+
+        value_budget = int(budget_bytes * (1.0 - neg_frac - sketch_frac))
+        self.nsets = max(2, _pow2_at_most(value_budget // (ways * ENTRY_BYTES)))
+        self.nneg = max(2, _pow2_at_most(int(budget_bytes * neg_frac)
+                                         // NEG_ENTRY_BYTES))
+        self.sketch_w = max(4, _pow2_at_most(int(budget_bytes * sketch_frac)
+                                             // 2))
+
+        S, W = self.nsets, self.ways
+        self.k_lo = np.zeros((S, W), np.uint32)
+        self.k_hi = np.zeros((S, W), np.uint32)
+        self.v_lo = np.zeros((S, W), np.uint32)
+        self.v_hi = np.zeros((S, W), np.uint32)
+        self.valid = np.zeros((S, W), np.uint8)
+        self.ref = np.zeros((S, W), np.uint8)
+        self.hand = np.zeros(S, np.uint8)
+
+        self.sketch = np.zeros((2, self.sketch_w), np.uint8)
+        self._sketch_obs = 0
+        self.aging_window = 8 * S * W
+
+        self.nk_lo = np.zeros(self.nneg, np.uint32)
+        self.nk_hi = np.zeros(self.nneg, np.uint32)
+        self.nvalid = np.zeros(self.nneg, np.uint8)
+
+        self.stats = CNCacheStats()
+
+    # ------------------------------------------------------------ accounting
+    def memory_bytes(self) -> int:
+        """Actual bytes of CN memory this cache occupies (<= budget)."""
+        return (self.k_lo.nbytes + self.k_hi.nbytes + self.v_lo.nbytes
+                + self.v_hi.nbytes + (self.nsets * self.ways * 2) // 8
+                + self.nsets  # hands
+                + self.sketch.nbytes
+                + self.nneg * NEG_ENTRY_BYTES)
+
+    @property
+    def capacity(self) -> int:
+        return self.nsets * self.ways
+
+    # --------------------------------------------------------------- sketch
+    def _sketch_idx(self, lo, hi):
+        a = hash64_32(lo, hi, _SKETCH_SEED_A) & np.uint32(self.sketch_w - 1)
+        b = hash64_32(lo, hi, _SKETCH_SEED_B) & np.uint32(self.sketch_w - 1)
+        return a, b
+
+    def _sketch_bump(self, lo, hi, count=1) -> None:
+        """Saturating add; vectorised over key arrays."""
+        lo = np.atleast_1d(np.asarray(lo, np.uint32))
+        hi = np.atleast_1d(np.asarray(hi, np.uint32))
+        count = np.broadcast_to(np.asarray(count, np.uint32), lo.shape)
+        a, b = self._sketch_idx(lo, hi)
+        wide = self.sketch.astype(np.uint32)
+        np.add.at(wide[0], a, count)
+        np.add.at(wide[1], b, count)
+        self.sketch = np.minimum(wide, 255).astype(np.uint8)
+        self._sketch_obs += int(count.sum())
+        if self._sketch_obs >= self.aging_window:
+            self.sketch >>= 1  # periodic halving: the "adaptive" part
+            self._sketch_obs = 0
+
+    def _sketch_est(self, lo, hi):
+        lo = np.atleast_1d(np.asarray(lo, np.uint32))
+        hi = np.atleast_1d(np.asarray(hi, np.uint32))
+        a, b = self._sketch_idx(lo, hi)
+        return np.minimum(self.sketch[0][a], self.sketch[1][b])
+
+    # ------------------------------------------------------------ host probe
+    def _locate(self, lo: int, hi: int):
+        """(set, way) of a cached key, or (set, None)."""
+        s = int(hash64_32(np.uint32(lo), np.uint32(hi), _SET_SEED)
+                & np.uint32(self.nsets - 1))
+        for w in range(self.ways):
+            if (self.valid[s, w] and int(self.k_lo[s, w]) == lo
+                    and int(self.k_hi[s, w]) == hi):
+                return s, w
+        return s, None
+
+    def lookup(self, key: int):
+        """One CN-side probe.  Returns ``('hit', value)``, ``('neg', None)``
+        or ``('miss', None)`` — and counts the access toward admission."""
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        self._sketch_bump(lo, hi)
+        s, w = self._locate(lo, hi)
+        if w is not None:
+            self.ref[s, w] = 1
+            self.stats.hits += 1
+            val = (int(self.v_hi[s, w]) << 32) | int(self.v_lo[s, w])
+            return "hit", val
+        n = int(hash64_32(np.uint32(lo), np.uint32(hi), _NEG_SEED)
+                & np.uint32(self.nneg - 1))
+        if (self.nvalid[n] and int(self.nk_lo[n]) == lo
+                and int(self.nk_hi[n]) == hi):
+            self.stats.neg_hits += 1
+            return "neg", None
+        self.stats.misses += 1
+        return "miss", None
+
+    # -------------------------------------------------------------- fills
+    def fill(self, key: int, value: int | None) -> None:
+        """Offer a miss result for admission (value ``None`` == absent)."""
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        est = int(self._sketch_est(lo, hi)[0])
+        if est < self.admit_threshold:
+            return
+        if value is None:
+            self._neg_admit(lo, hi)
+        else:
+            self._admit_one(lo, hi, value & 0xFFFFFFFF,
+                            (value >> 32) & 0xFFFFFFFF, est)
+
+    def _neg_admit(self, lo: int, hi: int) -> None:
+        n = int(hash64_32(np.uint32(lo), np.uint32(hi), _NEG_SEED)
+                & np.uint32(self.nneg - 1))
+        self.nk_lo[n], self.nk_hi[n] = lo, hi
+        self.nvalid[n] = 1
+        self.stats.neg_admitted += 1
+
+    def _admit_one(self, lo: int, hi: int, vlo: int, vhi: int,
+                   est: int) -> None:
+        s, w = self._locate(lo, hi)
+        if w is None:
+            free = np.nonzero(self.valid[s] == 0)[0]
+            if free.size:
+                w = int(free[0])
+            else:
+                w = self._clock_victim(s)
+                vest = int(self._sketch_est(self.k_lo[s, w],
+                                            self.k_hi[s, w])[0])
+                if est < vest:  # TinyLFU gate: don't evict a hotter key
+                    return
+                self.stats.evicted += 1
+            self.stats.admitted += 1
+        self.k_lo[s, w], self.k_hi[s, w] = lo, hi
+        self.v_lo[s, w], self.v_hi[s, w] = vlo, vhi
+        self.valid[s, w] = 1
+        self.ref[s, w] = 1
+
+    def _clock_victim(self, s: int) -> int:
+        start = int(self.hand[s])
+        for i in range(2 * self.ways):
+            w = (start + i) % self.ways
+            if self.ref[s, w]:
+                self.ref[s, w] = 0  # second chance
+            else:
+                self.hand[s] = (w + 1) % self.ways
+                return w
+        w = start % self.ways
+        self.hand[s] = (w + 1) % self.ways
+        return w
+
+    # ---------------------------------------------------------- coherence
+    def note_update(self, key: int, value: int) -> None:
+        """A successful Update: refresh in place, clear stale absence."""
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        s, w = self._locate(lo, hi)
+        if w is not None:
+            self.v_lo[s, w] = value & 0xFFFFFFFF
+            self.v_hi[s, w] = (value >> 32) & 0xFFFFFFFF
+        self._neg_clear(lo, hi)
+
+    def note_insert(self, key: int, value: int) -> None:
+        """A successful Insert: the key now exists."""
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        s, w = self._locate(lo, hi)
+        if w is not None:  # insert resolved to in-place update
+            self.v_lo[s, w] = value & 0xFFFFFFFF
+            self.v_hi[s, w] = (value >> 32) & 0xFFFFFFFF
+        self._neg_clear(lo, hi)
+
+    def note_delete(self, key: int) -> None:
+        """A successful Delete: drop the positive entry."""
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        s, w = self._locate(lo, hi)
+        if w is not None:
+            self.valid[s, w] = 0
+            self.ref[s, w] = 0
+            self.stats.invalidated += 1
+
+    def _neg_clear(self, lo: int, hi: int) -> None:
+        n = int(hash64_32(np.uint32(lo), np.uint32(hi), _NEG_SEED)
+                & np.uint32(self.nneg - 1))
+        if (self.nvalid[n] and int(self.nk_lo[n]) == lo
+                and int(self.nk_hi[n]) == hi):
+            self.nvalid[n] = 0
+
+    def invalidate_where(self, pred) -> int:
+        """Drop every entry whose key satisfies ``pred(k_lo, k_hi) -> bool
+        mask`` (vectorised).  Used by the store's resize path."""
+        mask = self.valid.astype(bool) & pred(self.k_lo, self.k_hi)
+        n = int(mask.sum())
+        self.valid[mask] = 0
+        self.ref[mask] = 0
+        nmask = self.nvalid.astype(bool) & pred(self.nk_lo, self.nk_hi)
+        self.nvalid[nmask] = 0
+        self.stats.invalidated += n + int(nmask.sum())
+        return n
+
+    def invalidate_all(self) -> None:
+        self.stats.invalidated += int(self.valid.sum()) + int(self.nvalid.sum())
+        self.valid[:] = 0
+        self.ref[:] = 0
+        self.nvalid[:] = 0
+
+    # ------------------------------------------------------- batched paths
+    def probe_batch(self, lo: np.ndarray, hi: np.ndarray):
+        """Vectorised host probe: (hit, neg, v_lo, v_hi).  Does NOT update
+        any cache state — pair with ``observe_batch``."""
+        hit, vlo, vhi = cache_probe(lo, hi, self.arrays(), self.nsets)
+        neg = neg_probe(lo, hi, self.neg_arrays(), self.nneg) & ~hit
+        return hit, neg, vlo, vhi
+
+    def observe_batch(self, lo, hi, v_lo, v_hi, present, hit,
+                      neg=None) -> None:
+        """Account a batched Get: bump frequencies, refresh CLOCK refs for
+        hits, run admission for the (present) misses and the negative cache
+        for repeatedly-absent keys."""
+        lo = np.asarray(lo, np.uint32)
+        hi = np.asarray(hi, np.uint32)
+        present = np.asarray(present, bool)
+        hit = np.asarray(hit, bool)
+        neg = np.zeros_like(hit) if neg is None else np.asarray(neg, bool)
+        self.stats.hits += int(hit.sum())
+        self.stats.neg_hits += int(neg.sum())
+
+        u64 = join_u64(lo, hi)
+        uniq, first, counts = np.unique(u64, return_index=True,
+                                        return_counts=True)
+        ulo, uhi = lo[first], hi[first]
+        self._sketch_bump(ulo, uhi, counts)
+
+        # CLOCK ref refresh for hit keys (vectorised scatter).
+        if hit.any():
+            hs = (hash64_32(lo[hit], hi[hit], _SET_SEED)
+                  & np.uint32(self.nsets - 1)).astype(np.int64)
+            match = ((self.k_lo[hs] == lo[hit, None])
+                     & (self.k_hi[hs] == hi[hit, None])
+                     & (self.valid[hs] != 0))
+            rows = match.any(axis=1)
+            way = match.argmax(axis=1)
+            self.ref[hs[rows], way[rows]] = 1
+
+        missed = ~hit & ~neg
+        self.stats.misses += int(missed.sum())
+        if not missed.any():
+            return
+        est = self._sketch_est(ulo, uhi)
+        upresent = present[first]
+        # the caller's probe already told us who is cached — no re-probe
+        uhit = hit[first]
+        cand = (~uhit) & (est >= self.admit_threshold)
+        # positive admissions: python loop only over the hot candidates
+        for i in np.nonzero(cand & upresent)[0]:
+            self._admit_one(int(ulo[i]), int(uhi[i]),
+                            int(v_lo[first[i]]), int(v_hi[first[i]]),
+                            int(est[i]))
+        # negative admissions for repeatedly-missing keys
+        for i in np.nonzero(cand & ~upresent)[0]:
+            self._neg_admit(int(ulo[i]), int(uhi[i]))
+
+    # ------------------------------------------------------- device export
+    def arrays(self, xp=np):
+        return (xp.asarray(self.k_lo), xp.asarray(self.k_hi),
+                xp.asarray(self.v_lo), xp.asarray(self.v_hi),
+                xp.asarray(self.valid))
+
+    def neg_arrays(self, xp=np):
+        return (xp.asarray(self.nk_lo), xp.asarray(self.nk_hi),
+                xp.asarray(self.nvalid))
+
+
+# ---------------------------------------------------------------------------
+# pure probe kernels (numpy == jax.numpy, jit-compatible)
+
+
+def cache_probe(lo, hi, cache_arrays, nsets, xp=np):
+    """Set-associative probe over exported cache arrays.
+
+    Returns ``(hit, v_lo, v_hi)``; misses carry zeros.  Pure function of its
+    inputs — safe inside jit/shard_map (``repro.core.sharded_kvs`` runs it
+    before the routing all_to_all pair).
+    """
+    k_lo, k_hi, v_lo, v_hi, valid = cache_arrays
+    lo = xp.asarray(lo)
+    hi = xp.asarray(hi)
+    s = (hash64_32(lo, hi, _SET_SEED, xp)
+         & xp.uint32(nsets - 1)).astype(xp.int32)
+    hitw = ((k_lo[s] == lo[:, None]) & (k_hi[s] == hi[:, None])
+            & (valid[s] != 0))
+    hit = hitw.any(axis=-1)
+    way = xp.argmax(hitw, axis=-1).astype(xp.int32)
+    vlo = xp.where(hit, v_lo[s, way], xp.uint32(0))
+    vhi = xp.where(hit, v_hi[s, way], xp.uint32(0))
+    return hit, vlo, vhi
+
+
+def neg_probe(lo, hi, neg_arrays, nneg, xp=np):
+    """Direct-mapped negative-cache probe -> bool 'known absent' mask."""
+    nk_lo, nk_hi, nvalid = neg_arrays
+    lo = xp.asarray(lo)
+    hi = xp.asarray(hi)
+    n = (hash64_32(lo, hi, _NEG_SEED, xp)
+         & xp.uint32(nneg - 1)).astype(xp.int32)
+    return (nk_lo[n] == lo) & (nk_hi[n] == hi) & (nvalid[n] != 0)
+
+
+class ShardedCNCache:
+    """Per-device replicas of a host ``CNKeyCache`` for the SPMD Get path.
+
+    Every device in the mesh is a compute node; each holds its own copy of
+    the (host-maintained) cache arrays.  ``repro.core.sharded_kvs.place_cache``
+    device_puts the stack with one replica per device; the host refreshes
+    replicas between batches from the adaptive ``CNKeyCache``.
+    """
+
+    def __init__(self, cache: CNKeyCache, ndev: int):
+        self.cache = cache
+        self.ndev = int(ndev)
+
+    @property
+    def nsets(self) -> int:
+        return self.cache.nsets
+
+    def arrays(self):
+        return tuple(
+            np.broadcast_to(a, (self.ndev,) + a.shape).copy()
+            for a in self.cache.arrays())
+
+    def memory_bytes_total(self) -> int:
+        return self.cache.memory_bytes() * self.ndev

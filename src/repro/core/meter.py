@@ -30,6 +30,13 @@ class CommMeter:
     # compute-node side (abundant)
     cn_hash_ops: int = 0
     cn_cmp_ops: int = 0
+    # CN-cache attribution (repro.core.cn_cache): ops answered locally and
+    # the round trips / on-wire bytes those local answers saved
+    cache_hits: int = 0
+    cache_neg_hits: int = 0
+    saved_round_trips: int = 0
+    saved_req_bytes: int = 0
+    saved_resp_bytes: int = 0
 
     def add(self, n: int = 1, *, rts: int = 0, req: int = 0, resp: int = 0,
             mn_hash: int = 0, mn_cmp: int = 0, mn_reads: int = 0,
@@ -45,6 +52,20 @@ class CommMeter:
         self.mn_mem_writes += n * mn_writes
         self.cn_hash_ops += n * cn_hash
         self.cn_cmp_ops += n * cn_cmp
+
+    def add_cache_hit(self, n: int = 1, *, neg: bool = False,
+                      saved_rts: int = 1, saved_req: int = MSG_BYTES,
+                      saved_resp: int = 0) -> None:
+        """Account ``n`` Gets answered from the CN cache: the op happened,
+        no message crossed the wire, and the listed costs were *saved*."""
+        self.ops += n
+        if neg:
+            self.cache_neg_hits += n
+        else:
+            self.cache_hits += n
+        self.saved_round_trips += n * saved_rts
+        self.saved_req_bytes += n * saved_req
+        self.saved_resp_bytes += n * saved_resp
 
     def merge(self, other: "CommMeter") -> None:
         for f in dataclasses.fields(self):

@@ -22,6 +22,12 @@ Batched device paths (`get_batch`, `update_batch`, `insert_batch` fast case)
 are jit-compatible: CN math is vectorised; MN work is pure gathers — the
 communication seam between the two is where the sharded engine
 (``repro.core.sharded_kvs``) places its single all_to_all pair.
+
+An optional CN-side hot-key cache (``repro.core.cn_cache``) sits in front
+of the round trip: pass ``cn_cache=CNKeyCache(budget)`` and Gets consult it
+first (answering skewed-workload hits locally), while Update/Delete/Insert
+keep it coherent.  ``cn_cache=None`` (default) is byte-for-byte the plain
+protocol.
 """
 
 from __future__ import annotations
@@ -31,8 +37,9 @@ import dataclasses
 import numpy as np
 
 from repro.core import ludo, slots
+from repro.core.cn_cache import CNKeyCache
 from repro.core.hashing import fingerprint6, slot_hash, split_u64
-from repro.core.meter import CommMeter
+from repro.core.meter import MSG_BYTES, CommMeter
 from repro.core.overflow import OverflowCache
 
 GET_REQ_BYTES = 8  # ind_bucket + ind_slot, packed (padded to MSG_BYTES on wire)
@@ -41,6 +48,36 @@ KV_BLOCK_BYTES = 32  # klen(8)+vlen(8)+key(8)+value(8) — the paper's workloads
 
 class ShardFullError(RuntimeError):
     pass
+
+
+# What one CN-cache answer saves on the wire: a positive hit skips the 1-RT
+# Get; a negative hit skips the full 2-RT miss-plus-makeup route.  Shared by
+# every cache front (shard, store) so the accounting cannot diverge.
+CACHE_HIT_SAVINGS = dict(saved_rts=1, saved_req=MSG_BYTES,
+                         saved_resp=KV_BLOCK_BYTES)
+CACHE_NEG_SAVINGS = dict(saved_rts=2, saved_req=2 * MSG_BYTES,
+                         saved_resp=2 * KV_BLOCK_BYTES)
+
+
+def cached_get(cache, meter, key: int, mn_get):
+    """Front a scalar Get with a CN cache: probe, account, fall through to
+    ``mn_get(key)`` on a miss and offer the result for admission."""
+    state, val = cache.lookup(key)
+    if state == "hit":
+        meter.add_cache_hit(1, **CACHE_HIT_SAVINGS)
+        return GetResult(val, 0, False)
+    if state == "neg":
+        meter.add_cache_hit(1, neg=True, **CACHE_NEG_SAVINGS)
+        return GetResult(None, 0, False)
+    res = mn_get(key)
+    cache.fill(key, res.value)
+    return res
+
+
+def meter_cache_batch(meter, n_hit: int, n_neg: int) -> None:
+    """Account a batched probe's hit/neg lanes (same savings as scalar)."""
+    meter.add_cache_hit(n_hit, **CACHE_HIT_SAVINGS)
+    meter.add_cache_hit(n_neg, neg=True, **CACHE_NEG_SAVINGS)
 
 
 @dataclasses.dataclass
@@ -57,7 +94,8 @@ class OutbackShard:
                  load_factor: float = 0.95, heap_slack: float = 1.30,
                  overflow_frac: float = 0.08, rng_seed: int = 0,
                  num_buckets: int | None = None, oth_ma: int | None = None,
-                 oth_mb: int | None = None, heap_cap: int | None = None):
+                 oth_mb: int | None = None, heap_cap: int | None = None,
+                 cn_cache: CNKeyCache | None = None):
         keys = np.asarray(keys, dtype=np.uint64)
         values = np.asarray(values, dtype=np.uint64)
         n = keys.shape[0]
@@ -82,16 +120,21 @@ class OutbackShard:
         self.overflow = OverflowCache(max(64, int(n * overflow_frac)))
         self.meter = CommMeter()
         self.frozen = False  # resize in progress: inserts/deletes rejected
+        self.cn_cache = cn_cache  # optional CN-side hot-key cache
 
         # Bulk-populate from the build assignment.
         vlo, vhi = split_u64(values)
         addrs = self._heap_alloc_bulk(lo, hi, vlo, vhi)
         fp = fingerprint6(lo, hi)
         s_lo, s_hi = slots.pack(0, fp, KV_BLOCK_BYTES, addrs, 0)
-        placed = build.bucket.astype(np.int64)
-        self.slots_lo[placed, build.slot] = s_lo
-        self.slots_hi[placed, build.slot] = s_hi
-        for i in build.fallback:  # statistically empty (see ludo.py)
+        # Fallback keys carry a sentinel bucket (uint32 -1): mask them out of
+        # the scatter — at tiny n (post-split tables) they are NOT rare.
+        ok = np.ones(n, dtype=bool)
+        ok[build.fallback] = False
+        placed = build.bucket[ok].astype(np.int64)
+        self.slots_lo[placed, build.slot[ok]] = s_lo[ok]
+        self.slots_hi[placed, build.slot[ok]] = s_hi[ok]
+        for i in build.fallback:
             self.overflow.insert(int(lo[i]), int(hi[i]), int(addrs[i]))
         self.n_keys = n
 
@@ -127,6 +170,12 @@ class OutbackShard:
 
     # ------------------------------------------------------------- protocols
     def get(self, key: int) -> GetResult:
+        """Get: CN cache first (0 RT on a hit), else the §4.3 protocol."""
+        if self.cn_cache is None:
+            return self._get_mn(key)
+        return cached_get(self.cn_cache, self.meter, key, self._get_mn)
+
+    def _get_mn(self, key: int) -> GetResult:
         """Single-op Get, exactly the paper's Fig. 6(a) message sequence."""
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         # CN: locator math (5 hashes), then ONE round trip carrying 8 bytes.
@@ -173,6 +222,14 @@ class OutbackShard:
         return GetResult(None, 2, True)
 
     def insert(self, key: int, value: int) -> str:
+        """Insert; afterwards the key exists, so any negative-cache entry
+        for it is cleared (and a resolved in-place update refreshed)."""
+        case = self._insert_mn(key, value)
+        if case != "frozen" and self.cn_cache is not None:
+            self.cn_cache.note_insert(key, value)
+        return case
+
+    def _insert_mn(self, key: int, value: int) -> str:
         """Insert per §4.3.2. Returns the resolution case for accounting:
         'slot' | 'reseed' | 'overflow' | 'update' | 'frozen'."""
         if self.frozen:
@@ -199,6 +256,18 @@ class OutbackShard:
                     self.heap_vlo[a] = value & 0xFFFFFFFF
                     self.heap_vhi[a] = (value >> 32) & 0xFFFFFFFF
                     return "update"
+
+        # The key may already live in the overflow cache (spilled by an
+        # earlier insert, possibly under a since-rotated seed): resolve to
+        # Update there, or a re-insert would duplicate it — n_keys drifts
+        # and Delete of the slot copy resurrects the overflow copy.
+        addr0, probes = self.overflow.lookup(lo, hi)
+        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_reads=probes)
+        if addr0 is not None:
+            self.heap_vlo[addr0] = value & 0xFFFFFFFF
+            self.heap_vhi[addr0] = (value >> 32) & 0xFFFFFFFF
+            self.meter.add(0, mn_writes=1)
+            return "update"
 
         addr = self._heap_write(lo, hi, value & 0xFFFFFFFF, (value >> 32) & 0xFFFFFFFF)
 
@@ -249,6 +318,13 @@ class OutbackShard:
         return "overflow"
 
     def update(self, key: int, value: int) -> bool:
+        """Update; on success the CN cache entry is refreshed (coherence)."""
+        ok = self._update_mn(key, value)
+        if ok and self.cn_cache is not None:
+            self.cn_cache.note_update(key, value)
+        return ok
+
+    def _update_mn(self, key: int, value: int) -> bool:
         """Update per §4.3.3 (1 RT; fp + full-key verify on the MN)."""
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         b_arr, s_arr = self.cn.locate(np.uint32([lo]), np.uint32([hi]))
@@ -287,6 +363,13 @@ class OutbackShard:
         return False
 
     def delete(self, key: int) -> bool:
+        """Delete; on success the CN cache entry is dropped (coherence)."""
+        ok = self._delete_mn(key)
+        if ok and self.cn_cache is not None:
+            self.cn_cache.note_delete(key)
+        return ok
+
+    def _delete_mn(self, key: int) -> bool:
         """Delete per §4.3.3: mark the slot length zero."""
         if self.frozen:
             return False
@@ -323,22 +406,100 @@ class OutbackShard:
                 xp.asarray(self.heap_klo), xp.asarray(self.heap_khi),
                 xp.asarray(self.heap_vlo), xp.asarray(self.heap_vhi))
 
-    def get_batch(self, keys: np.ndarray, xp=np, cn=None, mn=None):
+    def get_batch(self, keys: np.ndarray, xp=np, cn=None, mn=None,
+                  resolve_makeup: bool | None = None):
         """Vectorised Get over a key batch.
 
         Returns (v_lo, v_hi, match).  Pure function of (cn, mn) arrays — pass
-        device arrays + xp=jnp to run it jitted; mismatches (stale seeds /
-        overflow residents) are resolved by the host makeup path.
+        device arrays + xp=jnp to run it jitted.  Mismatched lanes (stale
+        seeds / overflow residents) are resolved by the host Makeup-Get when
+        ``resolve_makeup`` is true — the default whenever a CN cache is
+        attached, so the cache only ever learns resolved truths; pass
+        ``resolve_makeup=False``/``True`` to override.
+
+        With a CN cache attached, the batch is probed first: hit lanes are
+        answered from the cache (no round trip is accounted for them) and
+        the cache adapts from the observed miss results.
         """
-        lo, hi = split_u64(np.asarray(keys, dtype=np.uint64))
-        lo, hi = xp.asarray(lo), xp.asarray(hi)
+        keys = np.asarray(keys, dtype=np.uint64)
+        h_lo, h_hi = split_u64(keys)
         cn = self.cn_arrays(xp) if cn is None else cn
         mn = self.mn_arrays(xp) if mn is None else mn
-        out = outback_get_batch(lo, hi, cn, mn, self.cn.othello, self.cn.num_buckets, xp)
         n = int(keys.shape[0])
-        self.meter.add(n, rts=1, req=GET_REQ_BYTES, resp=KV_BLOCK_BYTES,
-                       cn_hash=5, cn_cmp=1, mn_reads=2)
-        return out
+        if resolve_makeup is None:
+            resolve_makeup = self.cn_cache is not None
+        if self.cn_cache is None:
+            out = outback_get_batch(xp.asarray(h_lo), xp.asarray(h_hi), cn,
+                                    mn, self.cn.othello, self.cn.num_buckets, xp)
+            self.meter.add(n, rts=1, req=GET_REQ_BYTES, resp=KV_BLOCK_BYTES,
+                           cn_hash=5, cn_cmp=1, mn_reads=2)
+            if resolve_makeup:
+                out = self._resolve_makeups(keys, *out, xp=xp)
+            return out
+        # ---- CN-cache stage: hits never cross the wire -------------------
+        hit, neg, c_vlo, c_vhi = self.cn_cache.probe_batch(h_lo, h_hi)
+        n_hit, n_neg = int(hit.sum()), int(neg.sum())
+        self.meter.add(n - n_hit - n_neg, rts=1, req=GET_REQ_BYTES,
+                       resp=KV_BLOCK_BYTES, cn_hash=5, cn_cmp=1, mn_reads=2)
+        meter_cache_batch(self.meter, n_hit, n_neg)
+        miss = ~hit & ~neg
+        if xp is np:
+            # host path: only the misses touch the MN arrays
+            v_lo, v_hi = c_vlo.copy(), c_vhi.copy()
+            match = hit.copy()
+            if miss.any():
+                m_out = outback_get_batch(h_lo[miss], h_hi[miss], cn, mn,
+                                          self.cn.othello,
+                                          self.cn.num_buckets, np)
+                if resolve_makeup:
+                    m_out = self._resolve_makeups(keys[miss], *m_out, xp=np)
+                v_lo[miss], v_hi[miss], match[miss] = m_out
+            self.cn_cache.observe_batch(h_lo, h_hi, v_lo, v_hi, match,
+                                        hit, neg)
+            return v_lo, v_hi, match
+        # device path: full-batch kernel keeps shapes static for jit; hit
+        # lanes are merged over the (discarded) MN result
+        v_lo, v_hi, match = outback_get_batch(
+            xp.asarray(h_lo), xp.asarray(h_hi), cn, mn, self.cn.othello,
+            self.cn.num_buckets, xp)
+        if resolve_makeup:
+            # only true misses take the makeup trip: cached and known-absent
+            # lanes already have their answer
+            v_lo, v_hi, match = self._resolve_makeups(
+                keys, v_lo, v_hi, match, xp=xp, skip=hit | neg)
+        self.cn_cache.observe_batch(h_lo, h_hi, np.asarray(v_lo),
+                                    np.asarray(v_hi), np.asarray(match),
+                                    hit, neg)
+        hit_x = xp.asarray(hit)
+        v_lo = xp.where(hit_x, xp.asarray(c_vlo), v_lo)
+        v_hi = xp.where(hit_x, xp.asarray(c_vhi), v_hi)
+        match = xp.where(hit_x, True, match)
+        return v_lo, v_hi, match
+
+    def _resolve_makeups(self, keys: np.ndarray, v_lo, v_hi, match, *,
+                         xp=np, skip=None):
+        """Host Makeup-Get for mismatched lanes of a batched Get (overflow
+        residents / stale CN seeds) — the §4.3.1 ind_slot=-1 path, metered
+        per lane by ``_makeup_get`` itself."""
+        pending = ~np.asarray(match)
+        if skip is not None:
+            pending &= ~np.asarray(skip)
+        idx = np.nonzero(pending)[0]
+        if idx.size == 0:
+            return v_lo, v_hi, match
+        v_lo = np.asarray(v_lo).copy()
+        v_hi = np.asarray(v_hi).copy()
+        match = np.asarray(match).copy()
+        for i in idx:
+            k = int(keys[i])
+            lo, hi = k & 0xFFFFFFFF, (k >> 32) & 0xFFFFFFFF
+            b, _ = self.cn.locate(np.uint32([lo]), np.uint32([hi]))
+            r = self._makeup_get(lo, hi, int(b[0]))
+            if r.value is not None:
+                v_lo[i] = r.value & 0xFFFFFFFF
+                v_hi[i] = (r.value >> 32) & 0xFFFFFFFF
+                match[i] = True
+        return xp.asarray(v_lo), xp.asarray(v_hi), xp.asarray(match)
 
     # ------------------------------------------------------------ accounting
     def cn_memory_bytes(self) -> int:

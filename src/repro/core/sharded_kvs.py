@@ -15,6 +15,10 @@ Placement (mesh ``(data=D, model=M)``):
 A batched Get is exactly the paper's message flow, with collectives as the
 network:
 
+  0. (optional) CN-cache probe: each device probes its ``ShardedCNCache``
+     replica (``repro.core.cn_cache``); hit lanes are answered locally and
+     marked with an out-of-range bin target so they never enter the routing
+     bins — under zipfian skew most of the batch stops here;
   1. service-layer routing: bin by key-shard, ``all_to_all`` over ``model``
      (the paper's front-end forwarding — not an index round trip);
   2. CN compute on the receiving device: Othello + seeds -> (bucket, slot);
@@ -42,7 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import ludo, slots
+from repro.core.cn_cache import ShardedCNCache, cache_probe
 from repro.core.hashing import hash64_32, slot_hash, split_u64
 from repro.core.outback import OutbackShard
 
@@ -175,14 +181,19 @@ def bin_by(tgt: jnp.ndarray, nbins: int, cap: int):
 
     Returns ``idxmap`` (nbins*cap,) int32 of source positions (== B for empty
     lanes): gather through it to fill bins, scatter through it to un-bin.
+    Positions with ``tgt >= nbins`` never enter any bin (the CN-cache probe
+    stage marks its hits this way so they skip the round trip entirely).
     """
     B = tgt.shape[0]
     tgt = tgt.astype(jnp.int32)
     order = jnp.argsort(tgt, stable=True).astype(jnp.int32)
     sorted_tgt = tgt[order]
     start = jnp.searchsorted(sorted_tgt, jnp.arange(nbins, dtype=jnp.int32))
-    pos = jnp.arange(B, dtype=jnp.int32) - start[sorted_tgt].astype(jnp.int32)
-    dest = jnp.where(pos < cap, sorted_tgt * cap + pos, nbins * cap)
+    in_range = sorted_tgt < nbins
+    pos = jnp.arange(B, dtype=jnp.int32) - start[
+        jnp.minimum(sorted_tgt, nbins - 1)].astype(jnp.int32)
+    dest = jnp.where((pos < cap) & in_range, sorted_tgt * cap + pos,
+                     nbins * cap)
     idxmap = jnp.full((nbins * cap,), B, dtype=jnp.int32)
     idxmap = idxmap.at[dest].set(order, mode="drop")
     return idxmap
@@ -211,11 +222,19 @@ def _a2a(x, axis):
 
 
 def make_get_fn(mesh: Mesh, st: ShardedKVSState, batch_per_device: int,
-                *, capacity_slack: float = 2.0, variant: str = "outback"):
+                *, capacity_slack: float = 2.0, variant: str = "outback",
+                cache: ShardedCNCache | None = None):
     """Build the jitted SPMD batched-Get for this mesh/state geometry.
 
     ``variant``: 'outback' (1 index RT) or 'race' (2 dependent index RTs,
     the one-sided analogue).  Returns (jitted_fn, (cap_m, cap_d)).
+
+    With ``cache`` (one CN-cache replica per device, see ``place_cache``),
+    every device probes its replica *before* the routing pair: hit lanes
+    are answered locally, marked with an out-of-range shard target so they
+    never enter the routing bins, and merged back at the end.  The fn then
+    takes ``(q_lo, q_hi, *cache_arrays, *state_arrays)`` and also returns
+    the per-lane hit mask (for host-side adaptation/accounting).
     """
     D = int(mesh.shape["data"])
     M = int(mesh.shape["model"])
@@ -253,12 +272,21 @@ def make_get_fn(mesh: Mesh, st: ShardedKVSState, batch_per_device: int,
         return k_lo, k_hi, h_vlo[a_loc], h_vhi[a_loc]
 
     def spmd_get(q_lo, q_hi, *arrays):
+        if cache is not None:
+            cache_arrays = tuple(a[0] for a in arrays[:5])
+            arrays = arrays[5:]
         (words_a, words_b, seeds, oth_meta, slots_lo, slots_hi,
          h_klo, h_khi, h_vlo, h_vhi) = [a[0] for a in arrays]
         B = q_lo.shape[0]
 
-        # -- phase 0: service-layer routing to shard columns ('model') ------
+        # -- CN-cache probe: hits never enter the routing bins --------------
         shard = (hash64_32(q_lo, q_hi, _ROUTE_SEED, jnp) % jnp.uint32(M))
+        if cache is not None:
+            c_hit, c_vlo, c_vhi = cache_probe(q_lo, q_hi, cache_arrays,
+                                              cache.nsets, jnp)
+            shard = jnp.where(c_hit, jnp.uint32(M), shard)
+
+        # -- phase 0: service-layer routing to shard columns ('model') ------
         route_m = bin_by(shard, M, cap_m)
         s_lo = _a2a(take(q_lo, route_m, SENT).reshape(M, cap_m), "model")
         s_hi = _a2a(take(q_hi, route_m, SENT).reshape(M, cap_m), "model")
@@ -326,12 +354,20 @@ def make_get_fn(mesh: Mesh, st: ShardedKVSState, batch_per_device: int,
         resp_m = _a2a(back.reshape(M, cap_m, 4), "model").reshape(-1, 4)
         final = unbin(route_m, resp_m, B, SENT)
         match = (final[:, 0] == q_lo) & (final[:, 1] == q_hi)
-        return final[:, 2], final[:, 3], match
+        if cache is None:
+            return final[:, 2], final[:, 3], match
+        v_lo = jnp.where(c_hit, c_vlo, final[:, 2])
+        v_hi = jnp.where(c_hit, c_vhi, final[:, 3])
+        return v_lo, v_hi, match | c_hit, c_hit
 
     qspec = P(("data", "model"))
-    fn = jax.shard_map(spmd_get, mesh=mesh,
-                       in_specs=(qspec, qspec, *st.array_specs()),
-                       out_specs=(qspec, qspec, qspec))
+    cache_specs = _cache_specs() if cache is not None else ()
+    out_specs = ((qspec, qspec, qspec) if cache is None
+                 else (qspec, qspec, qspec, qspec))
+    fn = shard_map(spmd_get, mesh=mesh,
+                       in_specs=(qspec, qspec, *cache_specs,
+                                 *st.array_specs()),
+                       out_specs=out_specs)
     return jax.jit(fn), (cap_m, cap_d)
 
 
@@ -340,3 +376,20 @@ def place_state(mesh: Mesh, st: ShardedKVSState):
     return tuple(
         jax.device_put(arr, NamedSharding(mesh, spec))
         for arr, spec in zip(st.arrays(), st.array_specs()))
+
+
+def _cache_specs():
+    # one CN-cache replica per device: leading axis sharded over the whole
+    # mesh, so each device's block is its own (nsets, ways) copy
+    spec = P(("data", "model"))
+    return (spec,) * 5
+
+
+def place_cache(mesh: Mesh, cache: ShardedCNCache):
+    """device_put one CN-cache replica per device (leading ndev axis)."""
+    ndev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    if cache.ndev != ndev:
+        raise ValueError(f"cache built for {cache.ndev} devices, mesh has {ndev}")
+    return tuple(
+        jax.device_put(arr, NamedSharding(mesh, spec))
+        for arr, spec in zip(cache.arrays(), _cache_specs()))

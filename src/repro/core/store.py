@@ -26,9 +26,10 @@ import time
 
 import numpy as np
 
+from repro.core.cn_cache import CNKeyCache
 from repro.core.hashing import hash64_32, split_u64, splitmix64
 from repro.core.meter import CommMeter, MSG_BYTES
-from repro.core.outback import OutbackShard
+from repro.core.outback import (OutbackShard, cached_get, meter_cache_batch)
 
 _DIR_SEED = 0xD14EC7
 
@@ -47,7 +48,8 @@ class OutbackStore:
 
     def __init__(self, keys: np.ndarray, values: np.ndarray, *,
                  load_factor: float = 0.85, initial_depth: int = 0,
-                 num_compute_nodes: int = 2, rng_seed: int = 0):
+                 num_compute_nodes: int = 2, rng_seed: int = 0,
+                 cn_cache_budget_bytes: int = 0):
         self.load_factor = load_factor
         self.num_compute_nodes = num_compute_nodes
         self.global_depth = initial_depth
@@ -55,6 +57,10 @@ class OutbackStore:
         self.meter = CommMeter()
         self.resize_events: list[ResizeEvent] = []
         self._op_count = 0
+        # Every compute node gets the same fixed cache budget; the store
+        # models one CN's view (tables are shared, so one cache suffices).
+        self.cn_cache = (CNKeyCache(cn_cache_budget_bytes)
+                         if cn_cache_budget_bytes else None)
 
         keys = np.asarray(keys, dtype=np.uint64)
         values = np.asarray(values, dtype=np.uint64)
@@ -88,11 +94,17 @@ class OutbackStore:
     # ------------------------------------------------------------ data ops
     def get(self, key: int):
         self._op_count += 1
-        return self._table(key).get(key)
+        if self.cn_cache is None:
+            return self._table(key).get(key)
+        return cached_get(self.cn_cache, self.meter, key,
+                          lambda k: self._table(k).get(k))
 
     def update(self, key: int, value: int) -> bool:
         self._op_count += 1
-        return self._table(key).update(key, value)
+        ok = self._table(key).update(key, value)
+        if ok and self.cn_cache is not None:
+            self.cn_cache.note_update(key, value)
+        return ok
 
     def delete(self, key: int) -> bool:
         self._op_count += 1
@@ -100,7 +112,10 @@ class OutbackStore:
         if t.frozen:
             self._buffer.append(("delete", key, 0))
             return False
-        return t.delete(key)
+        ok = t.delete(key)
+        if ok and self.cn_cache is not None:
+            self.cn_cache.note_delete(key)
+        return ok
 
     def insert(self, key: int, value: int) -> str:
         self._op_count += 1
@@ -111,16 +126,45 @@ class OutbackStore:
             self.meter.add(rts=1, req=MSG_BYTES, resp=8)
             return "frozen"
         case = t.insert(key, value)
+        if self.cn_cache is not None:
+            self.cn_cache.note_insert(key, value)
         if t.needs_resize() and self._open_split is None:
             self._split(self.directory[self._entry(key)])
         return case
 
     def get_batch(self, keys: np.ndarray, xp=np):
-        """Vectorised Get across the directory (single-table fast path)."""
+        """Vectorised Get across the directory (single-table fast path).
+
+        With a CN cache, hit lanes are answered locally and only misses are
+        dispatched to the tables."""
         self._op_count += len(keys)
-        if len(self.tables) == 1:
-            return self.tables[0].get_batch(keys, xp)
+        if self.cn_cache is None:
+            return self._get_batch_tables(np.asarray(keys, np.uint64), xp)
         keys = np.asarray(keys, dtype=np.uint64)
+        h_lo, h_hi = split_u64(keys)
+        hit, neg, c_vlo, c_vhi = self.cn_cache.probe_batch(h_lo, h_hi)
+        meter_cache_batch(self.meter, int(hit.sum()), int(neg.sum()))
+        v_lo = np.asarray(c_vlo).copy()
+        v_hi = np.asarray(c_vhi).copy()
+        match = np.asarray(hit).copy()
+        miss = ~hit & ~neg
+        if miss.any():
+            m_lo, m_hi, m_match = self._get_batch_tables(keys[miss], xp,
+                                                         resolve_makeup=True)
+            v_lo[miss] = np.asarray(m_lo)
+            v_hi[miss] = np.asarray(m_hi)
+            match[miss] = np.asarray(m_match)
+        # full-batch observation: hit lanes keep their sketch counts and
+        # CLOCK ref bits fresh, or the hot set would decay and churn
+        self.cn_cache.observe_batch(h_lo, h_hi, v_lo, v_hi, match, hit, neg)
+        return v_lo, v_hi, match
+
+    def _get_batch_tables(self, keys: np.ndarray, xp=np,
+                          resolve_makeup: bool = False):
+        """Dispatch a key batch to the owning DMPH tables (the MN path)."""
+        if len(self.tables) == 1:
+            return self.tables[0].get_batch(keys, xp,
+                                            resolve_makeup=resolve_makeup)
         idx = (self._dir_hash(keys) & np.uint64((1 << self.global_depth) - 1)).astype(np.int64)
         v_lo = np.zeros(keys.shape[0], np.uint32)
         v_hi = np.zeros(keys.shape[0], np.uint32)
@@ -128,7 +172,8 @@ class OutbackStore:
         tbl = np.asarray([self.directory[i] for i in idx], dtype=np.int64)
         for t in np.unique(tbl):
             m = tbl == t
-            lo, hi, mt = self.tables[int(t)].get_batch(keys[m], xp)
+            lo, hi, mt = self.tables[int(t)].get_batch(
+                keys[m], xp, resolve_makeup=resolve_makeup)
             v_lo[m], v_hi[m], match[m] = np.asarray(lo), np.asarray(hi), np.asarray(mt)
         return v_lo, v_hi, match
 
@@ -182,6 +227,21 @@ class OutbackStore:
             if self.directory[e] == t_idx and (e >> depth) & 1:
                 self.directory[e] = hi_idx
 
+        # CN-cache coherence: entries filled from the stale table during the
+        # resize window may be newer than the rebuilt tables (a §4.4 Update
+        # races the snapshot), so drop everything now routed to either
+        # successor — the same sync point at which CNs fetch the new locator.
+        if self.cn_cache is not None:
+            dir_mask = np.uint32((1 << self.global_depth) - 1)
+            directory = np.asarray(self.directory, np.int64)
+
+            def routed_to_successors(k_lo, k_hi):
+                e = hash64_32(k_lo, k_hi, _DIR_SEED) & dir_mask
+                t = directory[e.astype(np.int64)]
+                return (t == t_idx) | (t == hi_idx)
+
+            self.cn_cache.invalidate_where(routed_to_successors)
+
         buffered, self._buffer = self._buffer, []
         self._open_split = None
         self.resize_events.append(ResizeEvent(
@@ -203,11 +263,15 @@ class OutbackStore:
         return total
 
     def cn_memory_bytes(self) -> int:
+        """Per-compute-node memory: every CN caches all live locators plus
+        its (fixed-budget) hot-key cache."""
         seen, total = set(), 0
         for t in self.tables:
             if id(t) not in seen:
                 seen.add(id(t))
                 total += t.cn_memory_bytes()
+        if self.cn_cache is not None:
+            total += self.cn_cache.memory_bytes()
         return total
 
     def meter_total(self) -> CommMeter:
@@ -238,11 +302,17 @@ class SplitHandle:
         t0 = time.perf_counter()
         keys, vals = table.live_pairs()
         side = (store._dir_hash(keys) >> np.uint64(depth)) & np.uint64(1) != 0
+        # Extendible hashing (Fig. 7): each successor inherits the PARENT's
+        # table geometry, so a split genuinely halves the load and buys real
+        # insert headroom (content-sized successors re-trigger immediately).
+        nb = table.cn.num_buckets
         self.t_lo = OutbackShard(keys[~side], vals[~side],
                                  load_factor=store.load_factor,
+                                 num_buckets=nb,
                                  rng_seed=store.rng_seed + 101 * len(store.tables))
         self.t_hi = OutbackShard(keys[side], vals[side],
                                  load_factor=store.load_factor,
+                                 num_buckets=nb,
                                  rng_seed=store.rng_seed + 101 * len(store.tables) + 1)
         self.n_live = int(keys.shape[0])
         self.rebuild_seconds = time.perf_counter() - t0

@@ -40,6 +40,7 @@ from repro.models import attention as att
 from repro.models import mamba as mam
 from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
+from repro.compat import shard_map
 from repro.models.common import KeyGen, rms_norm, silu
 
 
@@ -450,7 +451,7 @@ class LM:
             return jax.lax.psum(e, "model")
 
         ba = self.batch_axes
-        fn = jax.shard_map(
+        fn = shard_map(
             body, mesh=self.mesh,
             in_specs=(P("model", None), P(ba, None)),
             out_specs=P(ba, None, None))
@@ -643,7 +644,7 @@ class LM:
             return tot[None]
 
         ba = self.batch_axes
-        fn = jax.shard_map(
+        fn = shard_map(
             spmd, mesh=self.mesh,
             in_specs=(P("model", None), P(ba, None, None), P(ba, None)),
             out_specs=P((ba,) if isinstance(ba, str) else ba))

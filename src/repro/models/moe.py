@@ -22,6 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models.common import silu
 
 
@@ -242,7 +243,7 @@ def moe_spmd(p, x, cfg, mesh, batch_axes=None):
         shared_specs = (col, col, row)
     ba = batch_axes
     ba_t = (ba,) if isinstance(ba, str) else ba
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(ba, None, None), P(None, None), ep, ep, ep,
                   *shared_specs),

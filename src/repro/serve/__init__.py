@@ -1,3 +1,4 @@
 from repro.serve.engine import Engine, EngineStats, Request
+from repro.serve.session_store import KVSessionStore
 
-__all__ = ["Engine", "EngineStats", "Request"]
+__all__ = ["Engine", "EngineStats", "KVSessionStore", "Request"]

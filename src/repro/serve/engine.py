@@ -10,7 +10,10 @@ Attention-free / hybrid archs (rwkv6, jamba) get **session state parking**
 through the Outback KVS (DESIGN.md §Arch-applicability): when a client
 pauses a conversation the lane's recurrent state is serialized to the
 session store under ``request_id`` — a real KVS workload served by the
-paper's index — and restored on resume without re-prefilling.
+paper's index — and restored on resume without re-prefilling.  Pass a
+``repro.serve.session_store.KVSessionStore`` as ``session_store`` and the
+blobs actually travel through the index, with resumes reading through the
+CN-side hot-key cache; the default remains an in-process dict.
 """
 
 from __future__ import annotations
@@ -46,7 +49,7 @@ class EngineStats:
 class Engine:
     def __init__(self, model: LM, params, *, lanes: int = 4,
                  max_seq: int = 256, sampler: Callable | None = None,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None, session_store=None):
         self.model = model
         self.params = params
         self.lanes = lanes
@@ -59,6 +62,7 @@ class Engine:
         self.to_prefill: list[tuple[int, list[int]]] = []  # (lane, tokens)
         self.stats = EngineStats()
         self.parked_states: dict[int, dict] = {}
+        self.session_store = session_store  # optional KVSessionStore
         self._step = jax.jit(model.decode_step)
 
     # ------------------------------------------------------------- intake
@@ -124,6 +128,9 @@ class Engine:
                     req.done = True
                     self.stats.finished += 1
                     self.active[ln] = None
+                    if self.session_store is not None:
+                        # reclaim any parked blob this session left behind
+                        self.session_store.delete(req.rid)
 
     def _decode_lane_token(self, lane: int, tok: int) -> None:
         tokens = np.zeros((self.lanes, 1), np.int32)
@@ -150,18 +157,46 @@ class Engine:
 
     # ------------------------------------------------ session parking (ssm)
     def park(self, lane: int) -> int:
-        """Serialize a lane's recurrent state to the session store."""
+        """Serialize a lane's recurrent state to the session store.
+
+        With a ``session_store`` the state bytes go through the Outback KVS
+        (per-leaf structure stays host-side); otherwise they stay in an
+        in-process dict."""
         req = self.active[lane]
         assert req is not None
         state = jax.tree.map(lambda c: np.asarray(c[:, lane] if c.ndim >= 2
                                                   else c[lane]), self.cache)
-        self.parked_states[req.rid] = {"state": state, "req": req}
+        if self.session_store is not None:
+            leaves, treedef = jax.tree.flatten(state)
+            blob = b"".join(np.ascontiguousarray(x).tobytes() for x in leaves)
+            self.session_store.put(req.rid, blob)
+            meta = [(x.shape, x.dtype, x.nbytes) for x in leaves]
+            self.parked_states[req.rid] = {"treedef": treedef, "meta": meta,
+                                           "req": req}
+        else:
+            self.parked_states[req.rid] = {"state": state, "req": req}
         self.active[lane] = None
         self.stats.parked += 1
         return req.rid
 
     def resume(self, rid: int) -> int:
-        entry = self.parked_states.pop(rid)
+        entry = self.parked_states[rid]
+        if self.session_store is not None:
+            blob = self.session_store.get(rid)
+            if blob is None:  # keep the metadata so a retry can succeed
+                raise KeyError(f"session {rid} lost from the KVS")
+            leaves, off = [], 0
+            for shape, dtype, nbytes in entry["meta"]:
+                leaves.append(np.frombuffer(blob[off:off + nbytes],
+                                            dtype=dtype).reshape(shape))
+                off += nbytes
+            state = jax.tree.unflatten(entry["treedef"], leaves)
+            # The blob stays put: a re-park of this rid overwrites the same
+            # chunk keys in place (insert resolves to update), and repeat
+            # resumes keep hitting the CN cache.  Reclaimed on finish.
+        else:
+            state = entry["state"]
+        del self.parked_states[rid]
         lane = next(ln for ln in range(self.lanes) if self.active[ln] is None)
         self._reset_lane(lane)
 
@@ -169,7 +204,7 @@ class Engine:
             s = jnp.asarray(s)
             return c.at[:, lane].set(s) if c.ndim >= 2 else c.at[lane].set(s)
 
-        self.cache = jax.tree.map(put, self.cache, entry["state"])
+        self.cache = jax.tree.map(put, self.cache, state)
         self.active[lane] = entry["req"]
         self.stats.resumed += 1
         return lane

@@ -1,0 +1,99 @@
+"""Session-state parking backed by the Outback KVS, read through the CN cache.
+
+The serving engine parks paused conversations' recurrent state (rwkv6 /
+jamba lanes) as opaque blobs.  Here the blob actually travels through the
+paper's index: it is chunked into 8-byte words, each stored under a
+derived 64-bit key via the Insert protocol, and read back with the batched
+Get.  Reads go through the store's CN-side hot-key cache
+(``repro.core.cn_cache``), so a conversation that bounces between park and
+resume — the common chat pattern — stops paying MN round trips for its
+state after the first resume.
+
+Key derivation: ``splitmix64(SALT ^ (rid << 20) + index)`` — index 0 holds
+the blob's byte length, indices 1.. hold the data words.  Collisions with
+real user keys are as likely as any 64-bit hash collision (~2^-64 per
+pair), the same assumption every hash-derived keyspace in the paper makes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hashing import splitmix64
+from repro.core.store import OutbackStore, make_uniform_keys
+
+_SALT = 0x5E551047_0B5E55ED
+_MAX_CHUNKS = 1 << 20
+
+
+class KVSessionStore:
+    """Park/resume blobs in an OutbackStore, reads served via the CN cache."""
+
+    def __init__(self, *, cn_cache_budget_bytes: int = 64 << 10,
+                 bootstrap_keys: int = 4096, load_factor: float = 0.85,
+                 rng_seed: int = 0):
+        # The store needs a non-empty build set; runtime Inserts grow it
+        # (and exercise the §4.4 resize path once sessions pile up).
+        boot = make_uniform_keys(bootstrap_keys, seed=rng_seed + 97)
+        self.store = OutbackStore(
+            boot, splitmix64(boot), load_factor=load_factor,
+            rng_seed=rng_seed, cn_cache_budget_bytes=cn_cache_budget_bytes)
+        self._lengths: dict[int, int] = {}  # rid -> n_words (for delete)
+
+    @staticmethod
+    def _chunk_keys(rid: int, n: int) -> np.ndarray:
+        base = np.uint64(_SALT) ^ (np.uint64(rid) << np.uint64(20))
+        return splitmix64(base + np.arange(n, dtype=np.uint64))
+
+    # ----------------------------------------------------------------- api
+    def put(self, rid: int, blob: bytes) -> int:
+        """Store ``blob`` under ``rid``; returns the number of KV inserts."""
+        pad = (-len(blob)) % 8
+        words = np.frombuffer(blob + b"\0" * pad, dtype="<u8")
+        if words.size >= _MAX_CHUNKS:
+            raise ValueError("session blob too large")
+        old = self._lengths.get(rid)
+        if old is not None and old > words.size:
+            # shrinking re-park: reclaim the tail chunks the overwrite below
+            # will not touch, or they leak in the store forever
+            for k in self._chunk_keys(rid, old + 1)[words.size + 1:]:
+                self.store.delete(int(k))
+        ks = self._chunk_keys(rid, words.size + 1)
+        self.store.insert(int(ks[0]), len(blob))
+        for k, w in zip(ks[1:], words):
+            self.store.insert(int(k), int(w))
+        self._lengths[rid] = words.size
+        return words.size + 1
+
+    def get(self, rid: int) -> bytes | None:
+        """Fetch ``rid``'s blob (batched Get through the CN cache)."""
+        head = self.store.get(int(self._chunk_keys(rid, 1)[0]))
+        if head.value is None:
+            return None
+        nbytes = int(head.value)
+        n_words = (nbytes + 7) // 8
+        if n_words == 0:
+            return b""
+        ks = self._chunk_keys(rid, n_words + 1)[1:]
+        v_lo, v_hi, match = self.store.get_batch(ks)
+        if not np.asarray(match).all():
+            return None  # torn blob (concurrent delete)
+        words = (np.asarray(v_hi, np.uint64) << np.uint64(32)) | \
+            np.asarray(v_lo, np.uint64)
+        return words.astype("<u8").tobytes()[:nbytes]
+
+    def delete(self, rid: int) -> bool:
+        n = self._lengths.pop(rid, None)
+        if n is None:
+            return False
+        for k in self._chunk_keys(rid, n + 1):
+            self.store.delete(int(k))
+        return True
+
+    # ---------------------------------------------------------- accounting
+    @property
+    def cache_stats(self):
+        return self.store.cn_cache.stats
+
+    def meter_total(self):
+        return self.store.meter_total()

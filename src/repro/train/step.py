@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import TrainConfig
 from repro.models.lm import LM
 from repro.train.optimizer import TrainState, adamw_update
@@ -115,7 +116,7 @@ def make_train_step(model: LM, tcfg: TrainConfig, *, mesh=None):
     def wrapped(state, batch):
         # manualize ONLY the 'pod' axis (data/model stay GSPMD-auto inside):
         # state replicated across pods, batch sharded on the leading dim.
-        fn = jax.shard_map(
+        fn = shard_map(
             pod_step, mesh=mesh,
             in_specs=(P(), P("pod")),
             out_specs=(P(), P()),

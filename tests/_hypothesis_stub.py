@@ -1,0 +1,158 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (see conftest.py).
+
+The test image may not ship hypothesis; rather than skipping the property
+tests we run them against a tiny deterministic strategy engine covering the
+exact API surface this suite uses: ``given``, ``settings`` and the
+``integers`` / ``lists`` / ``sampled_from`` / ``tuples`` / ``booleans``
+strategies.  Each test gets a per-test-seeded RNG (stable across runs, so
+failures reproduce), and the first two examples pin every strategy to its
+min/max boundaries — the cheap half of hypothesis's shrinking heuristics.
+
+When the real hypothesis is installed (``pip install -e .[test]``), the
+conftest never loads this module.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    """A strategy is just a draw function of (rng, mode)."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random, mode: str):
+        # mode: 'min' | 'max' | 'rand' (boundary examples first, then random)
+        return self._draw(rng, mode)
+
+    def example(self):
+        return self._draw(random.Random(0), "rand")
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = 0 if min_value is None else int(min_value)
+    hi = 2**64 - 1 if max_value is None else int(max_value)
+
+    def draw(rng, mode):
+        if mode == "min":
+            return lo
+        if mode == "max":
+            return hi
+        return rng.randint(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng, mode: {"min": False, "max": True}.get(
+        mode, rng.random() < 0.5))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+
+    def draw(rng, mode):
+        if mode == "min":
+            return elements[0]
+        if mode == "max":
+            return elements[-1]
+        return rng.choice(elements)
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng, mode: tuple(s.draw(rng, mode) for s in strategies))
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int | None = None, unique: bool = False,
+          unique_by=None) -> SearchStrategy:
+    cap = min_size + 16 if max_size is None else max_size
+    key = unique_by if unique_by is not None else (lambda v: v)
+    dedupe = unique or unique_by is not None
+
+    def draw(rng, mode):
+        if mode == "min":
+            size = min_size
+        elif mode == "max":
+            size = cap
+        else:
+            size = rng.randint(min_size, cap)
+        if not dedupe:
+            return [elements.draw(rng, mode if size else "rand")
+                    for _ in range(size)]
+        out, seen, tries = [], set(), 0
+        while len(out) < size and tries < size * 64 + 64:
+            v = elements.draw(rng, "rand")
+            tries += 1
+            k = key(v)
+            if k not in seen:
+                seen.add(k)
+                out.append(v)
+        return out
+
+    return SearchStrategy(draw)
+
+
+class settings:  # noqa: N801 — mirrors hypothesis's API
+    def __init__(self, deadline=None, max_examples=_DEFAULT_MAX_EXAMPLES,
+                 **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                mode = "min" if i == 0 else "max" if i == 1 else "rand"
+                rng = random.Random((seed << 8) | i)
+                drawn = [s.draw(rng, mode) for s in arg_strategies]
+                kdrawn = {k: s.draw(rng, mode)
+                          for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kdrawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (stub hypothesis, run {i}): "
+                        f"args={drawn!r} kwargs={kdrawn!r}") from e
+
+        # Strategy-drawn params must not look like pytest fixtures: drop the
+        # inherited signature (given() here never composes with fixtures).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorate
+
+
+def make_module() -> types.ModuleType:
+    """Assemble a module object that satisfies ``from hypothesis import
+    given, settings, strategies as st``."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "tuples", "lists"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__stub__ = True
+    return hyp

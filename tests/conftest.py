@@ -1,0 +1,24 @@
+"""Suite-wide fixtures/gates.
+
+Dependency gate: the property tests want ``hypothesis``, which the slim CI
+image may not ship (and the runtime package never needs).  When it is
+missing we register a tiny deterministic stand-in (``_hypothesis_stub``)
+under the same import name *before* test modules are collected, so the
+suite runs everywhere without a pip install.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    _stub_path = pathlib.Path(__file__).with_name("_hypothesis_stub.py")
+    _spec = importlib.util.spec_from_file_location("_hypothesis_stub",
+                                                   _stub_path)
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _hyp = _mod.make_module()
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hyp.strategies

@@ -7,6 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs import all_archs, get_config
+
+pytestmark = pytest.mark.slow  # every arch jit-compiles a train+decode step
 from repro.models.lm import LM
 
 

@@ -1,0 +1,295 @@
+"""CN-side hot-key cache: admission, budget, coherence, probe equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cn_cache import (CNKeyCache, ShardedCNCache, cache_probe,
+                                 neg_probe)
+from repro.core.hashing import split_u64, splitmix64
+from repro.core.outback import OutbackShard
+from repro.core.store import OutbackStore, make_uniform_keys
+
+N = 20_000
+BUDGET = 8 * N
+
+
+@pytest.fixture(scope="module")
+def kv():
+    keys = make_uniform_keys(N)
+    return keys, splitmix64(keys)
+
+
+def _shard(kv, budget=BUDGET):
+    keys, vals = kv
+    cache = CNKeyCache(budget)
+    return OutbackShard(keys, vals, load_factor=0.85, cn_cache=cache), cache
+
+
+def _val(k):
+    return int(splitmix64(np.uint64([k]))[0])
+
+
+# ------------------------------------------------------------------ budget
+def test_budget_respected():
+    for budget in (4 << 10, 64 << 10, 1 << 20):
+        c = CNKeyCache(budget)
+        assert c.memory_bytes() <= budget
+        assert c.capacity >= 8
+
+
+def test_budget_too_small_rejected():
+    with pytest.raises(ValueError):
+        CNKeyCache(100)
+
+
+# --------------------------------------------------------------- admission
+def test_hot_key_admitted_after_reuse(kv):
+    sh, cache = _shard(kv)
+    k = int(kv[0][0])
+    r1 = sh.get(k)  # miss, freq=1: below the admission threshold
+    r2 = sh.get(k)  # miss, freq=2: admitted on fill
+    r3 = sh.get(k)  # hit
+    assert r1.value == r2.value == r3.value == _val(k)
+    assert r3.round_trips == 0
+    assert cache.stats.hits == 1 and cache.stats.admitted == 1
+    assert sh.meter.saved_round_trips == 1
+
+
+def test_one_shot_scan_not_admitted(kv):
+    """A cold scan (every key once) must not pollute the cache (a handful
+    of count-min collisions may sneak past the threshold)."""
+    sh, cache = _shard(kv)
+    for k in kv[0][:500]:
+        sh.get(int(k))
+    assert cache.stats.admitted <= 3
+
+
+def test_cold_burst_cannot_flush_hot_set(kv):
+    sh, cache = _shard(kv, budget=64 << 10)
+    hot = kv[0][:16]
+    for _ in range(6):  # make them definitively hot
+        for k in hot:
+            sh.get(int(k))
+    hot_cached = int(cache.valid.sum())
+    assert hot_cached >= 14
+    for k in kv[0][1000:3000]:  # one-touch cold burst
+        sh.get(int(k))
+    # hot keys still answer locally: the frequency gate protected them
+    before = cache.stats.hits
+    for k in hot:
+        sh.get(int(k))
+    assert cache.stats.hits - before >= hot_cached - 2  # CLOCK may rotate 1-2
+
+
+# ---------------------------------------------------------- negative cache
+def test_negative_cache_absorbs_repeated_misses(kv):
+    sh, cache = _shard(kv)
+    absent = 0xDEAD_BEEF_0001
+    assert sh.get(absent).value is None  # freq 1
+    assert sh.get(absent).value is None  # freq 2 -> neg-admitted
+    r = sh.get(absent)
+    assert r.value is None and r.round_trips == 0
+    assert cache.stats.neg_hits >= 1
+    # Insert clears the negative entry (coherence)
+    sh.insert(absent, 777)
+    assert sh.get(absent).value == 777
+
+
+# ---------------------------------------------------------------- coherence
+def test_update_refreshes_cached_value(kv):
+    sh, cache = _shard(kv)
+    k = int(kv[0][1])
+    for _ in range(3):
+        sh.get(k)  # cached now
+    assert sh.update(k, 4242)
+    assert sh.get(k).value == 4242  # served from cache, must be fresh
+    assert cache.stats.hits >= 2
+
+
+def test_delete_invalidates_cached_value(kv):
+    sh, cache = _shard(kv)
+    k = int(kv[0][2])
+    for _ in range(3):
+        sh.get(k)
+    assert sh.delete(k)
+    assert cache.stats.invalidated >= 1
+    assert sh.get(k).value is None
+
+
+def test_cache_equivalent_to_uncached_mixed_workload(kv):
+    keys, vals = kv
+    sh_c, _ = _shard(kv)
+    sh_u = OutbackShard(keys, vals, load_factor=0.85)
+    rng = np.random.default_rng(7)
+    for i in range(2000):
+        k = int(keys[rng.integers(0, 2000)])
+        op = rng.integers(0, 10)
+        if op < 6:
+            assert sh_c.get(k).value == sh_u.get(k).value
+        elif op < 8:
+            v = int(rng.integers(0, 2**63))
+            assert sh_c.update(k, v) == sh_u.update(k, v)
+        elif op == 8:
+            assert sh_c.delete(k) == sh_u.delete(k)
+        else:
+            v = int(rng.integers(0, 2**63))
+            assert sh_c.insert(k, v) == sh_u.insert(k, v)
+
+
+# -------------------------------------------------------------- batch path
+def test_get_batch_with_cache_matches_values(kv):
+    keys, vals = kv
+    sh, cache = _shard(kv)
+    rng = np.random.default_rng(3)
+    idx = rng.zipf(1.5, 4096) % 3000
+    q = keys[idx]
+    for _ in range(3):
+        v_lo, v_hi, match = sh.get_batch(q)
+    assert np.asarray(match).all()
+    got = (np.asarray(v_hi).astype(np.uint64) << np.uint64(32)) | \
+        np.asarray(v_lo).astype(np.uint64)
+    np.testing.assert_array_equal(got, splitmix64(q))
+    assert cache.stats.hits > 0
+    assert sh.meter.saved_round_trips == sh.meter.cache_hits \
+        + 2 * sh.meter.cache_neg_hits
+
+
+def test_cache_off_meter_unchanged(kv):
+    """cn_cache=None keeps the accounting byte-for-byte as before."""
+    keys, vals = kv
+    sh = OutbackShard(keys, vals, load_factor=0.85)
+    sh.meter.reset()
+    sh.get_batch(keys[:1024])
+    m = sh.meter
+    assert (m.ops, m.round_trips) == (1024, 1024)
+    assert m.req_bytes == 1024 * 64 and m.resp_bytes == 1024 * 32
+    assert m.cache_hits == m.saved_round_trips == m.saved_req_bytes == 0
+
+
+def test_get_batch_resolves_overflow_residents(kv):
+    """resolve_makeup serves keys living in the MN overflow cache."""
+    keys, vals = kv
+    sh, _ = _shard(kv)
+    extra = splitmix64(np.arange(1, 400, dtype=np.uint64) + np.uint64(1 << 40))
+    for k in extra:
+        sh.insert(int(k), _val(int(k)) & (2**63 - 1))
+    v_lo, v_hi, match = sh.get_batch(extra)
+    assert np.asarray(match).all()
+
+
+# --------------------------------------------------- pure probe (np == jnp)
+def test_cache_probe_np_jnp_agree(kv):
+    sh, cache = _shard(kv)
+    for k in kv[0][:64]:
+        sh.get(int(k))
+        sh.get(int(k))
+    q = np.concatenate([kv[0][:64], kv[0][5000:5064]])
+    lo, hi = split_u64(q)
+    hit_n, vlo_n, vhi_n = cache_probe(lo, hi, cache.arrays(), cache.nsets)
+    hit_j, vlo_j, vhi_j = cache_probe(jnp.asarray(lo), jnp.asarray(hi),
+                                      cache.arrays(jnp), cache.nsets, jnp)
+    np.testing.assert_array_equal(hit_n, np.asarray(hit_j))
+    np.testing.assert_array_equal(vlo_n, np.asarray(vlo_j))
+    np.testing.assert_array_equal(vhi_n, np.asarray(vhi_j))
+    assert hit_n[:64].sum() > 0 and not hit_n[64:].any()
+
+    neg_n = neg_probe(lo, hi, cache.neg_arrays(), cache.nneg)
+    neg_j = neg_probe(jnp.asarray(lo), jnp.asarray(hi),
+                      cache.neg_arrays(jnp), cache.nneg, jnp)
+    np.testing.assert_array_equal(neg_n, np.asarray(neg_j))
+
+
+# ------------------------------------------------------------ store + resize
+def test_store_cache_survives_mutations(kv):
+    keys, vals = kv
+    store = OutbackStore(keys, vals, load_factor=0.85,
+                         cn_cache_budget_bytes=BUDGET)
+    k = int(keys[0])
+    for _ in range(3):
+        assert store.get(k).value == _val(k)
+    assert store.cn_cache.stats.hits >= 1
+    store.update(k, 99)
+    assert store.get(k).value == 99
+    store.delete(k)
+    assert store.get(k).value is None
+
+
+def test_store_split_invalidates_routed_entries():
+    keys = make_uniform_keys(3000, seed=11)
+    vals = splitmix64(keys)
+    store = OutbackStore(keys, vals, load_factor=0.85,
+                         cn_cache_budget_bytes=64 << 10)
+    hot = keys[:200]
+    for _ in range(3):
+        for k in hot:
+            store.get(int(k))
+    assert int(store.cn_cache.valid.sum()) > 0
+    inv_before = store.cn_cache.stats.invalidated
+    # force a split of table 0 and check the invalidation hook ran
+    store._split(0)
+    assert store.cn_cache.stats.invalidated > inv_before
+    assert len(store.tables) == 2
+    # correctness after the swap: every key still readable, fresh admissions OK
+    for k in hot:
+        assert store.get(int(k)).value == _val(int(k))
+
+
+def test_sharded_cn_cache_replicas():
+    c = CNKeyCache(16 << 10)
+    sc = ShardedCNCache(c, 4)
+    arrs = sc.arrays()
+    assert all(a.shape[0] == 4 for a in arrs)
+    assert sc.memory_bytes_total() == 4 * c.memory_bytes()
+
+
+@pytest.mark.mesh
+def test_sharded_get_with_cache_single_device():
+    """SPMD Get with the probe stage: hits skip the bins, results exact."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import sharded_kvs as skv
+
+    n, batch = 20_000, 2048
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    keys = make_uniform_keys(n)
+    vals = splitmix64(keys)
+    st = skv.build_sharded(keys, vals, num_shards=1, data_parallel=1,
+                          load_factor=0.85)
+    arrays = skv.place_state(mesh, st)
+
+    host = CNKeyCache(8 * n)
+    rng = np.random.default_rng(3)
+    q = keys[rng.zipf(1.6, batch) % n]
+    lo, hi = split_u64(q)
+    host._sketch_bump(lo, hi)
+    host._sketch_bump(lo, hi)
+    for k in q[:500]:
+        host.fill(int(k), _val(int(k)))
+    scache = ShardedCNCache(host, 1)
+    cache_arrays = skv.place_cache(mesh, scache)
+    fn, _ = skv.make_get_fn(mesh, st, batch, cache=scache)
+    qs = NamedSharding(mesh, P(("data", "model")))
+    qlo = jax.device_put(jnp.asarray(lo), qs)
+    qhi = jax.device_put(jnp.asarray(hi), qs)
+    v_lo, v_hi, match, hit = fn(qlo, qhi, *cache_arrays, *arrays)
+    assert np.asarray(match).all()
+    assert np.asarray(hit).sum() > 0
+    got = (np.asarray(v_hi).astype(np.uint64) << np.uint64(32)) | \
+        np.asarray(v_lo).astype(np.uint64)
+    np.testing.assert_array_equal(got, splitmix64(q))
+
+
+# ------------------------------------------------------------ session store
+def test_session_store_roundtrip_reads_through_cache():
+    from repro.serve import KVSessionStore
+    ss = KVSessionStore(cn_cache_budget_bytes=64 << 10)
+    blob = np.random.default_rng(0).bytes(4093)
+    ss.put(7, blob)
+    assert ss.get(7) == blob
+    h0 = ss.cache_stats.hits
+    assert ss.get(7) == blob  # second read: CN cache
+    assert ss.cache_stats.hits > h0
+    assert ss.get(999) is None
+    assert ss.delete(7) and not ss.delete(7)
+    assert ss.get(7) is None

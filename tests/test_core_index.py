@@ -167,6 +167,23 @@ def test_shard_miss_and_mutations():
     assert not sh.delete(123)
 
 
+def test_shard_reinsert_overflow_resident_is_update():
+    """Inserting a key that spilled to the overflow cache must resolve to
+    Update: no n_keys drift, no duplicate that resurrects after Delete."""
+    keys = _keys(2000, 3)
+    sh = OutbackShard(keys, splitmix64(keys), load_factor=0.90)
+    extra = splitmix64(np.arange(1, 80, dtype=np.uint64) + np.uint64(9 << 40))
+    first = [sh.insert(int(k), 1) for k in extra]
+    assert "overflow" in first  # the scenario actually occurred
+    n1 = sh.n_keys
+    assert all(sh.insert(int(k), 2) == "update" for k in extra)
+    assert sh.n_keys == n1
+    for k in extra:
+        assert sh.get(int(k)).value == 2
+        assert sh.delete(int(k))
+        assert sh.get(int(k)).value is None  # no resurrection
+
+
 def test_shard_reseed_keeps_bucket_perfect():
     keys = _keys(8_000, 11)
     vals = splitmix64(keys)
@@ -193,6 +210,7 @@ def test_cn_memory_is_small(shard):
 
 
 # ------------------------------------------------------------ OutbackStore
+@pytest.mark.slow
 def test_store_resize_end_to_end():
     keys = _keys(30_000, 21)
     vals = splitmix64(keys)

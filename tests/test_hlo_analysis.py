@@ -79,6 +79,7 @@ def test_bytes_fused_below_upper():
     assert 0 < cost.bytes <= cost.bytes_upper
 
 
+@pytest.mark.mesh
 def test_collective_bytes_multiply_by_trips():
     """psum inside a scan must count once per iteration."""
     import os
@@ -90,6 +91,7 @@ def test_collective_bytes_multiply_by_trips():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.launch.hlo_analysis import analyse_text
         mesh = jax.make_mesh((4,), ("data",))
         def inner(x):
@@ -97,7 +99,7 @@ def test_collective_bytes_multiply_by_trips():
                 return jax.lax.psum(c, "data") * 0.5, None
             out, _ = jax.lax.scan(body, x, None, length=7)
             return out
-        fn = jax.shard_map(inner, mesh=mesh, in_specs=P(), out_specs=P())
+        fn = shard_map(inner, mesh=mesh, in_specs=P(), out_specs=P())
         sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         txt = jax.jit(fn).lower(sds).compile().as_text()
         cost = analyse_text(txt)

@@ -36,6 +36,7 @@ def _run(mesh_shape, num_shards, n=20_000, batch=2048, variant="outback"):
     return match, got, splitmix64(q)
 
 
+@pytest.mark.mesh
 @pytest.mark.parametrize("variant", ["outback", "race"])
 def test_sharded_kvs_single_device(variant):
     match, got, expect = _run((1, 1), 1, variant=variant)
@@ -87,6 +88,8 @@ _SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
+@pytest.mark.mesh
 def test_sharded_kvs_eight_devices_subprocess():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
