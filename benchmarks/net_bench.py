@@ -1,0 +1,140 @@
+"""Simulated-time benchmark suites (``lat``, ``scale``) built on repro.net.
+
+Each suite records a real workload through the ``transport=`` seam (the
+KVS runs its actual protocol; the CommMeter forwards every event) and
+replays it on the discrete-event RDMA clock.  Rows carry a 4th element — a
+dict of extras (latency percentiles, modeled Mops) — that ``run.py
+--json`` persists for the perf-trajectory files (BENCH_*.json); the CSV
+contract stays 3 columns.
+
+* ``lat``  — single-client closed loop: per-op Get latency distribution
+  (p50/p99/p999) per scheme, the paper's Fig. 13 shape: all 1-RT schemes
+  cluster around the wire RTT, RACE pays two dependent round trips (~2x
+  p50), and MN-heavy RPC handlers pad the tail.  Plus doorbell-batching
+  on/off at queue depth 8.
+* ``scale`` — closed-loop throughput vs. number of CN clients (Fig. 10/12
+  shape): every scheme saturates at its bottleneck (MN CPU for RPC, RNIC
+  read engine for one-sided), RPC-Dummy stays the upper bound.  Plus a
+  resize-dip timeline (Fig. 17 shape) replayed through a real §4.4 split.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.outback import OutbackShard
+from repro.core.store import OutbackStore
+from repro.net import Transport, simulate
+
+_SCHEMES = (("outback", OutbackShard), ("race", RaceKVS), ("mica", MicaKVS),
+            ("cluster", ClusterKVS), ("dummy", DummyKVS))
+
+
+def _record_get_trace(cls, keys, vals, q) -> Transport:
+    """Run the scheme's real batched-Get protocol with a transport attached;
+    the returned trace is the op stream the simulator replays."""
+    tr = Transport()
+    kw = {"load_factor": 0.85} if cls is OutbackShard else {}
+    kvs = cls(keys, vals, transport=tr, **kw)
+    kvs.get_batch(q)
+    return tr
+
+
+def _sizes(quick: bool):
+    return (60_000, 4096) if quick else (200_000, 16_384)
+
+
+def lat_suite(quick: bool = False):
+    n, n_ops = _sizes(quick)
+    keys = C.fb_like_keys(n)
+    vals = C.values_for(keys)
+    q = keys[C.uniform_indices(n, n_ops, seed=11)]
+    rows = []
+    for name, cls in _SCHEMES:
+        tr = _record_get_trace(cls, keys, vals, q)
+        res = simulate(tr.trace, clients=1, window=1)
+        pct = res.percentiles()
+        rows.append((f"lat/get/{name}", round(pct["p50_us"], 4),
+                     f"p99={pct['p99_us']:.3f}us",
+                     {**{k: round(v, 4) for k, v in pct.items()},
+                      "tput_mops": round(res.tput_mops, 4)}))
+        if name == "outback":
+            rows.extend(_doorbell_rows(tr.trace, "lat"))
+    return rows
+
+
+def _doorbell_rows(trace, prefix: str):
+    """Doorbell batching on/off at a client-bound operating point (one QP,
+    queue depth 8): posting cost is the bottleneck, so coalescing shows."""
+    rows = []
+    for db in (True, False):
+        r = simulate(trace, clients=1, window=8, doorbell=db)
+        p = r.percentiles()
+        rows.append((f"{prefix}/doorbell_{'on' if db else 'off'}/outback",
+                     round(p["p50_us"], 4), f"tput={r.tput_mops:.2f}Mops",
+                     {**{k: round(v, 4) for k, v in p.items()},
+                      "tput_mops": round(r.tput_mops, 4)}))
+    return rows
+
+
+def scale_suite(quick: bool = False):
+    n, n_ops = _sizes(quick)
+    keys = C.fb_like_keys(n)
+    vals = C.values_for(keys)
+    q = keys[C.uniform_indices(n, n_ops, seed=12)]
+    sweep = (1, 2, 4, 8, 16, 32)
+    rows = []
+    for name, cls in _SCHEMES:
+        tr = _record_get_trace(cls, keys, vals, q)
+        for c in sweep:
+            res = simulate(tr.trace, clients=c, window=1)
+            pct = res.percentiles()
+            rows.append((f"scale/{name}/clients{c}", round(pct["p50_us"], 4),
+                         round(res.tput_mops, 3),
+                         {"clients": c, "tput_mops": round(res.tput_mops, 4),
+                          "p50_us": round(pct["p50_us"], 4),
+                          "p99_us": round(pct["p99_us"], 4)}))
+    rows.extend(_resize_timeline(keys, vals, q, quick))
+    return rows
+
+
+def _resize_timeline(keys, vals, q, quick: bool):
+    """Fig.-17 shape on the simulated clock: throughput before / during /
+    after a §4.4 table split whose rebuild steals MN CPU share."""
+    m = len(keys) // 4
+    seg = max(2048, len(q) // 4)
+    tr = Transport()
+    store = OutbackStore(keys[:m], vals[:m], load_factor=0.85, transport=tr)
+    qq = q[np.isin(q, keys[:m])]
+    if qq.size < seg:  # top up from the build set deterministically
+        qq = np.concatenate([qq, keys[:seg]])
+    store.get_batch(qq[:seg])
+    h = store.begin_split(0)       # drops the ResizeMark into the trace
+    # keep serving from the stale table for the whole rebuild window: the
+    # slowdown lasts ~2 x 150 ns x n_live of simulated time, so issue
+    # enough Gets to span it (and a tail that completes after it closes)
+    for _ in range(-(-13 * m // (10 * seg))):
+        store.get_batch(qq[:seg])
+    h.build()
+    h.finish()
+    store.get_batch(qq[:seg])
+    store.get_batch(qq[:seg])
+    res = simulate(tr.trace, clients=8, window=1)
+    if not res.resize_windows:
+        return [("scale/resize/ERROR", 0.0, "no resize window in trace")]
+    w0, w1 = res.resize_windows[0]
+    before = res.tput_in_window(0.0, w0)
+    during = res.tput_in_window(w0, w1)
+    after = res.tput_in_window(w1, res.seconds)
+    dip = during / max(before, 1e-9)
+    return [
+        ("scale/resize/before_mops", round(w0 * 1e3, 4), round(before, 3),
+         {"tput_mops": round(before, 4)}),
+        ("scale/resize/during_mops", round((w1 - w0) * 1e3, 4),
+         round(during, 3), {"tput_mops": round(during, 4),
+                            "dip_ratio": round(dip, 3)}),
+        ("scale/resize/after_mops", round((res.seconds - w1) * 1e3, 4),
+         round(after, 3), {"tput_mops": round(after, 4)}),
+    ]

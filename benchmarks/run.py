@@ -5,12 +5,19 @@ modeled Mops (throughput figures), bits/key (memory figures), or a
 figure-specific annotation.  EXPERIMENTS.md §Paper-validation interprets the
 ratios against the paper's claims.
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9]
+Suites may attach a 4th row element (a dict of extras, e.g. the simulated
+latency percentiles from ``benchmarks.net_bench``); it never reaches the
+CSV, but ``--json PATH`` persists it — that file is the perf-trajectory
+contract (``BENCH_*.json``) future PRs diff against.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only lat,scale]
+      [--strict] [--json out.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -21,13 +28,21 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller key sets (CI-speed)")
     ap.add_argument("--only", default=None,
-                    help="substring filter over suite names: fig3, fig9, "
-                         "fig11, fig12, fig14, fig15, fig16, fig17, zipf "
-                         "(CN hot-key cache on/off across skew), "
+                    help="comma-separated substring filters over suite "
+                         "names: fig3, fig9, fig11, fig12, fig14, fig15, "
+                         "fig16, fig17, zipf (CN hot-key cache on/off "
+                         "across skew), lat (simulated Get latency "
+                         "percentiles), scale (simulated closed-loop "
+                         "throughput vs clients + resize dip), "
                          "kernel_paged, kernel_lookup, kernel_pagetable")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any suite produced an ERROR row")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows (with extras such as latency "
+                         "percentiles) as machine-readable JSON")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_figs
+    from benchmarks import kernel_bench, net_bench, paper_figs
     from benchmarks.common import emit
 
     n = 100_000 if args.quick else 300_000
@@ -45,13 +60,16 @@ def main() -> None:
             else (200_000, 1_000_000, 2_000_000))),
         ("fig17", lambda: paper_figs.fig17_resize(min(n, 150_000))),
         ("zipf", lambda: paper_figs.zipf_cache(min(n, 200_000))),
+        ("lat", lambda: net_bench.lat_suite(args.quick)),
+        ("scale", lambda: net_bench.scale_suite(args.quick)),
         ("kernel_paged", kernel_bench.paged_attention_traffic),
         ("kernel_lookup", kernel_bench.ludo_lookup_throughput),
         ("kernel_pagetable", kernel_bench.page_table_memory),
     ]
+    only = [t.strip() for t in args.only.split(",")] if args.only else None
     rows = []
     for name, fn in suites:
-        if args.only and args.only not in name:
+        if only and not any(t and t in name for t in only):
             continue
         t0 = time.time()
         try:
@@ -59,7 +77,25 @@ def main() -> None:
         except Exception as e:  # keep the harness running; report the miss
             rows.append((f"{name}/ERROR", 0.0, repr(e)[:80]))
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
-    emit(rows)
+    emit([r[:3] for r in rows])
+
+    if args.json:
+        payload = {"quick": bool(args.quick),
+                   "rows": [dict(suite=r[0].split("/")[0], name=r[0],
+                                 us_per_call=r[1], derived=r[2],
+                                 **(r[3] if len(r) > 3 else {}))
+                            for r in rows]}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json} ({len(payload['rows'])} rows)",
+              file=sys.stderr)
+
+    errors = [r[0] for r in rows if "/ERROR" in r[0]]
+    if errors:
+        print(f"# {len(errors)} ERROR row(s): {', '.join(errors)}",
+              file=sys.stderr)
+        if args.strict:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

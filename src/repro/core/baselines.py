@@ -50,13 +50,17 @@ class _HeapMixin:
 
 class RaceKVS(_HeapMixin):
     """One-sided baseline. Index: 2-choice bucket groups of 8 slots, 8-bit
-    fingerprints; the whole group is fetched per READ (64 B payload)."""
+    fingerprints; the whole group is fetched per READ (64 B payload).
+
+    All traffic is one-sided RDMA READ payloads, so meter events carry
+    ``one_sided=True``: no RPC message padding, and the transport simulator
+    routes them through the RNIC read engine instead of the MN CPU."""
 
     GROUP_SLOTS = 8
     GROUP_BYTES = 8 * 8  # 8 slots x 8 B (fp + addr packed)
 
     def __init__(self, keys: np.ndarray, values: np.ndarray, *,
-                 load_factor: float = 0.7, rng_seed: int = 0):
+                 load_factor: float = 0.7, rng_seed: int = 0, transport=None):
         keys = np.asarray(keys, dtype=np.uint64)
         n = keys.shape[0]
         self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
@@ -65,6 +69,7 @@ class RaceKVS(_HeapMixin):
         self.fp = np.zeros((ng, self.GROUP_SLOTS), dtype=np.uint8)
         self.addr = np.full((ng, self.GROUP_SLOTS), -1, dtype=np.int64)
         self.meter = CommMeter()
+        self.meter.sink = transport
         lo, hi = split_u64(keys)
         g0 = hash_range(lo, hi, 0xACE0, ng).astype(np.int64)
         g1 = hash_range(lo, hi, 0xACE1, ng).astype(np.int64)
@@ -93,19 +98,21 @@ class RaceKVS(_HeapMixin):
         fp = int(self._fp(l32, h32))
         # RT 1: read both candidate groups (doorbell-batched one-sided READs).
         self.meter.add(rts=1, req=16, resp=2 * self.GROUP_BYTES,
-                       cn_hash=3, mn_reads=0)
+                       cn_hash=3, mn_reads=0, one_sided=True)
         val = None
         cand = [(g, s) for g in (g0, g1) for s in range(self.GROUP_SLOTS)
                 if self.addr[g, s] >= 0 and int(self.fp[g, s]) == fp]
-        self.meter.add(0, cn_cmp=2 * self.GROUP_SLOTS)
+        self.meter.add(0, cn_cmp=2 * self.GROUP_SLOTS, attach=True)
         # RT 2 (+ extra on fp false positives): read the KV block, verify.
         for g, s in cand:
-            self.meter.add(0, rts=1, req=16, resp=32, cn_cmp=1)
+            self.meter.add(0, rts=1, req=16, resp=32, cn_cmp=1,
+                           one_sided=True, attach=True)
             val = self._verify_and_read(int(self.addr[g, s]), lo, hi)
             if val is not None:
                 break
         if not cand:
-            self.meter.add(0, rts=1, req=16, resp=32)  # miss still pays RT2
+            self.meter.add(0, rts=1, req=16, resp=32,
+                           one_sided=True, attach=True)  # miss still pays RT2
         return val
 
     def get_batch(self, keys: np.ndarray, xp=np, arrays=None):
@@ -141,7 +148,7 @@ class RaceKVS(_HeapMixin):
             else:
                 remaining = remaining.at[rows, first].set(False)
         self.meter.add(int(keys.shape[0]), rts=2, req=32,
-                       resp=2 * self.GROUP_BYTES + 32,
+                       resp=2 * self.GROUP_BYTES + 32, one_sided=True,
                        cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS + 1)
         return vlo[best], vhi[best], match
 
@@ -165,7 +172,7 @@ class MicaKVS(_HeapMixin):
     SCAN_BUCKETS = 4  # batched-MN scan window
 
     def __init__(self, keys: np.ndarray, values: np.ndarray, *,
-                 load_factor: float = 0.7, rng_seed: int = 0):
+                 load_factor: float = 0.7, rng_seed: int = 0, transport=None):
         keys = np.asarray(keys, dtype=np.uint64)
         n = keys.shape[0]
         self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
@@ -174,6 +181,7 @@ class MicaKVS(_HeapMixin):
         self.fp = np.zeros((nbk, self.BUCKET_SLOTS), dtype=np.uint8)
         self.addr = np.full((nbk, self.BUCKET_SLOTS), -1, dtype=np.int64)
         self.meter = CommMeter()
+        self.meter.sink = transport
         lo, hi = split_u64(keys)
         b = hash_range(lo, hi, 0x111CA, nbk).astype(np.int64)
         fps = RaceKVS._fp(lo, hi)
@@ -197,14 +205,14 @@ class MicaKVS(_HeapMixin):
         fp = int(RaceKVS._fp(l32, h32))
         self.meter.add(rts=1, req=16, resp=32, cn_hash=2)
         for _ in range(self.nb):  # MN probing walk
-            self.meter.add(0, mn_reads=1, mn_cmp=self.BUCKET_SLOTS)
+            self.meter.add(0, mn_reads=1, mn_cmp=self.BUCKET_SLOTS, attach=True)
             full = True
             for s in range(self.BUCKET_SLOTS):
                 if self.addr[g, s] < 0:
                     full = False
                     continue
                 if int(self.fp[g, s]) == fp:
-                    self.meter.add(0, mn_reads=1, mn_cmp=1)
+                    self.meter.add(0, mn_reads=1, mn_cmp=1, attach=True)
                     val = self._verify_and_read(int(self.addr[g, s]), lo, hi)
                     if val is not None:
                         return val
@@ -270,7 +278,7 @@ class ClusterKVS(_HeapMixin):
     MAX_CHAIN = 4
 
     def __init__(self, keys: np.ndarray, values: np.ndarray, *,
-                 load_factor: float = 0.8, rng_seed: int = 0):
+                 load_factor: float = 0.8, rng_seed: int = 0, transport=None):
         keys = np.asarray(keys, dtype=np.uint64)
         n = keys.shape[0]
         self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
@@ -283,6 +291,7 @@ class ClusterKVS(_HeapMixin):
         self.free_top = nbk
         self.cap = cap
         self.meter = CommMeter()
+        self.meter.sink = transport
         lo, hi = split_u64(keys)
         b = hash_range(lo, hi, 0xC1C1, nbk).astype(np.int64)
         fps = self._fp14(lo, hi)
@@ -317,10 +326,10 @@ class ClusterKVS(_HeapMixin):
         fp = int(self._fp14(l32, h32))
         self.meter.add(rts=1, req=16, resp=32, cn_hash=2, mn_hash=0)
         while g >= 0:  # MN walks the chain
-            self.meter.add(0, mn_reads=1, mn_cmp=self.BUCKET_SLOTS)
+            self.meter.add(0, mn_reads=1, mn_cmp=self.BUCKET_SLOTS, attach=True)
             for s in range(self.BUCKET_SLOTS):
                 if self.addr[g, s] >= 0 and int(self.fp[g, s]) == fp:
-                    self.meter.add(0, mn_reads=1, mn_cmp=1)
+                    self.meter.add(0, mn_reads=1, mn_cmp=1, attach=True)
                     val = self._verify_and_read(int(self.addr[g, s]), lo, hi)
                     if val is not None:
                         return val
@@ -372,11 +381,13 @@ class ClusterKVS(_HeapMixin):
 class DummyKVS(_HeapMixin):
     """RPC-Dummy: the MN answers every request with one fixed memory read."""
 
-    def __init__(self, keys: np.ndarray, values: np.ndarray, **_):
+    def __init__(self, keys: np.ndarray, values: np.ndarray, *,
+                 transport=None, **_):
         keys = np.asarray(keys, dtype=np.uint64)
         self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
         self.n = keys.shape[0]
         self.meter = CommMeter()
+        self.meter.sink = transport
 
     def get(self, key: int):
         self.meter.add(rts=1, req=16, resp=32, mn_reads=1)

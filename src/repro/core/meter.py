@@ -7,6 +7,11 @@ messages, as in the paper's methodology §5.1), and the split of compute
 between compute-node side and memory-node side (hash ops, fingerprint/key
 comparisons, dependent memory reads).  Every KVS implementation in
 ``repro.core`` feeds the same meter so baselines are comparable.
+
+The meter is also the recording seam for the discrete-event transport
+simulator: plug a ``repro.net.Transport`` into ``CommMeter.sink`` (every
+KVS constructor's ``transport=`` does this) and the same counter stream
+becomes a replayable op trace with latency/throughput semantics.
 """
 
 from __future__ import annotations
@@ -18,6 +23,11 @@ MSG_BYTES = 64  # every RPC message padded to two cache lines (paper §5.1)
 
 @dataclasses.dataclass
 class CommMeter:
+    # Optional event sink (class-level, not a counted field): a
+    # ``repro.net.Transport`` plugged in here receives every ``add`` call
+    # and turns the counter stream into a replayable timed-op trace.
+    sink = None
+
     ops: int = 0
     round_trips: int = 0
     req_bytes: int = 0
@@ -40,18 +50,47 @@ class CommMeter:
 
     def add(self, n: int = 1, *, rts: int = 0, req: int = 0, resp: int = 0,
             mn_hash: int = 0, mn_cmp: int = 0, mn_reads: int = 0,
-            mn_writes: int = 0, cn_hash: int = 0, cn_cmp: int = 0) -> None:
-        """Account ``n`` operations with the given *per-op* costs."""
+            mn_writes: int = 0, cn_hash: int = 0, cn_cmp: int = 0,
+            one_sided: bool = False, cont: bool = False,
+            attach: bool = False) -> None:
+        """Account ``n`` operations with the given *per-op* costs.
+
+        ``attach=True`` (with ``n=0``) charges the costs once to the op
+        already counted — an extra round trip, probe, or compare on the
+        same logical op — without opening a new one; a plain ``n<=0``
+        (e.g. a dynamically-computed lane count that came up empty) adds
+        nothing.  Two-sided RPC messages are padded to ``MSG_BYTES`` in
+        *both* directions (paper §5.1); ``one_sided=True`` is the escape
+        hatch for RDMA READ traffic, whose request/response are NIC-level
+        payloads, not RPC messages — their bytes accumulate raw.
+        ``cont=True`` marks a dependent continuation of the previous op
+        (the Makeup-Get second trip) for the transport sink; the
+        accounting itself is unchanged by it.
+        """
+        if n <= 0 and not attach:
+            return
+        m = n if n > 0 else 1
+        if one_sided:
+            req_b, resp_b = req, resp
+        else:
+            pad = MSG_BYTES if rts else 0
+            req_b, resp_b = max(req, pad), max(resp, pad)
         self.ops += n
-        self.round_trips += n * rts
-        self.req_bytes += n * max(req, MSG_BYTES if rts else 0)
-        self.resp_bytes += n * resp
-        self.mn_hash_ops += n * mn_hash
-        self.mn_cmp_ops += n * mn_cmp
-        self.mn_mem_reads += n * mn_reads
-        self.mn_mem_writes += n * mn_writes
-        self.cn_hash_ops += n * cn_hash
-        self.cn_cmp_ops += n * cn_cmp
+        self.round_trips += m * rts
+        self.req_bytes += m * req_b
+        self.resp_bytes += m * resp_b
+        self.mn_hash_ops += m * mn_hash
+        self.mn_cmp_ops += m * mn_cmp
+        self.mn_mem_reads += m * mn_reads
+        self.mn_mem_writes += m * mn_writes
+        self.cn_hash_ops += m * cn_hash
+        self.cn_cmp_ops += m * cn_cmp
+        if self.sink is not None:
+            self.sink.on_meter_add(
+                n, rts=rts, req=req_b, resp=resp_b, mn_hash=mn_hash,
+                mn_cmp=mn_cmp, mn_reads=mn_reads, mn_writes=mn_writes,
+                cn_hash=cn_hash, cn_cmp=cn_cmp, one_sided=one_sided,
+                cont=cont, attach=attach)
 
     def add_cache_hit(self, n: int = 1, *, neg: bool = False,
                       saved_rts: int = 1, saved_req: int = MSG_BYTES,

@@ -53,10 +53,12 @@ class ShardFullError(RuntimeError):
 # What one CN-cache answer saves on the wire: a positive hit skips the 1-RT
 # Get; a negative hit skips the full 2-RT miss-plus-makeup route.  Shared by
 # every cache front (shard, store) so the accounting cannot diverge.
+# Both directions of an RPC message are padded to MSG_BYTES (paper §5.1),
+# so the saved response is the padded message, not the raw KV block.
 CACHE_HIT_SAVINGS = dict(saved_rts=1, saved_req=MSG_BYTES,
-                         saved_resp=KV_BLOCK_BYTES)
+                         saved_resp=MSG_BYTES)
 CACHE_NEG_SAVINGS = dict(saved_rts=2, saved_req=2 * MSG_BYTES,
-                         saved_resp=2 * KV_BLOCK_BYTES)
+                         saved_resp=2 * MSG_BYTES)
 
 
 def cached_get(cache, meter, key: int, mn_get):
@@ -95,7 +97,7 @@ class OutbackShard:
                  overflow_frac: float = 0.08, rng_seed: int = 0,
                  num_buckets: int | None = None, oth_ma: int | None = None,
                  oth_mb: int | None = None, heap_cap: int | None = None,
-                 cn_cache: CNKeyCache | None = None):
+                 cn_cache: CNKeyCache | None = None, transport=None):
         keys = np.asarray(keys, dtype=np.uint64)
         values = np.asarray(values, dtype=np.uint64)
         n = keys.shape[0]
@@ -119,6 +121,8 @@ class OutbackShard:
         self.heap_top = 0
         self.overflow = OverflowCache(max(64, int(n * overflow_frac)))
         self.meter = CommMeter()
+        # optional repro.net.Transport: meter events double as timed-op trace
+        self.meter.sink = transport
         self.frozen = False  # resize in progress: inserts/deletes rejected
         self.cn_cache = cn_cache  # optional CN-side hot-key cache
 
@@ -189,7 +193,7 @@ class OutbackShard:
             addr = int(f["addr_lo"])
             k_lo, k_hi = int(self.heap_klo[addr]), int(self.heap_khi[addr])
             # CN: full-key check on the returned block.
-            self.meter.add(0, cn_cmp=1)
+            self.meter.add(0, cn_cmp=1, attach=True)
             if (k_lo, k_hi) == (lo, hi):
                 val = (int(self.heap_vhi[addr]) << 32) | int(self.heap_vlo[addr])
                 return GetResult(val, 1, False)
@@ -204,7 +208,7 @@ class OutbackShard:
         bucket's (<=4) blocks; returns the fresh seed if it re-seeded."""
         addr, probes = self.overflow.lookup(lo, hi)
         self.meter.add(rts=1, req=GET_REQ_BYTES + 8, resp=KV_BLOCK_BYTES,
-                       mn_hash=1, mn_cmp=probes, mn_reads=probes)
+                       mn_hash=1, mn_cmp=probes, mn_reads=probes, cont=True)
         if addr is not None:
             val = (int(self.heap_vhi[addr]) << 32) | int(self.heap_vlo[addr])
             return GetResult(val, 2, True)
@@ -213,7 +217,7 @@ class OutbackShard:
             if int(f["len"]) == 0:
                 continue
             a = int(f["addr_lo"])
-            self.meter.add(0, mn_cmp=1, mn_reads=2)
+            self.meter.add(0, mn_cmp=1, mn_reads=2, attach=True)
             if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
                 # Seed changed MN-side; CN refreshes its copy (paper §4.3.1).
                 self.cn.seeds[bucket] = self.seeds_mn[bucket]
@@ -247,10 +251,10 @@ class OutbackShard:
 
         if int(f["len"]) != 0:
             # Occupied: fingerprint short-circuit, then full-key compare.
-            self.meter.add(0, mn_cmp=1)
+            self.meter.add(0, mn_cmp=1, attach=True)
             if int(f["fp"]) == fp:
                 a = int(f["addr_lo"])
-                self.meter.add(0, mn_cmp=1, mn_reads=1)
+                self.meter.add(0, mn_cmp=1, mn_reads=1, attach=True)
                 if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
                     # Resolves to Update (in place: fixed-size values).
                     self.heap_vlo[a] = value & 0xFFFFFFFF
@@ -262,11 +266,11 @@ class OutbackShard:
         # Update there, or a re-insert would duplicate it — n_keys drifts
         # and Delete of the slot copy resurrects the overflow copy.
         addr0, probes = self.overflow.lookup(lo, hi)
-        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_reads=probes)
+        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_reads=probes, attach=True)
         if addr0 is not None:
             self.heap_vlo[addr0] = value & 0xFFFFFFFF
             self.heap_vhi[addr0] = (value >> 32) & 0xFFFFFFFF
-            self.meter.add(0, mn_writes=1)
+            self.meter.add(0, mn_writes=1, attach=True)
             return "update"
 
         addr = self._heap_write(lo, hi, value & 0xFFFFFFFF, (value >> 32) & 0xFFFFFFFF)
@@ -286,11 +290,11 @@ class OutbackShard:
             addrs = [int(self.slots_lo[b, t]) for t in occ]
             k_lo = np.array([int(self.heap_klo[a]) for a in addrs] + [lo], np.uint32)
             k_hi = np.array([int(self.heap_khi[a]) for a in addrs] + [hi], np.uint32)
-            self.meter.add(0, mn_reads=len(occ))
+            self.meter.add(0, mn_reads=len(occ), attach=True)
             new_seed = ludo.find_bucket_seed(k_lo, k_hi)
             # Account the brute force: ~(tries x keys) hashes on the MN.
             self.meter.add(0, mn_hash=(new_seed + 1 if new_seed is not None
-                                       else ludo.MAX_SEED) * len(k_lo))
+                                       else ludo.MAX_SEED) * len(k_lo), attach=True)
             if new_seed is not None:
                 old_lo = self.slots_lo[b].copy()
                 old_hi = self.slots_hi[b].copy()
@@ -310,7 +314,7 @@ class OutbackShard:
 
         # case 3: all four slots taken -> overflow cache + cache bit.
         ok, probes = self.overflow.insert(lo, hi, addr)
-        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_writes=1)
+        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_writes=1, attach=True)
         if not ok:
             raise ShardFullError("overflow cache full: s_stop breached")
         self.slots_hi[b, s] |= np.uint32(1 << slots.CACHE_SHIFT)
@@ -337,15 +341,15 @@ class OutbackShard:
             if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
                 self.heap_vlo[a] = value & 0xFFFFFFFF
                 self.heap_vhi[a] = (value >> 32) & 0xFFFFFFFF
-                self.meter.add(0, mn_writes=1)
+                self.meter.add(0, mn_writes=1, attach=True)
                 return True
         if int(f["cache"]) == 1:  # redirect to overflow cache
             addr, probes = self.overflow.lookup(lo, hi)
-            self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_reads=probes)
+            self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_reads=probes, attach=True)
             if addr is not None:
                 self.heap_vlo[addr] = value & 0xFFFFFFFF
                 self.heap_vhi[addr] = (value >> 32) & 0xFFFFFFFF
-                self.meter.add(0, mn_writes=1)
+                self.meter.add(0, mn_writes=1, attach=True)
                 return True
         # Stale CN seed: retry against every slot of the bucket (MN-side).
         for t in range(4):
@@ -353,11 +357,11 @@ class OutbackShard:
             if int(ft["len"]) == 0 or t == s:
                 continue
             a = int(ft["addr_lo"])
-            self.meter.add(0, mn_cmp=1, mn_reads=1)
+            self.meter.add(0, mn_cmp=1, mn_reads=1, attach=True)
             if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
                 self.heap_vlo[a] = value & 0xFFFFFFFF
                 self.heap_vhi[a] = (value >> 32) & 0xFFFFFFFF
-                self.meter.add(0, mn_writes=1)
+                self.meter.add(0, mn_writes=1, attach=True)
                 self.cn.seeds[b] = self.seeds_mn[b]
                 return True
         return False
@@ -385,11 +389,11 @@ class OutbackShard:
                 cache_bit = np.uint32(int(f["cache"]) << slots.CACHE_SHIFT)
                 self.slots_lo[b, s] = 0
                 self.slots_hi[b, s] = cache_bit  # keep cache hint
-                self.meter.add(0, mn_writes=1)
+                self.meter.add(0, mn_writes=1, attach=True)
                 self.n_keys -= 1
                 return True
         ok, probes = self.overflow.delete(lo, hi)
-        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_writes=1 if ok else 0)
+        self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_writes=1 if ok else 0, attach=True)
         if ok:
             self.n_keys -= 1
         return ok

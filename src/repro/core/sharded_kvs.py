@@ -50,7 +50,9 @@ from repro.compat import shard_map
 from repro.core import ludo, slots
 from repro.core.cn_cache import ShardedCNCache, cache_probe
 from repro.core.hashing import hash64_32, slot_hash, split_u64
-from repro.core.outback import OutbackShard
+from repro.core.meter import CommMeter
+from repro.core.outback import (GET_REQ_BYTES, KV_BLOCK_BYTES, OutbackShard,
+                                meter_cache_batch)
 
 _ROUTE_SEED = 0x50A7ED
 SENT = 0xFFFFFFFF  # sentinel key lane (no real key hashes to all-ones twice)
@@ -76,6 +78,10 @@ class ShardedKVSState:
     heap_cap: int  # per shard (padded to a multiple of D)
     ma: int  # othello geometry, equal across shards
     mb: int
+    # transport seam: set by build_sharded(transport=...); make_get_fn then
+    # returns a host wrapper that meters every batched Get into it, putting
+    # the mesh path on the same simulated clock as the scalar protocols
+    meter: CommMeter | None = None
 
     def arrays(self):
         return (self.words_a, self.words_b, self.seeds, self.oth_meta,
@@ -96,9 +102,14 @@ class ShardedKVSState:
 
 def build_sharded(keys: np.ndarray, values: np.ndarray, *, num_shards: int,
                   data_parallel: int, load_factor: float = 0.85,
-                  heap_slack: float = 1.5, rng_seed: int = 0) -> ShardedKVSState:
+                  heap_slack: float = 1.5, rng_seed: int = 0,
+                  transport=None) -> ShardedKVSState:
     """Partition keys into ``num_shards`` equal-geometry Outback shards and
-    stack their components for mesh placement (heap co-located per row)."""
+    stack their components for mesh placement (heap co-located per row).
+
+    With ``transport`` (a ``repro.net.Transport``), the state carries a
+    CommMeter sinking into it and ``make_get_fn`` meters each batched Get;
+    the default ``None`` leaves the mesh path exactly as before."""
     keys = np.asarray(keys, dtype=np.uint64)
     values = np.asarray(values, dtype=np.uint64)
     lo, hi = split_u64(keys)
@@ -114,7 +125,12 @@ def build_sharded(keys: np.ndarray, values: np.ndarray, *, num_shards: int,
     M = num_shards
     wa_words = (ma + 31) // 32
     wb_words = (mb + 31) // 32
+    meter = None
+    if transport is not None:
+        meter = CommMeter()
+        meter.sink = transport
     st = ShardedKVSState(
+        meter=meter,
         words_a=np.zeros((M, wa_words), np.uint32),
         words_b=np.zeros((M, wb_words), np.uint32),
         seeds=np.zeros((M, nb), np.uint8),
@@ -368,7 +384,33 @@ def make_get_fn(mesh: Mesh, st: ShardedKVSState, batch_per_device: int,
                        in_specs=(qspec, qspec, *cache_specs,
                                  *st.array_specs()),
                        out_specs=out_specs)
-    return jax.jit(fn), (cap_m, cap_d)
+    jitted = jax.jit(fn)
+    if st.meter is None:
+        return jitted, (cap_m, cap_d)
+
+    # Transport seam: meter each batched Get with the same per-op protocol
+    # costs the scalar paths account, so the mesh workload replays on the
+    # simulated RDMA clock.  Pure observation — results pass through.
+    from repro.core.baselines import RaceKVS  # local: avoids import cycle
+
+    def metered_get(q_lo, q_hi, *arrays):
+        out = jitted(q_lo, q_hi, *arrays)
+        n = int(np.prod(q_lo.shape))
+        if cache is not None:
+            n_hit = int(np.asarray(out[3]).sum())
+            meter_cache_batch(st.meter, n_hit, 0)
+            n -= n_hit
+        if variant == "race":
+            st.meter.add(n, rts=2, req=32,
+                         resp=2 * RaceKVS.GROUP_BYTES + KV_BLOCK_BYTES,
+                         one_sided=True, cn_hash=3,
+                         cn_cmp=2 * RaceKVS.GROUP_SLOTS + 1)
+        else:
+            st.meter.add(n, rts=1, req=GET_REQ_BYTES, resp=KV_BLOCK_BYTES,
+                         cn_hash=5, cn_cmp=1, mn_reads=2)
+        return out
+
+    return metered_get, (cap_m, cap_d)
 
 
 def place_state(mesh: Mesh, st: ShardedKVSState):

@@ -49,12 +49,14 @@ class OutbackStore:
     def __init__(self, keys: np.ndarray, values: np.ndarray, *,
                  load_factor: float = 0.85, initial_depth: int = 0,
                  num_compute_nodes: int = 2, rng_seed: int = 0,
-                 cn_cache_budget_bytes: int = 0):
+                 cn_cache_budget_bytes: int = 0, transport=None):
         self.load_factor = load_factor
         self.num_compute_nodes = num_compute_nodes
         self.global_depth = initial_depth
         self.rng_seed = rng_seed
-        self.meter = CommMeter()
+        self.transport = transport  # optional repro.net.Transport, shared by
+        self.meter = CommMeter()    # the directory meter and every table's
+        self.meter.sink = transport
         self.resize_events: list[ResizeEvent] = []
         self._op_count = 0
         # Every compute node gets the same fixed cache budget; the store
@@ -71,7 +73,8 @@ class OutbackStore:
             m = dir_idx == e
             tables.append(OutbackShard(keys[m], values[m],
                                        load_factor=load_factor,
-                                       rng_seed=rng_seed + e))
+                                       rng_seed=rng_seed + e,
+                                       transport=transport))
             self.local_depth.append(initial_depth)
         # directory[i] -> table index (tables may be shared across entries)
         self.directory = list(range(1 << initial_depth))
@@ -200,6 +203,10 @@ class OutbackStore:
             self.global_depth += 1
         # PRE_RESIZE broadcast + RC setup with every compute node.
         self.meter.add(self.num_compute_nodes, rts=1, req=MSG_BYTES, resp=8)
+        if self.transport is not None:
+            # the rebuild steals MN CPU share for its duration (§4.4) —
+            # the simulator turns this into a throughput-dip window
+            self.transport.mark_resize(self.tables[t_idx].n_keys)
         self.tables[t_idx].frozen = True
         self._buffer = []
         h = SplitHandle(self, t_idx, depth)
@@ -209,13 +216,15 @@ class OutbackStore:
     def _finish_split(self, h: "SplitHandle") -> None:
         t_idx, depth = h.t_idx, h.depth
         # One-sided locator fetch by every compute node (§4.4): polls of
-        # (N_cNode, len), the bulk read, and the FAA decrement.
+        # (N_cNode, len), the bulk read, and the FAA decrement — RDMA READ
+        # payloads, not RPC messages, so no message padding applies.
         per_cn = 0
         for t in (h.t_lo, h.t_hi):
             oth = t.cn.othello
             per_cn += (8 + 8 + 8 + t.cn.seeds.nbytes
                        + oth.words_a.nbytes + oth.words_b.nbytes)
-        self.meter.add(self.num_compute_nodes, rts=3, req=16, resp=per_cn)
+        self.meter.add(self.num_compute_nodes, rts=3, req=16, resp=per_cn,
+                       one_sided=True)
 
         # Swap directory pointers.
         self.tables.append(h.t_hi)
@@ -309,11 +318,13 @@ class SplitHandle:
         self.t_lo = OutbackShard(keys[~side], vals[~side],
                                  load_factor=store.load_factor,
                                  num_buckets=nb,
-                                 rng_seed=store.rng_seed + 101 * len(store.tables))
+                                 rng_seed=store.rng_seed + 101 * len(store.tables),
+                                 transport=store.transport)
         self.t_hi = OutbackShard(keys[side], vals[side],
                                  load_factor=store.load_factor,
                                  num_buckets=nb,
-                                 rng_seed=store.rng_seed + 101 * len(store.tables) + 1)
+                                 rng_seed=store.rng_seed + 101 * len(store.tables) + 1,
+                                 transport=store.transport)
         self.n_live = int(keys.shape[0])
         self.rebuild_seconds = time.perf_counter() - t0
 

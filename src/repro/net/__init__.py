@@ -1,0 +1,32 @@
+"""``repro.net`` — a discrete-event RDMA transport simulator.
+
+Turns the static per-op counters every KVS feeds its
+:class:`repro.core.meter.CommMeter` (round trips, padded on-wire bytes,
+MN/CN hash/compare/memory work — see that module for the accounting
+rules) into *time*: per-op latency distributions, closed-loop throughput
+versus client count, doorbell-batching effects, and resize-dip timelines.
+
+Usage::
+
+    from repro.net import Transport, simulate
+    tr = Transport()
+    shard = OutbackShard(keys, vals, transport=tr)   # meter events -> trace
+    shard.get_batch(queries)
+    res = simulate(tr.trace, clients=8, mn_threads=1)
+    res.percentiles()            # {'p50_us': ..., 'p99_us': ..., ...}
+    res.tput_mops                # closed-loop modeled throughput
+
+Passing ``transport=None`` (the default everywhere) leaves every KVS
+byte-for-byte on the plain metered path — the simulator is a pure
+observer.  Service-rate constants live in :mod:`repro.net.service`; the
+simulation itself (:mod:`repro.net.replay`) is deterministic — no wall
+clock, no RNG in any event path.
+"""
+
+from repro.net.replay import SimResult, simulate
+from repro.net.service import CX3, CX6, ServiceModel
+from repro.net.sim import Server, Simulator
+from repro.net.transport import OpEvent, ResizeMark, Segment, Transport
+
+__all__ = ["CX3", "CX6", "OpEvent", "ResizeMark", "Segment", "Server",
+           "ServiceModel", "SimResult", "Simulator", "Transport", "simulate"]

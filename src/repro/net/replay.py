@@ -1,0 +1,198 @@
+"""Closed-loop replay of a recorded op trace through the event simulator.
+
+``simulate(trace, clients=C, window=W, ...)`` models ``C`` compute-node
+clients, each owning one RC queue pair with at most ``W`` outstanding
+operations (the bounded-outstanding-verbs window).  Clients pull ops from
+the shared trace in order; each op runs its round-trip segments in
+sequence:
+
+  CN compute -> post (per-QP server, doorbell-coalesced) -> wire ->
+  MN NIC (shared) -> MN CPU (shared, ``mn_threads`` workers; skipped for
+  one-sided verbs) -> wire -> CN completion.
+
+Everything is deterministic: the event heap breaks time ties by insertion
+order and no randomness exists anywhere, so the same trace produces
+bit-identical latency percentiles on every run.
+
+A :class:`repro.net.transport.ResizeMark` in the trace opens a rebuild
+window: the MN CPU's service times stretch by ``resize_slow_factor`` for
+the simulated duration of rebuilding ``n_live`` keys (§4.4's
+CPU-share-during-resize effect), and the window is reported so callers can
+plot the throughput dip timeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.net.service import CX6, ServiceModel
+from repro.net.sim import Server, Simulator
+from repro.net.transport import OpEvent, ResizeMark
+
+
+@dataclasses.dataclass
+class SimResult:
+    n_ops: int
+    seconds: float              # makespan (first post to last completion)
+    latencies_us: np.ndarray    # per-op, in completion order
+    completions_s: np.ndarray   # completion timestamps, same order
+    resize_windows: list[tuple[float, float]]
+    mn_cpu_busy_s: float
+    mn_nic_busy_s: float
+
+    @property
+    def tput_mops(self) -> float:
+        return self.n_ops / max(self.seconds, 1e-12) / 1e6
+
+    def percentile_us(self, q: float) -> float:
+        return float(np.percentile(self.latencies_us, q))
+
+    def percentiles(self) -> dict[str, float]:
+        p = self.latencies_us
+        return {"p50_us": float(np.percentile(p, 50)),
+                "p90_us": float(np.percentile(p, 90)),
+                "p99_us": float(np.percentile(p, 99)),
+                "p999_us": float(np.percentile(p, 99.9)),
+                "mean_us": float(p.mean()),
+                "max_us": float(p.max())}
+
+    def tput_in_window(self, t0: float, t1: float) -> float:
+        """Completed-ops throughput (Mops) inside a sim-time window."""
+        if t1 <= t0:
+            return 0.0
+        n = int(((self.completions_s >= t0) & (self.completions_s < t1)).sum())
+        return n / (t1 - t0) / 1e6
+
+
+def simulate(trace, *, clients: int = 1, window: int = 1,
+             mn_threads: int = 1, doorbell: bool = True,
+             service: ServiceModel = CX6,
+             max_ops: int | None = None) -> SimResult:
+    """Replay ``trace`` with ``clients`` closed-loop clients.
+
+    ``window`` bounds each client QP's outstanding ops (>=1); posting more
+    than one WQE back-to-back is where doorbell batching pays off.  There
+    is no randomness anywhere: the same trace and parameters produce
+    bit-identical percentiles on every run.
+    """
+    sim = Simulator()
+    mn_cpu = Server(sim, workers=max(1, mn_threads), name="mn_cpu")
+    mn_nic = Server(sim, workers=1, name="mn_nic")
+    items = list(trace)
+    if max_ops is not None:
+        kept, n = [], 0
+        for it in items:
+            if isinstance(it, OpEvent):
+                if n >= max_ops:
+                    continue
+                n += 1
+            kept.append(it)
+        items = kept
+
+    cursor = {"i": 0}
+    slow_open = {"n": 0}  # rebuild windows currently stealing CPU share
+    lat_us: list[float] = []
+    done_t: list[float] = []
+    windows: list[tuple[float, float]] = []
+
+    def next_item():
+        while cursor["i"] < len(items):
+            it = items[cursor["i"]]
+            cursor["i"] += 1
+            if isinstance(it, ResizeMark):
+                _open_resize_window(sim, mn_cpu, it, service, windows,
+                                    slow_open)
+                continue
+            return it
+        return None
+
+    class Client:
+        __slots__ = ("post", "inflight")
+
+        def __init__(self, cid: int) -> None:
+            # one RC QP per client: posts serialise here, and queued WQEs
+            # coalesce under one doorbell when batching is on
+            self.post = Server(
+                sim, workers=1,
+                coalesce=service.max_doorbell if doorbell else 1,
+                coalesce_extra_s=service.cn_post_batched_s,
+                name=f"qp{cid}")
+            self.inflight = 0
+
+        def pump(self) -> None:
+            while self.inflight < window:
+                op = next_item()
+                if op is None:
+                    return
+                self.inflight += 1
+                t0 = sim.now
+                sim.schedule(service.cn_compute_s(op.cn_hash, op.cn_cmp),
+                             lambda op=op, t0=t0: self._segment(op, 0, t0))
+
+        def _segment(self, op: OpEvent, si: int, t0: float) -> None:
+            if si >= len(op.segments):
+                lat_us.append((sim.now - t0) * 1e6)
+                done_t.append(sim.now)
+                self.inflight -= 1
+                self.pump()
+                return
+            seg = op.segments[si]
+
+            def after_post():
+                sim.schedule(service.wire_s, arrive_mn)
+
+            def arrive_mn():
+                mn_nic.request(service.mn_nic_s(seg), after_nic)
+
+            def after_nic():
+                if seg.one_sided:
+                    respond()
+                else:
+                    mn_cpu.request(service.mn_cpu_s(seg), respond)
+
+            def respond():
+                sim.schedule(service.wire_s + service.cn_recv_s(seg),
+                             lambda: self._segment(op, si + 1, t0))
+
+            self.post.request(service.cn_post_s, after_post)
+
+    cs = [Client(i) for i in range(max(1, clients))]
+    for c in cs:
+        c.pump()
+    sim.run()
+
+    return SimResult(
+        n_ops=len(lat_us), seconds=sim.now,
+        latencies_us=np.asarray(lat_us, dtype=np.float64),
+        completions_s=np.asarray(done_t, dtype=np.float64),
+        resize_windows=windows,
+        mn_cpu_busy_s=mn_cpu.busy_s, mn_nic_busy_s=mn_nic.busy_s)
+
+
+def _open_resize_window(sim: Simulator, mn_cpu: Server, mark: ResizeMark,
+                        service: ServiceModel,
+                        windows: list[tuple[float, float]],
+                        slow_open: dict) -> None:
+    """Stretch MN CPU service while the rebuild's CPU share is stolen.
+
+    Windows may overlap (back-to-back splits): the slowdown is held open
+    until the *last* one closes.
+    """
+    work = mark.n_live * service.rebuild_per_key_s
+    f = service.resize_slow_factor
+    # at CPU share 1/f the rebuild's `work` CPU-seconds take f/(f-1) x work
+    # of wall time, spread across the MN's worker threads
+    duration = work * (f / max(f - 1.0, 1e-9)) / mn_cpu.workers
+    t0 = sim.now
+    slow_open["n"] += 1
+    mn_cpu.factor = f
+    windows.append((t0, t0 + duration))
+
+    def close():
+        slow_open["n"] -= 1
+        if slow_open["n"] == 0:
+            mn_cpu.factor = 1.0
+
+    sim.schedule(duration, close)

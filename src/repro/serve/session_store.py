@@ -31,13 +31,16 @@ class KVSessionStore:
 
     def __init__(self, *, cn_cache_budget_bytes: int = 64 << 10,
                  bootstrap_keys: int = 4096, load_factor: float = 0.85,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, transport=None):
         # The store needs a non-empty build set; runtime Inserts grow it
         # (and exercise the §4.4 resize path once sessions pile up).
+        # ``transport`` (a repro.net.Transport) puts every park/resume
+        # Insert/Get on the simulated RDMA clock alongside user traffic.
         boot = make_uniform_keys(bootstrap_keys, seed=rng_seed + 97)
         self.store = OutbackStore(
             boot, splitmix64(boot), load_factor=load_factor,
-            rng_seed=rng_seed, cn_cache_budget_bytes=cn_cache_budget_bytes)
+            rng_seed=rng_seed, cn_cache_budget_bytes=cn_cache_budget_bytes,
+            transport=transport)
         self._lengths: dict[int, int] = {}  # rid -> n_words (for delete)
 
     @staticmethod

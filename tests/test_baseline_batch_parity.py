@@ -1,0 +1,102 @@
+"""Scalar vs. batched path parity for the baseline KVSs.
+
+``get``, ``get_batch`` and the isolated ``mn_get_batch`` must agree on
+values (hits AND misses) and on the per-op protocol accounting — the
+batched paths are what the throughput figures time, the scalar paths are
+what the protocol walkthroughs document, and the meter is what the
+transport simulator replays, so a silent divergence would skew every
+downstream number.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.hashing import hash_range, split_u64, splitmix64
+from repro.core.store import make_uniform_keys
+
+N = 20_000
+ABSENT = splitmix64(np.arange(1, 257, dtype=np.uint64) + np.uint64(1 << 45))
+
+
+@pytest.fixture(scope="module")
+def data():
+    keys = make_uniform_keys(N, 7)
+    return keys, splitmix64(keys)
+
+
+@pytest.mark.parametrize("cls", [RaceKVS, MicaKVS, ClusterKVS])
+def test_scalar_vs_batch_values_hits_and_misses(cls, data):
+    keys, vals = data
+    kvs = cls(keys, vals)
+    present = keys[:512]
+    q = np.concatenate([present, ABSENT])
+    v_lo, v_hi, match = kvs.get_batch(q)
+    got = (np.asarray(v_hi).astype(np.uint64) << np.uint64(32)) | \
+        np.asarray(v_lo).astype(np.uint64)
+    match = np.asarray(match)
+    for i, k in enumerate(q):
+        scalar = kvs.get(int(k))
+        if i < 512:
+            assert match[i] and scalar == int(vals[i]) == int(got[i])
+        else:
+            assert scalar is None and not match[i]
+
+
+@pytest.mark.parametrize("cls", [MicaKVS, ClusterKVS])
+def test_mn_get_batch_matches_get_batch(cls, data):
+    """The isolated MN kernel (what the MN-thread benchmarks time) returns
+    exactly what the full batched path returns."""
+    keys, vals = data
+    kvs = cls(keys, vals)
+    q = np.concatenate([keys[:1024], ABSENT])
+    lo, hi = split_u64(q)
+    if cls is MicaKVS:
+        arrays = (kvs.fp, kvs.addr, kvs.h_klo, kvs.h_khi, kvs.h_vlo, kvs.h_vhi)
+        b = hash_range(lo, hi, 0x111CA, kvs.nb).astype(np.int32)
+        fp = RaceKVS._fp(lo, hi)
+    else:
+        arrays = (kvs.fp, kvs.addr, kvs.nxt,
+                  kvs.h_klo, kvs.h_khi, kvs.h_vlo, kvs.h_vhi)
+        b = hash_range(lo, hi, 0xC1C1, kvs.nb).astype(np.int32)
+        fp = ClusterKVS._fp14(lo, hi)
+    m_lo, m_hi, m_ok = kvs.mn_get_batch(b, fp, lo, hi, arrays)
+    f_lo, f_hi, f_ok = kvs.get_batch(q)
+    np.testing.assert_array_equal(np.asarray(m_ok), np.asarray(f_ok))
+    ok = np.asarray(m_ok)
+    np.testing.assert_array_equal(np.asarray(m_lo)[ok], np.asarray(f_lo)[ok])
+    np.testing.assert_array_equal(np.asarray(m_hi)[ok], np.asarray(f_hi)[ok])
+    assert ok[:1024].all() and not ok[1024:].any()
+
+
+@pytest.mark.parametrize("cls,rts", [(RaceKVS, 2), (MicaKVS, 1),
+                                     (ClusterKVS, 1), (DummyKVS, 1)])
+def test_meter_counts_scalar_equals_batch(cls, rts, data):
+    """Per-op round trips agree between the scalar protocol walk and the
+    batched accounting (on clean hits — no fingerprint false positives)."""
+    keys, vals = data
+    kvs = cls(keys, vals)
+    kvs.meter.reset()
+    _ = kvs.get_batch(keys[:1024])
+    batch = kvs.meter.per_op()
+    assert batch["round_trips"] == rts
+    kvs.meter.reset()
+    hits = 0
+    for k in keys[:256]:
+        hits += kvs.get(int(k)) is not None
+    scalar = kvs.meter.per_op()
+    assert hits == 256
+    # fp false positives may add the odd extra RT on the one-sided path
+    assert scalar["round_trips"] == pytest.approx(rts, abs=0.1)
+    # two-sided RPC responses are padded to MSG_BYTES in both directions;
+    # one-sided READ payloads are raw in both
+    if cls is RaceKVS:
+        assert batch["req_bytes"] == 32 and batch["resp_bytes"] == 160
+    elif cls is not DummyKVS:
+        assert batch["req_bytes"] == 64 and batch["resp_bytes"] == 64
+    # MN compute parity: the scalar walk and the batched kernel charge the
+    # memory node in the same direction (zero stays zero)
+    if cls is RaceKVS:
+        assert scalar["mn_cmp_ops"] == batch["mn_cmp_ops"] == 0
+    else:
+        assert (scalar["mn_cmp_ops"] > 0) == (batch["mn_cmp_ops"] > 0)

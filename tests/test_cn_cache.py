@@ -163,7 +163,8 @@ def test_cache_off_meter_unchanged(kv):
     sh.get_batch(keys[:1024])
     m = sh.meter
     assert (m.ops, m.round_trips) == (1024, 1024)
-    assert m.req_bytes == 1024 * 64 and m.resp_bytes == 1024 * 32
+    # both directions of an RPC message are padded to MSG_BYTES (§5.1)
+    assert m.req_bytes == 1024 * 64 and m.resp_bytes == 1024 * 64
     assert m.cache_hits == m.saved_round_trips == m.saved_req_bytes == 0
 
 

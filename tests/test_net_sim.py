@@ -1,0 +1,325 @@
+"""repro.net: the discrete-event RDMA transport simulator.
+
+Covers the PR-2 acceptance criteria: determinism under a fixed seed,
+latency orderings (Outback <= two-sided baselines, one-sided RACE ~2x
+Outback's p50), closed-loop saturation with RPC-Dummy as the upper bound,
+doorbell batching, resize-dip windows, the Makeup-Get continuation rule,
+and that ``transport=None`` keeps every metered path byte-for-byte
+unchanged.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.hashing import splitmix64
+from repro.core.meter import CommMeter
+from repro.core.outback import OutbackShard
+from repro.core.store import OutbackStore, make_uniform_keys
+from repro.net import (CX3, CX6, OpEvent, ResizeMark, Segment, Simulator,
+                       Transport, simulate)
+
+N = 20_000
+
+
+@pytest.fixture(scope="module")
+def data():
+    keys = make_uniform_keys(N, 7)
+    return keys, splitmix64(keys)
+
+
+@pytest.fixture(scope="module")
+def queries(data):
+    keys, _ = data
+    return keys[np.random.default_rng(3).integers(0, N, 4096)]
+
+
+def _trace(cls, data, queries, **kw):
+    keys, vals = data
+    tr = Transport()
+    kvs = cls(keys, vals, transport=tr, **kw)
+    kvs.get_batch(queries)
+    return tr
+
+
+@pytest.fixture(scope="module")
+def traces(data, queries):
+    return {
+        "outback": _trace(OutbackShard, data, queries, load_factor=0.85),
+        "race": _trace(RaceKVS, data, queries),
+        "mica": _trace(MicaKVS, data, queries),
+        "cluster": _trace(ClusterKVS, data, queries),
+        "dummy": _trace(DummyKVS, data, queries),
+    }
+
+
+# ------------------------------------------------------------ engine basics
+def test_simulator_deterministic_tie_break():
+    sim = Simulator()
+    seen = []
+    for i in range(5):
+        sim.schedule(1.0, lambda i=i: seen.append(i))  # all at t=1.0
+    sim.run()
+    assert seen == [0, 1, 2, 3, 4]
+
+
+def test_simulation_is_deterministic(traces):
+    t = traces["outback"].trace
+    a = simulate(t, clients=7, window=2)
+    b = simulate(t, clients=7, window=2)
+    assert a.percentiles() == b.percentiles()
+    assert np.array_equal(a.latencies_us, b.latencies_us)
+    assert a.seconds == b.seconds
+
+
+def test_trace_replay_counts_every_op(traces):
+    for name, tr in traces.items():
+        res = simulate(tr.trace, clients=4)
+        assert res.n_ops == len(tr) >= 4096, name
+
+
+# ------------------------------------------------- the paper's lat orderings
+def test_latency_outback_leq_two_sided(traces):
+    p50 = {k: simulate(tr.trace, clients=1).percentile_us(50)
+           for k, tr in traces.items()}
+    assert p50["outback"] <= p50["mica"]
+    assert p50["outback"] <= p50["cluster"]
+
+
+def test_latency_race_two_dependent_round_trips(traces):
+    p_out = simulate(traces["outback"].trace, clients=1).percentile_us(50)
+    p_race = simulate(traces["race"].trace, clients=1).percentile_us(50)
+    assert 1.6 <= p_race / p_out <= 2.6  # ~2x: two dependent RTs
+
+
+def test_latency_cx3_slower_than_cx6(traces):
+    t = traces["outback"].trace
+    assert (simulate(t, clients=1, service=CX3).percentile_us(50)
+            > simulate(t, clients=1, service=CX6).percentile_us(50))
+
+
+# -------------------------------------------------------- closed-loop scale
+def test_throughput_saturates_with_clients(traces):
+    t = traces["outback"].trace
+    tput = [simulate(t, clients=c).tput_mops for c in (1, 4, 16, 64)]
+    assert tput[1] > 3.5 * tput[0]  # linear region
+    assert tput[3] == pytest.approx(tput[2], rel=0.15)  # saturated
+    lat = [simulate(t, clients=c).percentile_us(50) for c in (1, 64)]
+    assert lat[1] > lat[0]  # queueing shows up past saturation
+
+
+def test_dummy_is_the_upper_bound(traces):
+    tput = {k: simulate(tr.trace, clients=64).tput_mops
+            for k, tr in traces.items()}
+    for k in ("outback", "race", "mica", "cluster"):
+        assert tput[k] < tput["dummy"], (k, tput)
+    # and the MN-compute ordering survives the trip through simulated time
+    assert tput["mica"] < tput["outback"]
+
+
+def test_mn_threads_scale_rpc_throughput(traces):
+    t = traces["mica"].trace
+    one = simulate(t, clients=64, mn_threads=1).tput_mops
+    two = simulate(t, clients=64, mn_threads=2).tput_mops
+    assert two > 1.6 * one
+
+
+def test_doorbell_batching_pays_at_depth(traces):
+    t = traces["outback"].trace
+    on = simulate(t, clients=1, window=8, doorbell=True)
+    off = simulate(t, clients=1, window=8, doorbell=False)
+    assert on.tput_mops > 1.1 * off.tput_mops
+    # at window=1 there is nothing to coalesce: identical schedules
+    a = simulate(t, clients=2, window=1, doorbell=True)
+    b = simulate(t, clients=2, window=1, doorbell=False)
+    assert a.percentiles() == b.percentiles()
+
+
+# ------------------------------------------------------------- resize window
+def test_resize_mark_opens_dip_window(data):
+    keys, vals = data
+    tr = Transport()
+    store = OutbackStore(keys[:8000], vals[:8000], load_factor=0.85,
+                         transport=tr)
+    q = keys[:2048]
+    store.get_batch(q)
+    h = store.begin_split(0)
+    for _ in range(6):
+        store.get_batch(q)  # stale table serves during the rebuild
+    h.build()
+    h.finish()
+    store.get_batch(q)
+    res = simulate(tr.trace, clients=8)
+    assert len(res.resize_windows) == 1
+    w0, w1 = res.resize_windows[0]
+    assert 0 < w0 < w1 < res.seconds
+    before = res.tput_in_window(0, w0)
+    during = res.tput_in_window(w0, w1)
+    assert during < 0.8 * before  # the Fig.-17 dip
+
+
+def test_overlapping_resize_windows_keep_slowdown_open():
+    """Back-to-back splits: the MN slowdown must persist until the LAST
+    rebuild window closes, not reset when the first one does."""
+    op = OpEvent(segments=(Segment(req_bytes=64, resp_bytes=64, mn_reads=2),))
+    trace = [op] * 64 + [ResizeMark(4000), op, ResizeMark(4000)] + [op] * 4096
+    res = simulate(trace, clients=8)
+    assert len(res.resize_windows) == 2
+    (a0, a1), (b0, b1) = res.resize_windows
+    assert b0 < a1 < b1  # the windows genuinely overlap
+    # while both/either are open, service runs at the slow rate
+    assert res.tput_in_window(b0, b1) < 0.8 * res.tput_in_window(0, a0)
+    assert res.tput_in_window(b1, res.seconds) > res.tput_in_window(b0, b1)
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("variant", ["outback", "race"])
+def test_sharded_mesh_rides_the_clock(data, variant):
+    """build_sharded(transport=...) + make_get_fn meter the mesh Get path
+    into the same trace the scalar protocols use."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import sharded_kvs as skv
+    from repro.core.hashing import split_u64
+
+    keys, vals = data
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tr = Transport()
+    st = skv.build_sharded(keys, vals, num_shards=1, data_parallel=1,
+                           transport=tr)
+    arrays = skv.place_state(mesh, st)
+    fn, _ = skv.make_get_fn(mesh, st, 1024, variant=variant)
+    q = keys[np.random.default_rng(5).integers(0, N, 1024)]
+    qlo, qhi = split_u64(q)
+    qs = NamedSharding(mesh, P(("data", "model")))
+    v_lo, v_hi, match = fn(jax.device_put(jnp.asarray(qlo), qs),
+                           jax.device_put(jnp.asarray(qhi), qs), *arrays)
+    assert np.asarray(match).all()
+    got = (np.asarray(v_hi).astype(np.uint64) << np.uint64(32)) | \
+        np.asarray(v_lo)
+    np.testing.assert_array_equal(got, splitmix64(q))
+    assert len(tr) == 1024 and st.meter.ops == 1024
+    res = simulate(tr.trace, clients=4)
+    assert res.n_ops == 1024
+    rts = 2 if variant == "race" else 1
+    assert all(len(e.segments) == rts for e in tr.trace
+               if isinstance(e, OpEvent))
+
+
+# ------------------------------------------- meter -> trace translation rules
+def test_makeup_get_rides_as_continuation(data):
+    keys, vals = data
+    tr = Transport()
+    sh = OutbackShard(keys[:2000], vals[:2000], load_factor=0.85,
+                      transport=tr)
+    missing = int(splitmix64(np.uint64([1 << 50]))[0])
+    sh.get(missing)  # miss: Get + Makeup-Get, 2 meter ops, ONE logical op
+    assert sh.meter.ops == 2 and sh.meter.round_trips == 2
+    ops = [e for e in tr.trace if isinstance(e, OpEvent)]
+    assert len(ops) == 1 and len(ops[0].segments) == 2
+
+
+def test_batch_makeups_attach_to_distinct_ops(data):
+    keys, vals = data
+    tr = Transport()
+    sh = OutbackShard(keys[:2000], vals[:2000], load_factor=0.85,
+                      transport=tr)
+    # force overflow residents -> batched Get resolves them via Makeup-Get
+    extra = splitmix64(np.arange(1, 200, dtype=np.uint64) + np.uint64(1 << 40))
+    for k in extra:
+        sh.insert(int(k), int(k) & (2**62 - 1))
+    tr.reset()
+    _, _, match = sh.get_batch(extra, resolve_makeup=True)
+    assert np.asarray(match).all()
+    two_rt = [e for e in tr.trace
+              if isinstance(e, OpEvent) and len(e.segments) >= 2]
+    assert len(two_rt) >= 2  # spread over distinct ops, not stacked on one
+    assert max(len(e.segments) for e in tr.trace) <= 3
+
+
+def test_one_sided_bytes_not_padded():
+    m = CommMeter()
+    m.add(1, rts=1, req=16, resp=32)                  # two-sided: padded
+    assert (m.req_bytes, m.resp_bytes) == (64, 64)
+    m.reset()
+    m.add(1, rts=1, req=16, resp=32, one_sided=True)  # READ payload: raw
+    assert (m.req_bytes, m.resp_bytes) == (16, 32)
+
+
+def test_add_attach_charges_same_op():
+    m = CommMeter()
+    m.add(1, rts=1, req=8, resp=8, mn_reads=2)
+    m.add(0, rts=1, req=8, resp=8, mn_cmp=3,
+          attach=True)  # extra RT on the same op
+    assert m.ops == 1 and m.round_trips == 2 and m.mn_cmp_ops == 3
+    assert m.req_bytes == 2 * 64
+
+
+def test_add_zero_without_attach_is_a_noop():
+    """Dynamically-computed lane counts may reach 0 (e.g. a fully cache-hit
+    batch): that must add nothing and must not mutate the trace."""
+    from repro.net import Transport
+    tr = Transport()
+    m = CommMeter()
+    m.sink = tr
+    m.add(2, rts=1, req=8, resp=8)
+    snap = m.snapshot()
+    m.add(0, rts=1, req=8, resp=8)  # empty batch remainder: no-op
+    assert m.snapshot() == snap
+    assert len(tr) == 2 and all(len(e.segments) == 1 for e in tr.trace)
+
+
+def test_fully_cached_batch_adds_no_phantom_round_trip(data):
+    from repro.core.cn_cache import CNKeyCache
+    keys, vals = data
+    sh = OutbackShard(keys, vals, load_factor=0.85,
+                      cn_cache=CNKeyCache(1 << 20))
+    hot = keys[:64]
+    for _ in range(3):
+        sh.get_batch(hot)  # admit the whole set
+    before = sh.meter.snapshot()
+    sh.get_batch(hot)  # 100% cache hits: zero wire traffic
+    after = sh.meter.snapshot()
+    assert after["round_trips"] == before["round_trips"]
+    assert after["req_bytes"] == before["req_bytes"]
+    assert after["ops"] == before["ops"] + 64
+
+
+# ------------------------------------------------- transport=None unchanged
+def test_transport_none_identical_meters(data, queries):
+    keys, vals = data
+    plain = OutbackShard(keys, vals, load_factor=0.85)
+    wired = OutbackShard(keys, vals, load_factor=0.85, transport=Transport())
+    plain.get_batch(queries)
+    wired.get_batch(queries)
+    assert plain.meter.snapshot() == wired.meter.snapshot()
+
+
+def test_session_store_rides_the_clock():
+    from repro.serve import KVSessionStore
+    tr = Transport()
+    ss = KVSessionStore(cn_cache_budget_bytes=32 << 10, bootstrap_keys=1024,
+                        transport=tr)
+    blob = bytes(range(256)) * 8
+    ss.put(1, blob)
+    n_after_put = len(tr)
+    assert n_after_put > 0  # inserts were recorded
+    assert ss.get(1) == blob
+    assert len(tr) > n_after_put  # ...and so were the reads
+    res = simulate(tr.trace, clients=4)
+    assert res.n_ops == len(tr) and res.percentile_us(50) > 0
+
+
+def test_trace_segments_wellformed(traces):
+    for name, tr in traces.items():
+        for e in tr.trace:
+            if isinstance(e, ResizeMark):
+                continue
+            assert isinstance(e, OpEvent) and len(e.segments) >= 1, name
+            for s in e.segments:
+                assert isinstance(s, Segment)
+                assert s.req_bytes >= 0 and s.resp_bytes >= 0
+                if s.one_sided:
+                    assert s.mn_hash == s.mn_cmp == 0  # no MN CPU for READs
