@@ -24,8 +24,21 @@ import time
 import jax
 import numpy as np
 
+from repro.api import StoreSpec
 from repro.core.hashing import splitmix64
 from repro.core.store import make_uniform_keys
+
+# The canonical per-scheme StoreSpecs every suite opens its stores from
+# (outback at lf 0.85 as in §5.1, baselines at their native defaults) —
+# one table so the fig rows and the lat/scale traces can never record
+# diverging specs into the same BENCH_*.json.
+SCHEME_SPECS = {
+    "outback": StoreSpec("outback", load_factor=0.85),
+    "race": StoreSpec("race"),
+    "mica": StoreSpec("mica"),
+    "cluster": StoreSpec("cluster"),
+    "dummy": StoreSpec("dummy"),
+}
 
 RPC_OVERHEAD_S = 150e-9  # MN-side poll + post per message
 RNIC_VERB_MOPS = 9.0  # effective one-sided READ verbs/s (millions) per node

@@ -1,8 +1,9 @@
 """Simulated-time benchmark suites (``lat``, ``scale``) built on repro.net.
 
-Each suite records a real workload through the ``transport=`` seam (the
-KVS runs its actual protocol; the CommMeter forwards every event) and
-replays it on the discrete-event RDMA clock.  Rows carry a 4th element — a
+Each suite opens its store through the ``repro.api`` registry with the
+stack's transport stage attached (the KVS runs its actual protocol; the
+CommMeter forwards every event) and replays the recorded trace on the
+discrete-event RDMA clock.  Rows carry a 4th element — a
 dict of extras (latency percentiles, modeled Mops) — that ``run.py
 --json`` persists for the perf-trajectory files (BENCH_*.json); the CSV
 contract stays 3 columns.
@@ -23,22 +24,25 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common as C
-from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
-from repro.core.outback import OutbackShard
-from repro.core.store import OutbackStore
+from repro.api import StoreSpec, open_store
 from repro.net import Transport, simulate
 
-_SCHEMES = (("outback", OutbackShard), ("race", RaceKVS), ("mica", MicaKVS),
-            ("cluster", ClusterKVS), ("dummy", DummyKVS))
+# the canonical per-scheme specs (benchmarks.common) the traces are
+# recorded under — persisted into the BENCH_*.json extras with each row
+SPECS = C.SCHEME_SPECS
+_SCHEMES = tuple(SPECS)
 
 
-def _record_get_trace(cls, keys, vals, q) -> Transport:
-    """Run the scheme's real batched-Get protocol with a transport attached;
-    the returned trace is the op stream the simulator replays."""
+def _record_get_trace(name, keys, vals, q) -> Transport:
+    """Run the scheme's real batched-Get protocol with the stack's
+    transport stage attached; the trace is what the simulator replays.
+
+    ``resolve_makeup=False``: the recorded stream is the raw 1-RT Get the
+    lat/scale suites have always replayed (the uniform API's default would
+    append host Makeup-Get continuations for overflow-resident keys)."""
     tr = Transport()
-    kw = {"load_factor": 0.85} if cls is OutbackShard else {}
-    kvs = cls(keys, vals, transport=tr, **kw)
-    kvs.get_batch(q)
+    store = open_store(SPECS[name], keys, vals, transport=tr)
+    store.get_batch(q, resolve_makeup=False)
     return tr
 
 
@@ -52,20 +56,21 @@ def lat_suite(quick: bool = False):
     vals = C.values_for(keys)
     q = keys[C.uniform_indices(n, n_ops, seed=11)]
     rows = []
-    for name, cls in _SCHEMES:
-        tr = _record_get_trace(cls, keys, vals, q)
+    for name in _SCHEMES:
+        tr = _record_get_trace(name, keys, vals, q)
         res = simulate(tr.trace, clients=1, window=1)
         pct = res.percentiles()
         rows.append((f"lat/get/{name}", round(pct["p50_us"], 4),
                      f"p99={pct['p99_us']:.3f}us",
                      {**{k: round(v, 4) for k, v in pct.items()},
-                      "tput_mops": round(res.tput_mops, 4)}))
+                      "tput_mops": round(res.tput_mops, 4),
+                      "spec": SPECS[name].to_json_dict()}))
         if name == "outback":
-            rows.extend(_doorbell_rows(tr.trace, "lat"))
+            rows.extend(_doorbell_rows(tr.trace, "lat", SPECS[name]))
     return rows
 
 
-def _doorbell_rows(trace, prefix: str):
+def _doorbell_rows(trace, prefix: str, spec: StoreSpec):
     """Doorbell batching on/off at a client-bound operating point (one QP,
     queue depth 8): posting cost is the bottleneck, so coalescing shows."""
     rows = []
@@ -75,7 +80,8 @@ def _doorbell_rows(trace, prefix: str):
         rows.append((f"{prefix}/doorbell_{'on' if db else 'off'}/outback",
                      round(p["p50_us"], 4), f"tput={r.tput_mops:.2f}Mops",
                      {**{k: round(v, 4) for k, v in p.items()},
-                      "tput_mops": round(r.tput_mops, 4)}))
+                      "tput_mops": round(r.tput_mops, 4),
+                      "spec": spec.to_json_dict()}))
     return rows
 
 
@@ -86,8 +92,8 @@ def scale_suite(quick: bool = False):
     q = keys[C.uniform_indices(n, n_ops, seed=12)]
     sweep = (1, 2, 4, 8, 16, 32)
     rows = []
-    for name, cls in _SCHEMES:
-        tr = _record_get_trace(cls, keys, vals, q)
+    for name in _SCHEMES:
+        tr = _record_get_trace(name, keys, vals, q)
         for c in sweep:
             res = simulate(tr.trace, clients=c, window=1)
             pct = res.percentiles()
@@ -95,7 +101,8 @@ def scale_suite(quick: bool = False):
                          round(res.tput_mops, 3),
                          {"clients": c, "tput_mops": round(res.tput_mops, 4),
                           "p50_us": round(pct["p50_us"], 4),
-                          "p99_us": round(pct["p99_us"], 4)}))
+                          "p99_us": round(pct["p99_us"], 4),
+                          "spec": SPECS[name].to_json_dict()}))
     rows.extend(_resize_timeline(keys, vals, q, quick))
     return rows
 
@@ -106,21 +113,23 @@ def _resize_timeline(keys, vals, q, quick: bool):
     m = len(keys) // 4
     seg = max(2048, len(q) // 4)
     tr = Transport()
-    store = OutbackStore(keys[:m], vals[:m], load_factor=0.85, transport=tr)
+    spec = StoreSpec("outback-dir", load_factor=0.85)
+    store = open_store(spec, keys[:m], vals[:m], transport=tr)
+    engine = store.engine  # the split handles live on the raw store
     qq = q[np.isin(q, keys[:m])]
     if qq.size < seg:  # top up from the build set deterministically
         qq = np.concatenate([qq, keys[:seg]])
-    store.get_batch(qq[:seg])
-    h = store.begin_split(0)       # drops the ResizeMark into the trace
+    store.get_batch(qq[:seg], resolve_makeup=False)
+    h = engine.begin_split(0)      # drops the ResizeMark into the trace
     # keep serving from the stale table for the whole rebuild window: the
     # slowdown lasts ~2 x 150 ns x n_live of simulated time, so issue
     # enough Gets to span it (and a tail that completes after it closes)
     for _ in range(-(-13 * m // (10 * seg))):
-        store.get_batch(qq[:seg])
+        store.get_batch(qq[:seg], resolve_makeup=False)
     h.build()
     h.finish()
-    store.get_batch(qq[:seg])
-    store.get_batch(qq[:seg])
+    store.get_batch(qq[:seg], resolve_makeup=False)
+    store.get_batch(qq[:seg], resolve_makeup=False)
     res = simulate(tr.trace, clients=8, window=1)
     if not res.resize_windows:
         return [("scale/resize/ERROR", 0.0, "no resize window in trace")]
@@ -129,12 +138,13 @@ def _resize_timeline(keys, vals, q, quick: bool):
     during = res.tput_in_window(w0, w1)
     after = res.tput_in_window(w1, res.seconds)
     dip = during / max(before, 1e-9)
+    sp = spec.to_json_dict()
     return [
         ("scale/resize/before_mops", round(w0 * 1e3, 4), round(before, 3),
-         {"tput_mops": round(before, 4)}),
+         {"tput_mops": round(before, 4), "spec": sp}),
         ("scale/resize/during_mops", round((w1 - w0) * 1e3, 4),
          round(during, 3), {"tput_mops": round(during, 4),
-                            "dip_ratio": round(dip, 3)}),
+                            "dip_ratio": round(dip, 3), "spec": sp}),
         ("scale/resize/after_mops", round((res.seconds - w1) * 1e3, 4),
-         round(after, 3), {"tput_mops": round(after, 4)}),
+         round(after, 3), {"tput_mops": round(after, 4), "spec": sp}),
     ]

@@ -2,7 +2,13 @@
 
 Measured on this host: jitted batched MN-side / CN-side work (µs/op) for
 every scheme + exact protocol counters; modeled Mops per benchmarks.common.
-Each function returns CSV rows (name, us_per_call, derived).
+Each function returns CSV rows (name, us_per_call, derived) plus, where a
+store was built, a 4th extras dict carrying the exact ``StoreSpec`` that
+ran (persisted by ``run.py --json`` into the BENCH_*.json contract).
+
+Every store is constructed through the ``repro.api`` registry
+(``open_store``); the engines' jit internals are still what gets timed,
+reached via the adapter's ``.engine``.
 """
 
 from __future__ import annotations
@@ -14,14 +20,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
+from repro.api import StoreSpec, open_store
 from repro.core import slots as slots_mod
-from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
-from repro.core.cn_cache import CNKeyCache, cache_probe
+from repro.core.baselines import ClusterKVS, RaceKVS
+from repro.core.cn_cache import cache_probe
 from repro.core.hashing import hash_range, split_u64
 from repro.core.outback import OutbackShard
-from repro.core.store import OutbackStore
 
 BATCH = 65536
+
+SPECS = C.SCHEME_SPECS  # the canonical per-scheme specs (benchmarks.common)
+
+
+def _spec_extra(spec: StoreSpec) -> dict:
+    return {"spec": spec.to_json_dict()}
+
+
+def _open_engine(spec: StoreSpec, keys, vals):
+    """Registry-built store; returns (store, raw engine for jit timing)."""
+    store = open_store(spec, keys, vals)
+    return store, store.engine
 
 
 # ------------------------------------------------------------ measurement
@@ -63,9 +81,9 @@ def outback_parts(shard: OutbackShard, keys: np.ndarray):
 
 def measure_scheme(name: str, keys: np.ndarray, vals: np.ndarray,
                    q: np.ndarray) -> C.Measured:
-    """Build a scheme, measure its CN and MN batched-get work."""
+    """Build a scheme via the registry, measure its CN/MN batched-get work."""
     if name == "outback":
-        sh = OutbackShard(keys, vals, load_factor=0.85)
+        _, sh = _open_engine(SPECS[name], keys, vals)
         (cn_fn, cn_args), (mn_fn, mn_args) = outback_parts(sh, q)
         t_cn = C.time_batched(cn_fn, *cn_args) / BATCH * 1e6
         t_mn = C.time_batched(mn_fn, *mn_args) / BATCH * 1e6
@@ -75,7 +93,7 @@ def measure_scheme(name: str, keys: np.ndarray, vals: np.ndarray,
         return C.Measured(name, t_mn, t_cn, p["round_trips"], p["req_bytes"],
                           p["resp_bytes"], p["mn_mem_reads"], p["mn_cmp_ops"])
     if name == "race":
-        kvs = RaceKVS(keys, vals)
+        _, kvs = _open_engine(SPECS[name], keys, vals)
         lo, hi = split_u64(q[:BATCH])
         args = (jnp.asarray(kvs.fp), jnp.asarray(kvs.addr),
                 jnp.asarray(kvs.h_klo), jnp.asarray(kvs.h_khi),
@@ -87,8 +105,7 @@ def measure_scheme(name: str, keys: np.ndarray, vals: np.ndarray,
         p = kvs.meter.per_op()
         return C.Measured(name, 0.0, t_cn, p["round_trips"], p["req_bytes"],
                           p["resp_bytes"], 0.0, 0.0)
-    cls = {"mica": MicaKVS, "cluster": ClusterKVS, "dummy": DummyKVS}[name]
-    kvs = cls(keys, vals)
+    _, kvs = _open_engine(SPECS[name], keys, vals)
     lo, hi = split_u64(q[:BATCH])
     lo, hi = jnp.asarray(lo), jnp.asarray(hi)
     if name == "dummy":
@@ -144,7 +161,8 @@ def fig3_motivation(n=200_000):
             mm = m[s]
             rows.append((f"fig3/{s}/threads{threads}",
                          round(mm.us_per_op_mn + mm.us_per_op_cn, 4),
-                         round(mm.modeled_mops(mn_threads=threads), 2)))
+                         round(mm.modeled_mops(mn_threads=threads), 2),
+                         _spec_extra(SPECS[s])))
     return rows
 
 
@@ -163,14 +181,16 @@ def fig9_10_ycsb(n=300_000):
             eff = C.Measured(s, us, mm.us_per_op_cn, mm.rts, mm.req_bytes,
                              mm.resp_bytes, mm.mn_reads, mm.mn_cmps)
             rows.append((f"fig9/ycsb{wl}/{s}", round(us, 4),
-                         round(eff.modeled_mops(mn_threads=1), 2)))
+                         round(eff.modeled_mops(mn_threads=1), 2),
+                         _spec_extra(SPECS[s])))
     # CX-3: halve RNIC rate for the one-sided scheme (4 MN threads, paper)
     old = C.RNIC_VERB_MOPS
     C.RNIC_VERB_MOPS = 7.0
     for s in ("outback", "race", "mica", "cluster"):
         mm = m[s]
         rows.append((f"fig10/ycsbC_cx3/{s}", round(mm.us_per_op_mn, 4),
-                     round(mm.modeled_mops(mn_threads=4), 2)))
+                     round(mm.modeled_mops(mn_threads=4), 2),
+                     _spec_extra(SPECS[s])))
     C.RNIC_VERB_MOPS = old
     return rows
 
@@ -183,7 +203,8 @@ def fig11_sosd(n=300_000):
             for s in ("outback", "race", "mica", "cluster"):
                 rows.append((f"fig11/{ds}/{dist}/{s}",
                              round(m[s].us_per_op_mn, 4),
-                             round(m[s].modeled_mops(mn_threads=1), 2)))
+                             round(m[s].modeled_mops(mn_threads=1), 2),
+                             _spec_extra(SPECS[s])))
     return rows
 
 
@@ -194,7 +215,8 @@ def fig12_mn_threads(n=300_000):
         for s in ("outback", "mica", "cluster"):
             rows.append((f"fig12/threads{threads}/{s}",
                          round(m[s].us_per_op_mn, 4),
-                         round(m[s].modeled_mops(mn_threads=threads), 2)))
+                         round(m[s].modeled_mops(mn_threads=threads), 2),
+                         _spec_extra(SPECS[s])))
     return rows
 
 
@@ -204,13 +226,15 @@ def fig14_load_factor(n=200_000):
     q = keys[C.uniform_indices(n, BATCH)]
     rows = []
     for lf in (0.75, 0.80, 0.85, 0.90, 0.95):
-        sh = OutbackShard(keys, vals, load_factor=lf)
+        spec = StoreSpec("outback", load_factor=lf)
+        _, sh = _open_engine(spec, keys, vals)
         (cn_fn, cn_args), (mn_fn, mn_args) = outback_parts(sh, q)
         t = (C.time_batched(cn_fn, *cn_args)
              + C.time_batched(mn_fn, *mn_args)) / BATCH * 1e6
         mm = C.Measured("outback", t, 0, 1, 64, 32, 2, 0)
         rows.append((f"fig14/lf{lf}", round(t, 4),
-                     round(mm.modeled_mops(mn_threads=1), 2)))
+                     round(mm.modeled_mops(mn_threads=1), 2),
+                     _spec_extra(spec)))
     return rows
 
 
@@ -220,12 +244,13 @@ def fig15_num_pairs(sizes=(200_000, 500_000, 800_000)):
         keys = C.fb_like_keys(n)
         vals = C.values_for(keys)
         q = keys[C.uniform_indices(n, BATCH)]
-        sh = OutbackShard(keys, vals, load_factor=0.85)
+        _, sh = _open_engine(SPECS["outback"], keys, vals)
         (cn_fn, cn_args), (mn_fn, mn_args) = outback_parts(sh, q)
         t_mn = C.time_batched(mn_fn, *mn_args) / BATCH * 1e6
         mm = C.Measured("outback", t_mn, 0, 1, 64, 32, 2, 0)
         rows.append((f"fig15/n{n}", round(t_mn, 4),
-                     round(mm.modeled_mops(mn_threads=1), 2)))
+                     round(mm.modeled_mops(mn_threads=1), 2),
+                     _spec_extra(SPECS["outback"])))
     return rows
 
 
@@ -235,11 +260,12 @@ def fig16_cn_memory(sizes=(200_000, 1_000_000, 2_000_000)):
     for n in sizes:
         for lf in (0.80, 0.95):
             keys = C.fb_like_keys(n)
-            sh = OutbackShard(keys, C.values_for(keys), load_factor=lf)
+            spec = StoreSpec("outback", load_factor=lf)
+            _, sh = _open_engine(spec, keys, C.values_for(keys))
             bits = sh.cn_memory_bytes() * 8 / n
             mb_100m = sh.cn_memory_bytes() / n * 100e6 / 1e6
             rows.append((f"fig16/n{n}/lf{lf}", round(bits, 3),
-                         f"{mb_100m:.1f}MB@100M"))
+                         f"{mb_100m:.1f}MB@100M", _spec_extra(spec)))
     return rows
 
 
@@ -258,7 +284,7 @@ def zipf_cache(n=200_000, thetas=(0.0, 0.9, 1.2), budget_bytes_per_key=8,
         idx = C.zipf_indices(n, BATCH, theta=theta, seed=5)
         q = keys[idx]
         # ---- cache off: byte-for-byte today's Get path -------------------
-        sh = OutbackShard(keys, vals, load_factor=0.85)
+        _, sh = _open_engine(SPECS["outback"], keys, vals)
         (cn_fn, cn_args), (mn_fn, mn_args) = outback_parts(sh, q)
         t_cn = C.time_batched(cn_fn, *cn_args) / BATCH * 1e6
         t_mn = C.time_batched(mn_fn, *mn_args) / BATCH * 1e6
@@ -271,16 +297,18 @@ def zipf_cache(n=200_000, thetas=(0.0, 0.9, 1.2), budget_bytes_per_key=8,
         off_bytes = p["req_bytes"] + p["resp_bytes"]
         off_mops = off.modeled_mops(mn_threads=1)
         rows.append((f"zipf/theta{theta}/cache_off", round(t_mn + t_cn, 4),
-                     round(off_mops, 2)))
-        # ---- cache on: fixed CN budget, adaptive admission ---------------
-        cache = CNKeyCache(budget_bytes_per_key * n)
-        shc = OutbackShard(keys, vals, load_factor=0.85, cn_cache=cache)
+                     round(off_mops, 2), _spec_extra(SPECS["outback"])))
+        # ---- cache on: fixed CN budget via the stack's cache layer -------
+        spec_on = StoreSpec("outback", load_factor=0.85,
+                            cache_budget_bytes=budget_bytes_per_key * n)
+        shc = open_store(spec_on, keys, vals)
+        cache = shc.cache
         for w in range(warm_batches):  # let admission converge on FRESH
             widx = C.zipf_indices(n, BATCH, theta=theta, seed=100 + w)
             shc.get_batch(keys[widx])  # draws, never the measured batch
-        shc.meter.reset()
+        shc.reset_meters()
         shc.get_batch(q)
-        m = shc.meter
+        m = shc.meter_totals()
         # normalise over the BATCH keys, not m.ops: makeup trips count a
         # second meter op for their lane, which would skew the denominator
         on_bytes = (m.req_bytes + m.resp_bytes) / BATCH
@@ -299,14 +327,16 @@ def zipf_cache(n=200_000, thetas=(0.0, 0.9, 1.2), budget_bytes_per_key=8,
         on_mops = 1.0 / max(mn_us, cn_us, 1e-9)
         rows.append((f"zipf/theta{theta}/cache_on",
                      round(t_mn * miss_rate + t_cn + t_probe, 4),
-                     round(on_mops, 2)))
+                     round(on_mops, 2), _spec_extra(spec_on)))
         saved = 1.0 - on_bytes / max(off_bytes, 1e-9)
         rows.append((f"zipf/theta{theta}/wire_bytes_saved",
                      round(on_bytes, 2),
-                     f"{saved:.1%}(hit={1 - miss_rate:.2f})"))
+                     f"{saved:.1%}(hit={1 - miss_rate:.2f})",
+                     _spec_extra(spec_on)))
         rows.append((f"zipf/theta{theta}/cn_cache_mb",
                      round(cache.memory_bytes() / 1e6, 3),
-                     f"budget={budget_bytes_per_key}B/key"))
+                     f"budget={budget_bytes_per_key}B/key",
+                     _spec_extra(spec_on)))
     return rows
 
 
@@ -314,7 +344,9 @@ def fig17_resize(n=150_000):
     """Throughput before / during / after an index resize (§5.9)."""
     keys = C.fb_like_keys(n)
     vals = C.values_for(keys)
-    store = OutbackStore(keys, vals, load_factor=0.85, num_compute_nodes=2)
+    spec = StoreSpec("outback-dir", load_factor=0.85,
+                     params={"num_compute_nodes": 2})
+    _, store = _open_engine(spec, keys, vals)
     q = keys[C.uniform_indices(n, 8192)]
 
     def tput():
@@ -339,13 +371,15 @@ def fig17_resize(n=150_000):
     after = tput()
     # single MN thread shares CPU between rebuild and serving (paper: ~52%)
     during_model = during_serve * 0.5
+    ex = _spec_extra(spec)
     return [
-        ("fig17/before_mops", round(1.0 / before, 4), round(before, 3)),
+        ("fig17/before_mops", round(1.0 / before, 4), round(before, 3), ex),
         ("fig17/during_mops(modeled_cpu_share)", round(1.0 / during_model, 4),
-         round(during_model, 3)),
-        ("fig17/after_mops", round(1.0 / after, 4), round(after, 3)),
+         round(during_model, 3), ex),
+        ("fig17/after_mops", round(1.0 / after, 4), round(after, 3), ex),
         ("fig17/rebuild_seconds", round(rebuild_s, 3),
-         f"dip={during_model / before:.2f}x"),
+         f"dip={during_model / before:.2f}x", ex),
         ("fig17/buffered_replayed", float(len(store.resize_events)),
-         store.resize_events[-1].locator_bytes if store.resize_events else 0),
+         store.resize_events[-1].locator_bytes if store.resize_events else 0,
+         ex),
     ]

@@ -6,9 +6,12 @@ figure-specific annotation.  EXPERIMENTS.md §Paper-validation interprets the
 ratios against the paper's claims.
 
 Suites may attach a 4th row element (a dict of extras, e.g. the simulated
-latency percentiles from ``benchmarks.net_bench``); it never reaches the
-CSV, but ``--json PATH`` persists it — that file is the perf-trajectory
-contract (``BENCH_*.json``) future PRs diff against.
+latency percentiles from ``benchmarks.net_bench`` and the exact
+``repro.api.StoreSpec`` the row's store was opened from); it never reaches
+the CSV, but ``--json PATH`` persists it — that file is the perf-trajectory
+contract (``BENCH_*.json``) future PRs diff against.  Every suite builds
+its stores exclusively through ``repro.api.open_store``, so the JSON also
+records the registry the run saw.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only lat,scale]
       [--strict] [--json out.json]
@@ -80,7 +83,9 @@ def main() -> None:
     emit([r[:3] for r in rows])
 
     if args.json:
+        from repro.api import registered_kinds
         payload = {"quick": bool(args.quick),
+                   "registry": {"kinds": list(registered_kinds())},
                    "rows": [dict(suite=r[0].split("/")[0], name=r[0],
                                  us_per_call=r[1], derived=r[2],
                                  **(r[3] if len(r) > 3 else {}))

@@ -1,0 +1,46 @@
+"""``repro.api`` — one KVStore protocol, a composable CN stack, a registry.
+
+The seam between Outback's engines and everything that drives them:
+
+* :mod:`repro.api.protocol` — the batched-first :class:`KVStore` protocol
+  and the structured :class:`OpResult` every op returns;
+* :mod:`repro.api.stack` — the CN-side middleware stack
+  (``Meter → CNCache → Transport``), assembled once per store;
+* :mod:`repro.api.registry` — :class:`StoreSpec` (JSON-round-trippable
+  config) and :func:`open_store`, covering every store kind in the repo.
+
+The benchmarks (``benchmarks/``), the serving session store
+(``repro.serve.session_store``), and CI's api-surface lane all construct
+stores exclusively through :func:`open_store`; the engines' legacy
+keyword seams (``cn_cache=``/``cn_cache_budget_bytes=``/``transport=``)
+remain as thin deprecated shims for existing callers (see README
+§`repro.api` for the migration notes and deprecation policy).
+"""
+
+from repro.api.adapters import StoreAdapter
+from repro.api.protocol import (KVStore, OpResult, UnsupportedOperation,
+                                pack_result)
+from repro.api.registry import (SpecError, StoreSpec, open_store,
+                                register_store, registered_kinds,
+                                registry_docs)
+from repro.api.stack import (CNCacheLayer, CNStack, MeterLayer, StoreLayer,
+                             TransportBinding)
+
+__all__ = [
+    "CNCacheLayer",
+    "CNStack",
+    "KVStore",
+    "MeterLayer",
+    "OpResult",
+    "SpecError",
+    "StoreAdapter",
+    "StoreLayer",
+    "StoreSpec",
+    "TransportBinding",
+    "UnsupportedOperation",
+    "open_store",
+    "pack_result",
+    "register_store",
+    "registered_kinds",
+    "registry_docs",
+]

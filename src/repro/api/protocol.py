@@ -1,0 +1,130 @@
+"""The uniform ``KVStore`` protocol and its structured ``OpResult``.
+
+Every store in this repo — the Outback shard, the resizing directory
+store, the four baselines, and the mesh-sharded deployment — grew its own
+call surface: ``OutbackShard.get_batch(keys, xp, cn=, mn=, ...)`` vs
+``RaceKVS.get_batch(keys, xp, arrays=)``, scalar ``get`` returning a
+``GetResult`` here and a bare ``int | None`` there.  ``repro.api`` closes
+that drift with one batched-first protocol:
+
+* ``get_batch / insert_batch / update_batch / delete_batch`` — the primary
+  ops; scalar ``get / insert / update / delete`` are conveniences over the
+  same engines' documented scalar protocol walks.
+* Every op returns an :class:`OpResult`: combined 64-bit ``values``, a
+  ``found`` mask, mutation ``statuses``, and — stamped by the stack's
+  meter stage — per-call round-trip / wire-byte / Makeup-Get / cache-hit
+  attribution.
+
+The protocol is *structural* (:class:`typing.Protocol`): the engine
+classes in ``repro.core`` keep their native signatures (and stay the jit
+surface the benchmarks time); ``repro.api.registry.open_store`` wraps them
+in thin adapters that satisfy this protocol, composed with the CN-side
+middleware stack (``repro.api.stack``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import numpy as np
+
+
+class UnsupportedOperation(RuntimeError):
+    """The store kind cannot serve this op (e.g. no MN kernel on RACE)."""
+
+
+@dataclasses.dataclass
+class OpResult:
+    """Structured result of one (batched) KVStore operation.
+
+    ``values``/``found`` are host numpy arrays, one lane per input key
+    (mutations carry ``statuses`` instead of values).  The attribution
+    fields are *per-call deltas* of the store's merged meters, stamped by
+    the stack's meter stage: what this exact call cost on the simulated
+    wire and how much of it the CN cache absorbed.
+    """
+
+    values: np.ndarray  # uint64, zeros where ``found`` is False
+    found: np.ndarray  # bool: key present (Get) / op succeeded (mutations)
+    # mutation resolution cases ('slot' | 'reseed' | 'overflow' | 'update'
+    # | 'frozen' | 'ok' | 'miss'), one per lane; None for Gets
+    statuses: tuple[str, ...] | None = None
+    # ---- per-call attribution (meter deltas; see stack.MeterLayer) ----
+    round_trips: int = 0
+    req_bytes: int = 0
+    resp_bytes: int = 0
+    makeups: int = 0  # lanes that took the §4.3.1 Makeup-Get continuation
+    cache_hits: int = 0
+    cache_neg_hits: int = 0
+
+    def __len__(self) -> int:
+        return int(self.found.shape[0])
+
+    @property
+    def value(self) -> int | None:
+        """Scalar convenience: the single lane's value, None if absent."""
+        if not bool(self.found[0]):
+            return None
+        return int(self.values[0])
+
+    @property
+    def status(self) -> str | None:
+        """Scalar convenience: the single lane's mutation status."""
+        return None if self.statuses is None else self.statuses[0]
+
+
+def pack_result(v_lo, v_hi, match) -> OpResult:
+    """Combine an engine's native ``(v_lo, v_hi, match)`` triple (numpy or
+    jax arrays) into a host OpResult."""
+    v_lo = np.asarray(v_lo).astype(np.uint64)
+    v_hi = np.asarray(v_hi).astype(np.uint64)
+    found = np.asarray(match, dtype=bool)
+    values = np.where(found, (v_hi << np.uint64(32)) | v_lo, np.uint64(0))
+    return OpResult(values=values, found=found)
+
+
+def status_result(statuses: tuple[str, ...], ok: np.ndarray) -> OpResult:
+    return OpResult(values=np.zeros(len(statuses), np.uint64),
+                    found=np.asarray(ok, bool), statuses=statuses)
+
+
+@typing.runtime_checkable
+class KVStore(typing.Protocol):
+    """What ``open_store`` returns; what new middleware must preserve.
+
+    Structural protocol — satisfied by the adapters in
+    ``repro.api.adapters`` and by every ``repro.api.stack`` layer.
+    ``resolve_makeup`` is accepted uniformly: the default (``None``)
+    returns fully-resolved answers everywhere (Outback kinds run the
+    §4.3.1 Makeup-Get stage for mismatched lanes; baselines resolve in one
+    protocol round by construction).  Outback kinds honour an explicit
+    ``False`` to expose the raw 1-RT Get stream (what the trace-recording
+    and MN-kernel-timing benchmarks want).
+    """
+
+    spec: typing.Any  # the StoreSpec this store was opened from
+
+    # ------------------------------------------------------ batched-first
+    def get_batch(self, keys, xp=np, *,
+                  resolve_makeup: bool | None = None) -> OpResult: ...
+
+    def insert_batch(self, keys, values) -> OpResult: ...
+
+    def update_batch(self, keys, values) -> OpResult: ...
+
+    def delete_batch(self, keys) -> OpResult: ...
+
+    # ------------------------------------------------ scalar conveniences
+    def get(self, key: int) -> OpResult: ...
+
+    def insert(self, key: int, value: int) -> OpResult: ...
+
+    def update(self, key: int, value: int) -> OpResult: ...
+
+    def delete(self, key: int) -> OpResult: ...
+
+    # ---------------------------------------------------------- metering
+    def meter_totals(self): ...  # -> repro.core.meter.CommMeter (merged)
+
+    def reset_meters(self) -> None: ...

@@ -1,0 +1,235 @@
+"""``StoreSpec`` + ``open_store``: every store kind behind one factory.
+
+A :class:`StoreSpec` is a pure-config description of a store — kind name,
+common knobs (load factor, rng seed, CN cache budget) and kind-specific
+``params`` — with a strict JSON round-trip (``to_json``/``from_json``), so
+benchmark suites can record *exactly* which store they ran into the
+``BENCH_*.json`` perf-trajectory extras and anyone can rebuild it.
+
+``open_store(spec, keys, values, transport=...)`` looks the kind up in the
+registry, builds the engine through its adapter, and assembles the CN-side
+stack (``Meter → CNCache → Transport``; see ``repro.api.stack``) around
+it.  Runtime objects (the key/value arrays, a live ``repro.net.Transport``)
+are arguments to ``open_store``, never part of the spec — the spec stays
+serialisable.
+
+Registered kinds (the table in README §`repro.api` mirrors this):
+
+=============  ==========================================================
+``outback``     one Outback DMPH shard (§4.3 protocols)
+``outback-dir`` extendible-hashing directory of shards + §4.4 resize
+``race``        one-sided RACE baseline (2-RT Get, zero MN compute)
+``mica``        two-sided RPC-MICA baseline (linear probing, MN-heavy)
+``cluster``     two-sided RPC-Cluster baseline (chained buckets)
+``dummy``       RPC-Dummy upper bound (one fixed MN read per op)
+``sharded``     Outback over a device mesh (host adapter + mesh state)
+=============  ==========================================================
+
+Third-party kinds register through :func:`register_store`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import typing
+
+import numpy as np
+
+from repro.api import adapters
+from repro.api.stack import CNStack, TransportBinding
+from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
+from repro.core.cn_cache import CNKeyCache
+from repro.core.outback import OutbackShard
+from repro.core.sharded_kvs import build_sharded
+from repro.core.store import OutbackStore
+
+
+class SpecError(ValueError):
+    """A StoreSpec that cannot be built: unknown kind / param / value."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """Pure-config description of a store; JSON-round-trippable."""
+
+    kind: str
+    load_factor: float | None = None  # None -> the kind's native default
+    rng_seed: int = 0
+    cache_budget_bytes: int = 0  # CN hot-key cache budget; 0 disables
+    params: dict = dataclasses.field(default_factory=dict)  # kind-specific
+
+    # ------------------------------------------------------------- json
+    def to_json_dict(self) -> dict:
+        return {"kind": self.kind, "load_factor": self.load_factor,
+                "rng_seed": self.rng_seed,
+                "cache_budget_bytes": self.cache_budget_bytes,
+                "params": dict(self.params)}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_json_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "StoreSpec":
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise SpecError(f"unknown StoreSpec fields: {sorted(unknown)}")
+        if "kind" not in d:
+            raise SpecError("StoreSpec JSON must carry 'kind'")
+        return cls(**{**d, "params": dict(d.get("params") or {})})
+
+    @classmethod
+    def from_json(cls, s: str) -> "StoreSpec":
+        return cls.from_json_dict(json.loads(s))
+
+    # ------------------------------------------------------- validation
+    def validate(self) -> "_StoreKind":
+        """Check against the registry; returns the kind's registration."""
+        reg = _REGISTRY.get(self.kind)
+        if reg is None:
+            raise SpecError(
+                f"unknown store kind {self.kind!r}; registered kinds: "
+                f"{', '.join(registered_kinds())}")
+        unknown = set(self.params) - reg.params
+        if unknown:
+            raise SpecError(
+                f"unknown params for kind {self.kind!r}: {sorted(unknown)}; "
+                f"allowed: {sorted(reg.params) or '(none)'}")
+        if self.load_factor is not None and not 0.0 < self.load_factor <= 1.0:
+            raise SpecError(f"load_factor must be in (0, 1], "
+                            f"got {self.load_factor}")
+        if self.cache_budget_bytes and self.cache_budget_bytes < 1024:
+            raise SpecError("cache_budget_bytes below 1 KiB is meaningless "
+                            "(0 disables the CN cache)")
+        return reg
+
+    def merged_params(self) -> dict:
+        """Kind defaults overlaid with the spec's explicit params."""
+        reg = self.validate()
+        return {**reg.defaults, **self.params}
+
+
+@dataclasses.dataclass(frozen=True)
+class _StoreKind:
+    name: str
+    factory: typing.Callable  # (spec, keys, values, transport) -> adapter
+    params: frozenset  # allowed keys of spec.params
+    defaults: dict  # params applied when the spec omits them
+    doc: str
+
+
+_REGISTRY: dict[str, _StoreKind] = {}
+
+
+def register_store(name: str, factory, *, params=(), defaults=None,
+                   doc: str = "") -> None:
+    """Add a kind to the registry (idempotent only for identical entries:
+    re-registering the same kind with different contents raises)."""
+    kind = _StoreKind(name, factory, frozenset(params),
+                      dict(defaults or {}), doc)
+    existing = _REGISTRY.get(name)
+    if existing is not None:
+        if existing == kind:
+            return  # identical re-registration (notebook re-run, reload)
+        raise SpecError(f"store kind {name!r} already registered "
+                        f"with different contents")
+    _REGISTRY[name] = kind
+
+
+def registered_kinds() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def registry_docs() -> dict[str, str]:
+    return {k: _REGISTRY[k].doc for k in registered_kinds()}
+
+
+def open_store(spec: StoreSpec, keys, values, *, transport=None):
+    """Build the spec's engine and assemble the CN stack around it.
+
+    ``keys``/``values`` are the build-time key set (uint64 arrays);
+    ``transport`` an optional ``repro.net.Transport`` bound below the
+    engine as the stack's recording stage.  Returns a
+    :class:`repro.api.protocol.KVStore` (Meter → [CNCache →] adapter).
+    """
+    reg = spec.validate()
+    keys = np.asarray(keys, dtype=np.uint64)
+    values = np.asarray(values, dtype=np.uint64)
+    if keys.shape != values.shape:
+        raise SpecError(f"keys/values shape mismatch: "
+                        f"{keys.shape} vs {values.shape}")
+    adapter = reg.factory(spec, keys, values, transport)
+    cache = (CNKeyCache(spec.cache_budget_bytes)
+             if spec.cache_budget_bytes else None)
+    stack = CNStack(cache=cache,
+                    transport_binding=TransportBinding(transport))
+    return stack.assemble(adapter)
+
+
+# ---------------------------------------------------------------------------
+# built-in kinds
+
+
+def _common_kw(spec: StoreSpec) -> dict:
+    kw = dict(spec.merged_params())
+    if spec.load_factor is not None:
+        kw["load_factor"] = spec.load_factor
+    kw["rng_seed"] = spec.rng_seed
+    return kw
+
+
+def _outback_factory(spec, keys, values, transport):
+    eng = OutbackShard(keys, values, transport=transport, **_common_kw(spec))
+    return adapters.OutbackShardAdapter(eng, spec)
+
+
+def _outback_dir_factory(spec, keys, values, transport):
+    eng = OutbackStore(keys, values, transport=transport, **_common_kw(spec))
+    return adapters.OutbackStoreAdapter(eng, spec)
+
+
+def _baseline_factory(cls, adapter_cls, kind):
+    def factory(spec, keys, values, transport):
+        eng = cls(keys, values, transport=transport, **_common_kw(spec))
+        adp = adapter_cls(eng, spec)
+        adp.kind = kind
+        return adp
+    return factory
+
+
+def _sharded_factory(spec, keys, values, transport):
+    kw = _common_kw(spec)
+    D = int(kw.pop("data_parallel"))
+    st = build_sharded(keys, values, data_parallel=D, transport=transport,
+                       keep_shards=True, **kw)
+    return adapters.ShardedAdapter(st, spec, shards=st.shards,
+                                   data_parallel=D)
+
+
+register_store(
+    "outback", _outback_factory,
+    params=("heap_slack", "overflow_frac", "num_buckets", "oth_ma", "oth_mb",
+            "heap_cap"),
+    doc="one Outback DMPH shard: CN/MN split + the §4.3 1-RT protocols")
+register_store(
+    "outback-dir", _outback_dir_factory,
+    params=("initial_depth", "num_compute_nodes"),
+    doc="extendible-hashing directory of Outback shards + §4.4 resizing")
+register_store(
+    "race", _baseline_factory(RaceKVS, adapters.RaceAdapter, "race"),
+    doc="one-sided RACE baseline: 2-RT Get, zero MN compute")
+register_store(
+    "mica", _baseline_factory(MicaKVS, adapters.BaselineAdapter, "mica"),
+    doc="two-sided RPC-MICA baseline: linear probing, MN-heavy scans")
+register_store(
+    "cluster",
+    _baseline_factory(ClusterKVS, adapters.BaselineAdapter, "cluster"),
+    doc="two-sided RPC-Cluster baseline: chained associative buckets")
+register_store(
+    "dummy", _baseline_factory(DummyKVS, adapters.DummyAdapter, "dummy"),
+    doc="RPC-Dummy upper bound: one fixed MN read per op")
+register_store(
+    "sharded", _sharded_factory,
+    params=("num_shards", "data_parallel", "heap_slack"),
+    defaults={"num_shards": 2, "data_parallel": 1},
+    doc="Outback sharded over a device mesh (host adapter + mesh state)")

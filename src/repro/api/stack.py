@@ -1,0 +1,233 @@
+"""The composable CN-side stack: ``Meter → CNCache → Transport``.
+
+Before this seam existed, every cross-cutting CN feature was threaded by
+keyword through ten constructors (`cn_cache=`/`cn_cache_budget_bytes=`/
+`transport=` on the shard, the store, all four baselines, the mesh
+builder, and the session store).  The stack assembles the same layers
+*once*, around any :class:`repro.api.protocol.KVStore` adapter:
+
+* **Meter** (outermost, :class:`MeterLayer`) — stamps per-call attribution
+  (round trips, wire bytes, Makeup-Get continuations, cache hits) onto
+  every ``OpResult`` from the store's merged meter deltas.
+* **CNCache** (:class:`CNCacheLayer`) — the FlexKV/DINOMO-style hot-key
+  front (``repro.core.cn_cache``): probe before the wire, answer hits
+  locally, forward misses with full Makeup-Get resolution (the cache only
+  learns resolved truths), keep coherence on every mutation, and join the
+  engine's split-time invalidation sync point via ``adapter.bind_cache``.
+* **Transport** (innermost, :class:`TransportBinding`) — the recording
+  seam *below* the engine: a ``repro.net.Transport`` plugged into each
+  engine meter's ``sink`` so the op stream replays on the simulated RDMA
+  clock.  It has to sit under the engine (resize-spawned tables must
+  inherit it), so the stack binds it at construction time rather than
+  wrapping calls.
+
+Accounting parity with the legacy in-engine wiring is byte-for-byte
+(tested in ``tests/test_api_stack.py``): for Outback kinds the cache
+layer charges the same ``CACHE_*_SAVINGS`` into the same engine meter the
+legacy path used (each adapter declares its own protocol's
+``cache_hit_savings`` so cached baselines book *their* avoided wire
+costs), and cache hits never reach the transport trace — exactly as
+before.
+
+Adding the next cross-cutting layer (admission control, replication,
+tiering) means writing one :class:`StoreLayer` subclass and inserting it
+in :meth:`CNStack.assemble` — not editing ten constructors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.api.protocol import OpResult
+from repro.core.cn_cache import CNKeyCache
+from repro.core.hashing import split_u64
+
+
+class StoreLayer:
+    """Base middleware: wraps an inner KVStore, delegates what it doesn't
+    override (``spec``, ``engine``, ``meter_totals``, ...)."""
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+class CNCacheLayer(StoreLayer):
+    """CN hot-key cache stage: hits answered locally, misses forwarded
+    with Makeup-Get resolution, coherence kept on every mutation.
+
+    Cache accounting lands in the *engine's* meter (``inner.meter``) so a
+    middleware-built store and a legacy ``cn_cache=`` store report
+    identical totals, and ``saved_*`` attribution stays next to the wire
+    counters it offsets.
+    """
+
+    def __init__(self, inner, cache: CNKeyCache):
+        super().__init__(inner)
+        self.cache = cache
+        inner.bind_cache(cache)  # engine-side sync points (resize)
+
+    # ---------------------------------------------------------------- gets
+    def get(self, key: int) -> OpResult:
+        meter = self.inner.meter
+        state, val = self.cache.lookup(int(key))
+        if state == "hit":
+            meter.add_cache_hit(1, **self.inner.cache_hit_savings)
+            return OpResult(values=np.asarray([val], np.uint64),
+                            found=np.asarray([True]))
+        if state == "neg":
+            meter.add_cache_hit(1, neg=True, **self.inner.cache_neg_savings)
+            return OpResult(values=np.zeros(1, np.uint64),
+                            found=np.asarray([False]))
+        res = self.inner.get(key)
+        self.cache.fill(int(key), res.value)
+        return res
+
+    def get_batch(self, keys, xp=np, *,
+                  resolve_makeup: bool | None = None) -> OpResult:
+        keys = np.asarray(keys, dtype=np.uint64)
+        h_lo, h_hi = split_u64(keys)
+        hit, neg, c_vlo, c_vhi = self.cache.probe_batch(h_lo, h_hi)
+        # charge the savings the avoided Get would have cost on THIS
+        # kind's wire (the adapter declares its protocol's shape)
+        meter = self.inner.meter
+        meter.add_cache_hit(int(hit.sum()), **self.inner.cache_hit_savings)
+        meter.add_cache_hit(int(neg.sum()), neg=True,
+                            **self.inner.cache_neg_savings)
+        values = ((np.asarray(c_vhi, np.uint64) << np.uint64(32))
+                  | np.asarray(c_vlo, np.uint64))
+        found = hit.copy()
+        miss = ~hit & ~neg
+        if miss.any():
+            # default: misses go down the stack with the full §4.3.1
+            # resolution so the cache (and the caller) only ever learn
+            # resolved truths; an explicit False is honoured exactly as
+            # the legacy in-engine cache honoured it (raw 1-RT stream)
+            if resolve_makeup is None:
+                resolve_makeup = True
+            sub = self.inner.get_batch(keys[miss], xp,
+                                       resolve_makeup=resolve_makeup)
+            values[miss] = sub.values
+            found[miss] = sub.found
+        self.cache.observe_batch(
+            h_lo, h_hi, (values & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+            (values >> np.uint64(32)).astype(np.uint32), found, hit, neg)
+        return OpResult(values=values, found=found)
+
+    # ----------------------------------------------------------- mutations
+    def insert(self, key: int, value: int) -> OpResult:
+        res = self.inner.insert(key, value)
+        if res.status != "frozen":
+            self.cache.note_insert(int(key), int(value))
+        return res
+
+    def update(self, key: int, value: int) -> OpResult:
+        res = self.inner.update(key, value)
+        if bool(res.found[0]):
+            self.cache.note_update(int(key), int(value))
+        return res
+
+    def delete(self, key: int) -> OpResult:
+        res = self.inner.delete(key)
+        if bool(res.found[0]):
+            self.cache.note_delete(int(key))
+        return res
+
+    def insert_batch(self, keys, values) -> OpResult:
+        res = self.inner.insert_batch(keys, values)
+        for k, v, case in zip(keys, values, res.statuses):
+            if case != "frozen":
+                self.cache.note_insert(int(k), int(v))
+        return res
+
+    def update_batch(self, keys, values) -> OpResult:
+        res = self.inner.update_batch(keys, values)
+        for k, v, ok in zip(keys, values, res.found):
+            if ok:
+                self.cache.note_update(int(k), int(v))
+        return res
+
+    def delete_batch(self, keys) -> OpResult:
+        res = self.inner.delete_batch(keys)
+        for k, ok in zip(keys, res.found):
+            if ok:
+                self.cache.note_delete(int(k))
+        return res
+
+
+class MeterLayer(StoreLayer):
+    """Outermost stage: stamps per-call meter deltas onto each OpResult."""
+
+    def _attributed(self, n: int, call) -> OpResult:
+        before = self.inner.meter_totals()
+        res = call()
+        after = self.inner.meter_totals()
+        res.round_trips = after.round_trips - before.round_trips
+        res.req_bytes = after.req_bytes - before.req_bytes
+        res.resp_bytes = after.resp_bytes - before.resp_bytes
+        # every lane opens one meter op; Makeup-Get continuations open one
+        # more each (resize broadcasts can add a few — clamp at zero)
+        res.makeups = max(0, (after.ops - before.ops) - n)
+        res.cache_hits = after.cache_hits - before.cache_hits
+        res.cache_neg_hits = after.cache_neg_hits - before.cache_neg_hits
+        return res
+
+    def get(self, key: int) -> OpResult:
+        return self._attributed(1, lambda: self.inner.get(key))
+
+    def get_batch(self, keys, xp=np, *,
+                  resolve_makeup: bool | None = None) -> OpResult:
+        return self._attributed(
+            len(keys), lambda: self.inner.get_batch(
+                keys, xp, resolve_makeup=resolve_makeup))
+
+    def insert(self, key: int, value: int) -> OpResult:
+        return self._attributed(1, lambda: self.inner.insert(key, value))
+
+    def update(self, key: int, value: int) -> OpResult:
+        return self._attributed(1, lambda: self.inner.update(key, value))
+
+    def delete(self, key: int) -> OpResult:
+        return self._attributed(1, lambda: self.inner.delete(key))
+
+    def insert_batch(self, keys, values) -> OpResult:
+        return self._attributed(
+            len(keys), lambda: self.inner.insert_batch(keys, values))
+
+    def update_batch(self, keys, values) -> OpResult:
+        return self._attributed(
+            len(keys), lambda: self.inner.update_batch(keys, values))
+
+    def delete_batch(self, keys) -> OpResult:
+        return self._attributed(
+            len(keys), lambda: self.inner.delete_batch(keys))
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportBinding:
+    """The innermost stage, made explicit: a ``repro.net.Transport`` bound
+    to every engine meter's ``sink`` at construction (the factories pass it
+    down so even resize-spawned tables inherit it).  Kept as a stack member
+    so the assembled order — Meter → CNCache → Transport — reads off the
+    object, and so future stages below the cache have a place to anchor."""
+
+    transport: object | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CNStack:
+    """Composition root for the CN-side stack.  ``open_store`` builds one
+    per store; tests may assemble their own around any adapter."""
+
+    cache: CNKeyCache | None = None
+    transport_binding: TransportBinding = TransportBinding()
+
+    def assemble(self, adapter):
+        store = adapter  # transport already bound below the engine
+        if self.cache is not None:
+            store = CNCacheLayer(store, self.cache)
+        return MeterLayer(store)

@@ -9,6 +9,15 @@ Layering:
   overflow / meter             — MN overflow cache, round-trip accounting
   baselines                    — RACE / RPC-MICA / RPC-Cluster / RPC-Dummy
   sharded_kvs                  — the index distributed over a device mesh
+
+These are the *engines*: native signatures, jit surfaces, the meter
+accounting the figures rest on.  The seam everything else programs
+against is ``repro.api`` — the uniform batched-first ``KVStore``
+protocol, the CN middleware stack (Meter → CNCache → Transport), and the
+``StoreSpec``/``open_store`` registry that builds every kind listed here.
+New callers should open stores through ``repro.api.open_store``; the
+``cn_cache=``/``cn_cache_budget_bytes=``/``transport=`` constructor
+keywords below survive as deprecated shims for existing code.
 """
 
 from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS

@@ -19,7 +19,12 @@ from the *index* and its communication schedule:
 Each exposes the same measurement hooks as ``OutbackShard``:
 ``get``/``get_batch`` with meter accounting, plus ``mn_get_batch`` — the
 isolated memory-node work as a pure (jit-able) function, which is what the
-paper's single-MN-thread throughput experiments stress.
+paper's single-MN-thread throughput experiments stress.  ``mn_get_batch``
+has one uniform signature ``(bucket, fp, lo, hi, arrays, xp)`` across all
+four (RACE's raises: one-sided designs have no MN compute to isolate), and
+every baseline also serves the full mutation surface
+(``insert``/``update``/``delete``) so ``repro.api`` can drive any
+registered store through one protocol.
 """
 
 from __future__ import annotations
@@ -40,6 +45,30 @@ def _heap_from(keys: np.ndarray, values: np.ndarray):
 
 
 class _HeapMixin:
+    def _init_heap(self, keys: np.ndarray, values: np.ndarray) -> None:
+        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        self.heap_top = int(keys.shape[0])
+        self.n_keys = int(keys.shape[0])
+
+    def _heap_append(self, lo: int, hi: int, vlo: int, vhi: int) -> int:
+        """Append one KV block (runtime Insert path); grows amortised."""
+        if self.heap_top >= self.h_klo.shape[0]:
+            cap = int(self.h_klo.shape[0] * 1.5) + 64
+            for name in ("h_klo", "h_khi", "h_vlo", "h_vhi"):
+                old = getattr(self, name)
+                new = np.zeros(cap, dtype=old.dtype)
+                new[: old.shape[0]] = old
+                setattr(self, name, new)
+        a = self.heap_top
+        self.h_klo[a], self.h_khi[a] = lo, hi
+        self.h_vlo[a], self.h_vhi[a] = vlo, vhi
+        self.heap_top += 1
+        return a
+
+    def _heap_set_value(self, addr: int, value: int) -> None:
+        self.h_vlo[addr] = value & 0xFFFFFFFF
+        self.h_vhi[addr] = (value >> 32) & 0xFFFFFFFF
+
     def _verify_and_read(self, addr: int, lo: int, hi: int):
         if addr < 0:
             return None
@@ -63,7 +92,7 @@ class RaceKVS(_HeapMixin):
                  load_factor: float = 0.7, rng_seed: int = 0, transport=None):
         keys = np.asarray(keys, dtype=np.uint64)
         n = keys.shape[0]
-        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        self._init_heap(keys, values)
         ng = max(2, int(np.ceil(n / (self.GROUP_SLOTS * load_factor))))
         self.ng = ng
         self.fp = np.zeros((ng, self.GROUP_SLOTS), dtype=np.uint8)
@@ -152,8 +181,87 @@ class RaceKVS(_HeapMixin):
                        cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS + 1)
         return vlo[best], vhi[best], match
 
-    def mn_get_batch(self, *args, **kw):
+    def mn_get_batch(self, bucket, fp, lo, hi, arrays, xp=np):
+        """Uniform MN-side surface (same signature as the RPC baselines).
+
+        RACE is one-sided: the memory node never runs index code — all
+        selection happens CN-side after raw READs — so there is no MN
+        kernel to time.  The signature is kept identical so protocol-level
+        callers can treat every baseline alike and catch this explicitly.
+        """
         raise NotImplementedError("RACE is one-sided: no MN compute to time")
+
+    # ------------------------------------------------------ mutations
+    # One-sided write path: RT 1 reads both candidate groups (the CN must
+    # learn the current layout), RT 2 writes the KV block + slot via RDMA
+    # WRITE/CAS.  Accounting mirrors ``get``: raw READ/WRITE payloads, no
+    # RPC padding, zero MN compute.
+    def _find_entry(self, lo: int, hi: int, g0: int, g1: int, fp: int):
+        for g in (g0, g1):
+            for s in range(self.GROUP_SLOTS):
+                if self.addr[g, s] >= 0 and int(self.fp[g, s]) == fp:
+                    a = int(self.addr[g, s])
+                    if int(self.h_klo[a]) == lo and int(self.h_khi[a]) == hi:
+                        return g, s
+        return None
+
+    def _locate_groups(self, key: int):
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        l32, h32 = np.uint32(lo), np.uint32(hi)
+        g0 = int(hash_range(l32, h32, 0xACE0, self.ng))
+        g1 = int(hash_range(l32, h32, 0xACE1, self.ng))
+        return lo, hi, g0, g1, int(self._fp(l32, h32))
+
+    def insert(self, key: int, value: int) -> str:
+        lo, hi, g0, g1, fp = self._locate_groups(key)
+        self.meter.add(rts=2, req=16 + 8 + 32, resp=2 * self.GROUP_BYTES + 8,
+                       one_sided=True, cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS)
+        hit = self._find_entry(lo, hi, g0, g1, fp)
+        if hit is not None:
+            self._heap_set_value(int(self.addr[hit]), value)
+            return "update"
+        # fp-candidate bound: the batched CN selection verifies at most 3
+        # fingerprint candidates across both groups — reject an insert the
+        # batched path could never reach behind existing collisions
+        same_fp = sum(int(((self.fp[g] == fp) & (self.addr[g] >= 0)).sum())
+                      for g in {g0, g1})
+        if same_fp >= 3:
+            raise RuntimeError("RACE fp-candidate bound: 3+ colliding "
+                               "fingerprints in the candidate groups")
+        fills = [int((self.addr[g] >= 0).sum()) for g in (g0, g1)]
+        order = (g0, g1) if fills[0] <= fills[1] else (g1, g0)
+        for g in order:  # pick the slot before touching the heap, so a
+            free = np.nonzero(self.addr[g] < 0)[0]  # full table leaves
+            if free.size:  # no orphan block behind
+                s = int(free[0])
+                addr = self._heap_append(lo, hi, value & 0xFFFFFFFF,
+                                         (value >> 32) & 0xFFFFFFFF)
+                self.fp[g, s] = fp
+                self.addr[g, s] = addr
+                self.n_keys += 1
+                return "slot"
+        raise RuntimeError("RACE: both candidate groups full; lower load factor")
+
+    def update(self, key: int, value: int) -> bool:
+        lo, hi, g0, g1, fp = self._locate_groups(key)
+        self.meter.add(rts=2, req=16 + 8 + 32, resp=2 * self.GROUP_BYTES + 8,
+                       one_sided=True, cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS)
+        hit = self._find_entry(lo, hi, g0, g1, fp)
+        if hit is None:
+            return False
+        self._heap_set_value(int(self.addr[hit]), value)
+        return True
+
+    def delete(self, key: int) -> bool:
+        lo, hi, g0, g1, fp = self._locate_groups(key)
+        self.meter.add(rts=2, req=16 + 8, resp=2 * self.GROUP_BYTES + 8,
+                       one_sided=True, cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS)
+        hit = self._find_entry(lo, hi, g0, g1, fp)
+        if hit is None:
+            return False
+        self.addr[hit] = -1
+        self.n_keys -= 1
+        return True
 
     def index_bytes(self) -> int:
         return self.fp.nbytes + self.addr.nbytes
@@ -163,19 +271,27 @@ class MicaKVS(_HeapMixin):
     """Two-sided hopscotch/linear-probing baseline (RPC-MICA).
 
     Insert walks forward from the home bucket to the first bucket with a free
-    lane (no deletes => the scan invariant holds: a query may stop at the
-    first not-full bucket).  The batched MN kernel scans a fixed window of
+    lane; Delete leaves a tombstone (``_TOMB``) so the probing invariant
+    holds: a query may stop at the first bucket containing a *never-used*
+    lane (``_EMPTY``), while tombstoned lanes keep the walk going and are
+    reused by later Inserts.  The batched MN kernel scans a fixed window of
     ``SCAN_BUCKETS`` buckets — its per-op MN compute is what the paper's
-    Fig. 3(b) CPU breakdown attributes to the RPC callback."""
+    Fig. 3(b) CPU breakdown attributes to the RPC callback.  Runtime
+    Inserts respect that window as a hopscotch-style displacement bound
+    (reject rather than place a key the kernel could not see); the offline
+    build loop keeps its legacy whole-table walk, so a few far-displaced
+    build keys remain scalar-only — the pre-existing approximation."""
 
     BUCKET_SLOTS = 8
     SCAN_BUCKETS = 4  # batched-MN scan window
+    _EMPTY = -1  # never-used lane: probing may stop at this bucket
+    _TOMB = -2  # deleted lane: reusable, but the walk must continue
 
     def __init__(self, keys: np.ndarray, values: np.ndarray, *,
                  load_factor: float = 0.7, rng_seed: int = 0, transport=None):
         keys = np.asarray(keys, dtype=np.uint64)
         n = keys.shape[0]
-        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        self._init_heap(keys, values)
         nbk = max(2, int(np.ceil(n / (self.BUCKET_SLOTS * load_factor))))
         self.nb = nbk
         self.fp = np.zeros((nbk, self.BUCKET_SLOTS), dtype=np.uint8)
@@ -208,18 +324,115 @@ class MicaKVS(_HeapMixin):
             self.meter.add(0, mn_reads=1, mn_cmp=self.BUCKET_SLOTS, attach=True)
             full = True
             for s in range(self.BUCKET_SLOTS):
-                if self.addr[g, s] < 0:
+                a = int(self.addr[g, s])
+                if a == self._EMPTY:
                     full = False
                     continue
+                if a == self._TOMB:
+                    continue  # deleted lane: keep probing past it
                 if int(self.fp[g, s]) == fp:
                     self.meter.add(0, mn_reads=1, mn_cmp=1, attach=True)
-                    val = self._verify_and_read(int(self.addr[g, s]), lo, hi)
+                    val = self._verify_and_read(a, lo, hi)
                     if val is not None:
                         return val
             if not full:
                 return None  # linear-probing early termination
             g = (g + 1) % self.nb
         return None
+
+    # ------------------------------------------------------ mutations
+    # Two-sided RPC mutations: the CN sends bucket + fingerprint + KV block,
+    # the MN walks the probe sequence exactly as ``get`` does.  Accounting
+    # mirrors the Get RPC shape (padded messages, MN-side walk costs).
+    def _walk_for(self, lo: int, hi: int, fp: int, g: int):
+        """(bucket, slot) of the key, first reusable lane (plus how many
+        buckets out it sits), buckets walked."""
+        free = None
+        free_dist = 0
+        walked = 0
+        for _ in range(self.nb):
+            walked += 1
+            has_empty = False
+            for s in range(self.BUCKET_SLOTS):
+                a = int(self.addr[g, s])
+                if a == self._EMPTY:
+                    has_empty = True
+                    if free is None:
+                        free, free_dist = (g, s), walked
+                    continue
+                if a == self._TOMB:
+                    if free is None:
+                        free, free_dist = (g, s), walked
+                    continue
+                if (int(self.fp[g, s]) == fp and int(self.h_klo[a]) == lo
+                        and int(self.h_khi[a]) == hi):
+                    return (g, s), free, free_dist, walked
+            if has_empty:
+                return None, free, free_dist, walked  # key can't live further
+            g = (g + 1) % self.nb
+        return None, free, free_dist, walked
+
+    def insert(self, key: int, value: int) -> str:
+        """Runtime Insert, bounded by the batched kernel's reach: a new key
+        may only land within ``SCAN_BUCKETS`` buckets of home (the scan
+        window `mn_get_batch` serves — hopscotch's displacement invariant),
+        so a key `insert` accepts is always visible to `get_batch`."""
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        g = int(hash_range(np.uint32(lo), np.uint32(hi), 0x111CA, self.nb))
+        fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
+        found, free, free_dist, walked = self._walk_for(lo, hi, fp, g)
+        self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=walked,
+                       mn_cmp=walked * self.BUCKET_SLOTS, mn_writes=1)
+        if found is not None:
+            self._heap_set_value(int(self.addr[found]), value)
+            return "update"
+        if free is None or free_dist > self.SCAN_BUCKETS:
+            raise RuntimeError(
+                "MICA displacement bound: no free lane within the "
+                f"{self.SCAN_BUCKETS}-bucket scan window")
+        # fp-candidate bound: the batched kernel verifies at most 3
+        # fingerprint candidates per window — an insert queued behind 3+
+        # existing collisions would be batch-invisible, so reject it
+        window = [(g + d) % self.nb for d in range(self.SCAN_BUCKETS)]
+        same_fp = sum(int(((self.fp[w] == fp) & (self.addr[w] >= 0)).sum())
+                      for w in window)
+        if same_fp >= 3:
+            raise RuntimeError("MICA fp-candidate bound: 3+ colliding "
+                               "fingerprints in the scan window")
+        addr = self._heap_append(lo, hi, value & 0xFFFFFFFF,
+                                 (value >> 32) & 0xFFFFFFFF)
+        self.fp[free] = fp
+        self.addr[free] = addr
+        self.n_keys += 1
+        return "slot"
+
+    def update(self, key: int, value: int) -> bool:
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        g = int(hash_range(np.uint32(lo), np.uint32(hi), 0x111CA, self.nb))
+        fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
+        found, _, _, walked = self._walk_for(lo, hi, fp, g)
+        self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=walked,
+                       mn_cmp=walked * self.BUCKET_SLOTS,
+                       mn_writes=1 if found else 0)
+        if found is None:
+            return False
+        self._heap_set_value(int(self.addr[found]), value)
+        return True
+
+    def delete(self, key: int) -> bool:
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        g = int(hash_range(np.uint32(lo), np.uint32(hi), 0x111CA, self.nb))
+        fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
+        found, _, _, walked = self._walk_for(lo, hi, fp, g)
+        self.meter.add(rts=1, req=16, resp=8, cn_hash=2, mn_reads=walked,
+                       mn_cmp=walked * self.BUCKET_SLOTS,
+                       mn_writes=1 if found else 0)
+        if found is None:
+            return False
+        self.fp[found] = 0
+        self.addr[found] = self._TOMB
+        self.n_keys -= 1
+        return True
 
     def mn_get_batch(self, bucket, fp, lo, hi, arrays, xp=np):
         """The isolated MN work per request batch (what one MN thread runs)."""
@@ -281,7 +494,7 @@ class ClusterKVS(_HeapMixin):
                  load_factor: float = 0.8, rng_seed: int = 0, transport=None):
         keys = np.asarray(keys, dtype=np.uint64)
         n = keys.shape[0]
-        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        self._init_heap(keys, values)
         nbk = max(2, int(np.ceil(n / (self.BUCKET_SLOTS * load_factor))))
         cap = nbk + nbk // 2 + 8  # main + indirect bucket arena
         self.nb = nbk
@@ -302,22 +515,42 @@ class ClusterKVS(_HeapMixin):
     def _fp14(lo, hi, xp=np):
         return (hash64_32(lo, hi, _FP14_SEED, xp) & xp.uint32(0x3FFF)).astype(xp.uint16)
 
-    def _insert_chain(self, g: int, fp: int, addr: int) -> None:
+    def _insert_chain(self, g: int, fp: int, addr: int,
+                      max_hops: int | None = None) -> None:
+        """Place into the chain, extending it when needed.  ``max_hops``
+        bounds how deep the walk may go (in hops past the home bucket);
+        the build loop uses the legacy arena bound, runtime Inserts pass
+        ``MAX_CHAIN - 1`` so every chain stays within the ``MAX_CHAIN``
+        buckets the batched MN kernel walks — a key `_insert_chain`
+        accepts at runtime is always visible to ``mn_get_batch``."""
+        if max_hops is None:
+            max_hops = self.MAX_CHAIN
+        bounded = max_hops < self.MAX_CHAIN  # runtime (kernel-visible) mode
         hops = 0
         while True:
             row = self.addr[g]
             free = np.nonzero(row < 0)[0]
             if free.size:
-                self.fp[g, free[0]] = fp
-                self.addr[g, free[0]] = addr
+                s = int(free[0])
+                # fp-shadow bound (runtime only): the batched kernel
+                # verifies one candidate per bucket — the first fp match —
+                # so a same-fp lane at a lower index would shadow this key
+                if bounded and bool(((self.fp[g, :s] == fp)
+                                     & (self.addr[g, :s] >= 0)).any()):
+                    raise RuntimeError("cluster fp-shadow bound: colliding "
+                                       "fingerprint earlier in the bucket")
+                self.fp[g, s] = fp
+                self.addr[g, s] = addr
                 return
             if self.nxt[g] < 0:
-                if self.free_top >= self.cap or hops >= self.MAX_CHAIN:
+                if self.free_top >= self.cap or hops >= max_hops:
                     raise RuntimeError("cluster chain arena full")
                 self.nxt[g] = self.free_top
                 self.free_top += 1
             g = int(self.nxt[g])
             hops += 1
+            if hops > max_hops:
+                raise RuntimeError("cluster chain bound exceeded")
 
     def get(self, key: int):
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
@@ -335,6 +568,73 @@ class ClusterKVS(_HeapMixin):
                         return val
             g = int(self.nxt[g])
         return None
+
+    # ------------------------------------------------------ mutations
+    # Two-sided RPC mutations; the MN walks the bucket chain as ``get`` does.
+    def _chain_find(self, lo: int, hi: int, fp: int, g: int):
+        """(bucket, slot) of the key plus the number of chain hops read."""
+        hops = 0
+        while g >= 0:
+            hops += 1
+            for s in range(self.BUCKET_SLOTS):
+                a = int(self.addr[g, s])
+                if a >= 0 and int(self.fp[g, s]) == fp \
+                        and int(self.h_klo[a]) == lo \
+                        and int(self.h_khi[a]) == hi:
+                    return (g, s), hops
+            g = int(self.nxt[g])
+        return None, hops
+
+    def _home(self, lo: int, hi: int):
+        g = int(hash_range(np.uint32(lo), np.uint32(hi), 0xC1C1, self.nb))
+        return g, int(self._fp14(np.uint32(lo), np.uint32(hi)))
+
+    def insert(self, key: int, value: int) -> str:
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        g, fp = self._home(lo, hi)
+        found, hops = self._chain_find(lo, hi, fp, g)
+        self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=hops,
+                       mn_cmp=hops * self.BUCKET_SLOTS, mn_writes=1)
+        if found is not None:
+            self._heap_set_value(int(self.addr[found]), value)
+            return "update"
+        addr = self._heap_append(lo, hi, value & 0xFFFFFFFF,
+                                 (value >> 32) & 0xFFFFFFFF)
+        try:
+            # MAX_CHAIN - 1 hops past home == the MAX_CHAIN buckets the
+            # batched kernel walks: runtime inserts stay kernel-visible
+            self._insert_chain(g, fp, addr, max_hops=self.MAX_CHAIN - 1)
+        except RuntimeError:
+            self.heap_top -= 1  # roll back the tail append; unreferenced
+            raise
+        self.n_keys += 1
+        return "slot"
+
+    def update(self, key: int, value: int) -> bool:
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        g, fp = self._home(lo, hi)
+        found, hops = self._chain_find(lo, hi, fp, g)
+        self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=hops,
+                       mn_cmp=hops * self.BUCKET_SLOTS,
+                       mn_writes=1 if found else 0)
+        if found is None:
+            return False
+        self._heap_set_value(int(self.addr[found]), value)
+        return True
+
+    def delete(self, key: int) -> bool:
+        lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
+        g, fp = self._home(lo, hi)
+        found, hops = self._chain_find(lo, hi, fp, g)
+        self.meter.add(rts=1, req=16, resp=8, cn_hash=2, mn_reads=hops,
+                       mn_cmp=hops * self.BUCKET_SLOTS,
+                       mn_writes=1 if found else 0)
+        if found is None:
+            return False
+        self.fp[found] = 0
+        self.addr[found] = -1
+        self.n_keys -= 1
+        return True
 
     def mn_get_batch(self, bucket, fp, lo, hi, arrays, xp=np):
         """MN work: walk up to MAX_CHAIN bucket hops, all lanes compared."""
@@ -384,7 +684,7 @@ class DummyKVS(_HeapMixin):
     def __init__(self, keys: np.ndarray, values: np.ndarray, *,
                  transport=None, **_):
         keys = np.asarray(keys, dtype=np.uint64)
-        self.h_klo, self.h_khi, self.h_vlo, self.h_vhi = _heap_from(keys, values)
+        self._init_heap(keys, values)
         self.n = keys.shape[0]
         self.meter = CommMeter()
         self.meter.sink = transport
@@ -392,6 +692,22 @@ class DummyKVS(_HeapMixin):
     def get(self, key: int):
         self.meter.add(rts=1, req=16, resp=32, mn_reads=1)
         return (int(self.h_vhi[0]) << 32) | int(self.h_vlo[0])
+
+    # Mutations model one fixed memory write each — the RPC-Dummy upper
+    # bound has no index to maintain and never reads stored data back
+    # (``verifies_keys=False`` on its adapter), so only the meter moves:
+    # appending real blocks would grow memory unboundedly for nothing.
+    def insert(self, key: int, value: int) -> str:
+        self.meter.add(rts=1, req=16 + 32, resp=8, mn_writes=1)
+        return "slot"
+
+    def update(self, key: int, value: int) -> bool:
+        self.meter.add(rts=1, req=16 + 32, resp=8, mn_writes=1)
+        return True
+
+    def delete(self, key: int) -> bool:
+        self.meter.add(rts=1, req=16, resp=8, mn_writes=1)
+        return True
 
     def mn_get_batch(self, idx, arrays, xp=np):
         vlo, vhi = arrays

@@ -23,11 +23,6 @@ MSG_BYTES = 64  # every RPC message padded to two cache lines (paper §5.1)
 
 @dataclasses.dataclass
 class CommMeter:
-    # Optional event sink (class-level, not a counted field): a
-    # ``repro.net.Transport`` plugged in here receives every ``add`` call
-    # and turns the counter stream into a replayable timed-op trace.
-    sink = None
-
     ops: int = 0
     round_trips: int = 0
     req_bytes: int = 0
@@ -47,6 +42,16 @@ class CommMeter:
     saved_round_trips: int = 0
     saved_req_bytes: int = 0
     saved_resp_bytes: int = 0
+    # Optional event sink — an explicit per-instance field, NOT a counter: a
+    # ``repro.net.Transport`` plugged in here receives every ``add`` call and
+    # turns the counter stream into a replayable timed-op trace.  Excluded
+    # from ``merge``/``reset``/``per_op``/``snapshot`` (see ``_counters``);
+    # ``repro.api.open_store`` wires it as the stack's transport stage.
+    sink: object | None = dataclasses.field(default=None, repr=False,
+                                            compare=False)
+
+    def _counters(self):
+        return [f.name for f in dataclasses.fields(self) if f.name != "sink"]
 
     def add(self, n: int = 1, *, rts: int = 0, req: int = 0, resp: int = 0,
             mn_hash: int = 0, mn_cmp: int = 0, mn_reads: int = 0,
@@ -107,17 +112,18 @@ class CommMeter:
         self.saved_resp_bytes += n * saved_resp
 
     def merge(self, other: "CommMeter") -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        for name in self._counters():
+            setattr(self, name, getattr(self, name) + getattr(other, name))
 
     def per_op(self) -> dict[str, float]:
         n = max(1, self.ops)
-        return {f.name: getattr(self, f.name) / n for f in dataclasses.fields(self)
-                if f.name != "ops"}
+        return {name: getattr(self, name) / n for name in self._counters()
+                if name != "ops"}
 
     def reset(self) -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, 0)
+        """Zero every counter; the sink (if any) stays attached."""
+        for name in self._counters():
+            setattr(self, name, 0)
 
     def snapshot(self) -> dict[str, int]:
-        return dataclasses.asdict(self)
+        return {name: getattr(self, name) for name in self._counters()}

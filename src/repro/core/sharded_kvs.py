@@ -82,6 +82,11 @@ class ShardedKVSState:
     # returns a host wrapper that meters every batched Get into it, putting
     # the mesh path on the same simulated clock as the scalar protocols
     meter: CommMeter | None = None
+    # the host-side OutbackShard objects the state was stacked from, kept
+    # only when build_sharded(keep_shards=True): the repro.api 'sharded'
+    # adapter serves the full protocol (incl. mutations) through them and
+    # re-installs dirty shards before handing the state to the mesh path
+    shards: list | None = None
 
     def arrays(self):
         return (self.words_a, self.words_b, self.seeds, self.oth_meta,
@@ -103,13 +108,18 @@ class ShardedKVSState:
 def build_sharded(keys: np.ndarray, values: np.ndarray, *, num_shards: int,
                   data_parallel: int, load_factor: float = 0.85,
                   heap_slack: float = 1.5, rng_seed: int = 0,
-                  transport=None) -> ShardedKVSState:
+                  transport=None, keep_shards: bool = False) -> ShardedKVSState:
     """Partition keys into ``num_shards`` equal-geometry Outback shards and
     stack their components for mesh placement (heap co-located per row).
 
     With ``transport`` (a ``repro.net.Transport``), the state carries a
     CommMeter sinking into it and ``make_get_fn`` meters each batched Get;
-    the default ``None`` leaves the mesh path exactly as before."""
+    the default ``None`` leaves the mesh path exactly as before.
+
+    ``keep_shards=True`` retains the host ``OutbackShard`` objects on
+    ``state.shards`` (their meters sink into ``transport`` too) so the
+    ``repro.api`` adapter can serve scalar protocol ops and mutations and
+    re-stack mutated shards; the default discards them as before."""
     keys = np.asarray(keys, dtype=np.uint64)
     values = np.asarray(values, dtype=np.uint64)
     lo, hi = split_u64(keys)
@@ -143,12 +153,17 @@ def build_sharded(keys: np.ndarray, values: np.ndarray, *, num_shards: int,
         heap_vhi=np.zeros((M, cap), np.uint32),
         num_buckets=nb, heap_cap=cap, ma=ma, mb=mb)
 
+    kept = [] if keep_shards else None
     for m in range(M):
         mask = shard_of == m
         sh = OutbackShard(keys[mask], values[mask], load_factor=load_factor,
                           rng_seed=rng_seed + m, num_buckets=nb,
                           oth_ma=ma, oth_mb=mb)
         _install_shard(st, m, sh, D)
+        if kept is not None:
+            sh.meter.sink = transport
+            kept.append(sh)
+    st.shards = kept
     return st
 
 

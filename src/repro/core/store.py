@@ -63,6 +63,9 @@ class OutbackStore:
         # models one CN's view (tables are shared, so one cache suffices).
         self.cn_cache = (CNKeyCache(cn_cache_budget_bytes)
                          if cn_cache_budget_bytes else None)
+        # Externally-owned CN caches (repro.api middleware) that must see
+        # the same split-time invalidation the internal cache gets.
+        self._coherence_caches: list[CNKeyCache] = []
 
         keys = np.asarray(keys, dtype=np.uint64)
         values = np.asarray(values, dtype=np.uint64)
@@ -135,14 +138,21 @@ class OutbackStore:
             self._split(self.directory[self._entry(key)])
         return case
 
-    def get_batch(self, keys: np.ndarray, xp=np):
+    def get_batch(self, keys: np.ndarray, xp=np, *,
+                  resolve_makeup: bool | None = None):
         """Vectorised Get across the directory (single-table fast path).
 
         With a CN cache, hit lanes are answered locally and only misses are
-        dispatched to the tables."""
+        dispatched to the tables.  ``resolve_makeup`` mirrors
+        ``OutbackShard.get_batch``: the default (``None``) resolves
+        mismatched lanes through the host Makeup-Get only when a cache is
+        attached (so the cache learns resolved truths); pass ``True`` to
+        force the full §4.3.1 protocol on the cache-less path too (the
+        ``repro.api`` adapters do when fronted by middleware)."""
         self._op_count += len(keys)
         if self.cn_cache is None:
-            return self._get_batch_tables(np.asarray(keys, np.uint64), xp)
+            return self._get_batch_tables(np.asarray(keys, np.uint64), xp,
+                                          resolve_makeup=bool(resolve_makeup))
         keys = np.asarray(keys, dtype=np.uint64)
         h_lo, h_hi = split_u64(keys)
         hit, neg, c_vlo, c_vhi = self.cn_cache.probe_batch(h_lo, h_hi)
@@ -240,7 +250,10 @@ class OutbackStore:
         # resize window may be newer than the rebuilt tables (a §4.4 Update
         # races the snapshot), so drop everything now routed to either
         # successor — the same sync point at which CNs fetch the new locator.
-        if self.cn_cache is not None:
+        # Externally-bound caches (repro.api middleware) join the same sync.
+        caches = [c for c in (self.cn_cache, *self._coherence_caches)
+                  if c is not None]
+        if caches:
             dir_mask = np.uint32((1 << self.global_depth) - 1)
             directory = np.asarray(self.directory, np.int64)
 
@@ -249,7 +262,8 @@ class OutbackStore:
                 t = directory[e.astype(np.int64)]
                 return (t == t_idx) | (t == hi_idx)
 
-            self.cn_cache.invalidate_where(routed_to_successors)
+            for c in caches:
+                c.invalidate_where(routed_to_successors)
 
         buffered, self._buffer = self._buffer, []
         self._open_split = None
@@ -260,6 +274,12 @@ class OutbackStore:
                 self.insert(k, v)
             else:
                 self.delete(k)
+
+    def bind_coherence_cache(self, cache: CNKeyCache) -> None:
+        """Register an externally-owned CN cache (the ``repro.api`` stack's)
+        for split-time invalidation, without routing any data path through
+        it — the middleware owns probe/fill, the store owns the sync point."""
+        self._coherence_caches.append(cache)
 
     # --------------------------------------------------------- accounting
     @property

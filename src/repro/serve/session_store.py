@@ -4,10 +4,15 @@ The serving engine parks paused conversations' recurrent state (rwkv6 /
 jamba lanes) as opaque blobs.  Here the blob actually travels through the
 paper's index: it is chunked into 8-byte words, each stored under a
 derived 64-bit key via the Insert protocol, and read back with the batched
-Get.  Reads go through the store's CN-side hot-key cache
-(``repro.core.cn_cache``), so a conversation that bounces between park and
-resume — the common chat pattern — stops paying MN round trips for its
-state after the first resume.
+Get.
+
+The store is opened through the ``repro.api`` registry — one
+``StoreSpec('outback-dir', cache_budget_bytes=...)`` — so reads go through
+the stack's CN-side hot-key cache layer (a conversation that bounces
+between park and resume — the common chat pattern — stops paying MN round
+trips for its state after the first resume), and the spec that backs a
+serving deployment is recordable/rebuildable config rather than keyword
+threading.
 
 Key derivation: ``splitmix64(SALT ^ (rid << 20) + index)`` — index 0 holds
 the blob's byte length, indices 1.. hold the data words.  Collisions with
@@ -19,15 +24,17 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import StoreSpec, open_store
 from repro.core.hashing import splitmix64
-from repro.core.store import OutbackStore, make_uniform_keys
+from repro.core.store import make_uniform_keys
 
 _SALT = 0x5E551047_0B5E55ED
 _MAX_CHUNKS = 1 << 20
 
 
 class KVSessionStore:
-    """Park/resume blobs in an OutbackStore, reads served via the CN cache."""
+    """Park/resume blobs in an Outback directory store, reads served via
+    the ``repro.api`` stack's CN cache layer."""
 
     def __init__(self, *, cn_cache_budget_bytes: int = 64 << 10,
                  bootstrap_keys: int = 4096, load_factor: float = 0.85,
@@ -37,10 +44,11 @@ class KVSessionStore:
         # ``transport`` (a repro.net.Transport) puts every park/resume
         # Insert/Get on the simulated RDMA clock alongside user traffic.
         boot = make_uniform_keys(bootstrap_keys, seed=rng_seed + 97)
-        self.store = OutbackStore(
-            boot, splitmix64(boot), load_factor=load_factor,
-            rng_seed=rng_seed, cn_cache_budget_bytes=cn_cache_budget_bytes,
-            transport=transport)
+        self.spec = StoreSpec("outback-dir", load_factor=load_factor,
+                              rng_seed=rng_seed,
+                              cache_budget_bytes=cn_cache_budget_bytes)
+        self.store = open_store(self.spec, boot, splitmix64(boot),
+                                transport=transport)
         self._lengths: dict[int, int] = {}  # rid -> n_words (for delete)
 
     @staticmethod
@@ -59,17 +67,17 @@ class KVSessionStore:
         if old is not None and old > words.size:
             # shrinking re-park: reclaim the tail chunks the overwrite below
             # will not touch, or they leak in the store forever
-            for k in self._chunk_keys(rid, old + 1)[words.size + 1:]:
-                self.store.delete(int(k))
+            tail = self._chunk_keys(rid, old + 1)[words.size + 1:]
+            self.store.delete_batch([int(k) for k in tail])
         ks = self._chunk_keys(rid, words.size + 1)
         self.store.insert(int(ks[0]), len(blob))
-        for k, w in zip(ks[1:], words):
-            self.store.insert(int(k), int(w))
+        self.store.insert_batch([int(k) for k in ks[1:]],
+                                [int(w) for w in words])
         self._lengths[rid] = words.size
         return words.size + 1
 
     def get(self, rid: int) -> bytes | None:
-        """Fetch ``rid``'s blob (batched Get through the CN cache)."""
+        """Fetch ``rid``'s blob (batched Get through the CN cache layer)."""
         head = self.store.get(int(self._chunk_keys(rid, 1)[0]))
         if head.value is None:
             return None
@@ -78,25 +86,22 @@ class KVSessionStore:
         if n_words == 0:
             return b""
         ks = self._chunk_keys(rid, n_words + 1)[1:]
-        v_lo, v_hi, match = self.store.get_batch(ks)
-        if not np.asarray(match).all():
+        res = self.store.get_batch(ks)
+        if not res.found.all():
             return None  # torn blob (concurrent delete)
-        words = (np.asarray(v_hi, np.uint64) << np.uint64(32)) | \
-            np.asarray(v_lo, np.uint64)
-        return words.astype("<u8").tobytes()[:nbytes]
+        return res.values.astype("<u8").tobytes()[:nbytes]
 
     def delete(self, rid: int) -> bool:
         n = self._lengths.pop(rid, None)
         if n is None:
             return False
-        for k in self._chunk_keys(rid, n + 1):
-            self.store.delete(int(k))
+        self.store.delete_batch([int(k) for k in self._chunk_keys(rid, n + 1)])
         return True
 
     # ---------------------------------------------------------- accounting
     @property
     def cache_stats(self):
-        return self.store.cn_cache.stats
+        return self.store.cache.stats
 
     def meter_total(self):
-        return self.store.meter_total()
+        return self.store.meter_totals()

@@ -1,0 +1,160 @@
+"""Registry coverage: every registered spec builds, serves the protocol,
+JSON-round-trips, and rejects bad specs with clear errors.
+
+This is the contract the benchmark suites and the serving session store
+build on: ``open_store(StoreSpec(kind))`` must work for every kind in
+``registered_kinds()`` with nothing but the key set, and a spec recorded
+into a ``BENCH_*.json`` must rebuild the exact same store.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (KVStore, OpResult, SpecError, StoreSpec, open_store,
+                       registered_kinds, registry_docs)
+from repro.core.hashing import splitmix64
+from repro.core.store import make_uniform_keys
+
+N = 4000
+KEYS = make_uniform_keys(N, 5)
+VALS = splitmix64(KEYS)
+ABSENT = splitmix64(np.arange(1, 65, dtype=np.uint64) + np.uint64(1 << 44))
+NEW = splitmix64(np.arange(1, 33, dtype=np.uint64) + np.uint64(1 << 52))
+
+DOCUMENTED_KINDS = ("cluster", "dummy", "mica", "outback", "outback-dir",
+                    "race", "sharded")
+
+
+def test_registry_covers_documented_kinds():
+    assert registered_kinds() == DOCUMENTED_KINDS
+    docs = registry_docs()
+    assert all(docs[k] for k in DOCUMENTED_KINDS), "every kind is documented"
+
+
+@pytest.mark.parametrize("kind", DOCUMENTED_KINDS)
+def test_every_kind_builds_and_serves_roundtrip(kind):
+    st = open_store(StoreSpec(kind), KEYS, VALS)
+    assert isinstance(st, KVStore)
+    assert st.spec.kind == kind
+
+    # batched Get over present + absent keys
+    q = np.concatenate([KEYS[:256], ABSENT])
+    res = st.get_batch(q)
+    assert isinstance(res, OpResult) and len(res) == q.shape[0]
+    if st.verifies_keys:
+        assert res.found[:256].all() and not res.found[256:].any()
+        np.testing.assert_array_equal(res.values[:256], VALS[:256])
+    assert res.round_trips > 0 and res.req_bytes > 0
+
+    # insert -> get -> delete -> get round trip (scalar + batched)
+    k, v = int(NEW[0]), 0xBEEF
+    assert bool(st.insert(k, v).found[0])
+    got = st.get(k)
+    if st.verifies_keys:
+        assert got.value == v
+        assert st.get_batch(np.uint64([k])).value == v
+    assert bool(st.delete(k).found[0])
+    if st.verifies_keys:
+        assert st.get(k).value is None
+        assert bool(st.insert(k, v).found[0])  # slot reusable after delete
+        assert st.get(k).value == v
+
+    # batched mutations
+    bres = st.insert_batch([int(x) for x in NEW[1:9]], range(8))
+    assert bres.found.all() and len(bres.statuses) == 8
+    if st.verifies_keys:
+        g = st.get_batch(NEW[1:9])
+        assert g.found.all()
+        np.testing.assert_array_equal(g.values, np.arange(8, dtype=np.uint64))
+        u = st.update_batch([int(x) for x in NEW[1:9]], [7] * 8)
+        assert u.found.all()
+        assert (st.get_batch(NEW[1:9]).values == 7).all()
+    d = st.delete_batch([int(x) for x in NEW[1:9]])
+    assert d.found.all()
+
+
+@pytest.mark.parametrize("kind", DOCUMENTED_KINDS)
+def test_spec_json_roundtrip_rebuilds(kind):
+    spec = StoreSpec(kind, rng_seed=3)
+    rt = StoreSpec.from_json(spec.to_json())
+    assert rt == spec
+    st = open_store(rt, KEYS[:1024], VALS[:1024])
+    if st.verifies_keys:
+        assert st.get(int(KEYS[0])).value == int(VALS[0])
+
+
+def test_spec_json_roundtrip_with_params_and_cache():
+    spec = StoreSpec("outback-dir", load_factor=0.9, rng_seed=11,
+                     cache_budget_bytes=1 << 15,
+                     params={"num_compute_nodes": 3})
+    assert StoreSpec.from_json(spec.to_json()) == spec
+    st = open_store(spec, KEYS[:2048], VALS[:2048])
+    assert st.cache is not None
+    assert st.engine.num_compute_nodes == 3
+
+
+def test_unknown_kind_rejected_with_kind_list():
+    with pytest.raises(SpecError, match="registered kinds"):
+        open_store(StoreSpec("btree"), KEYS[:64], VALS[:64])
+    with pytest.raises(SpecError, match="btree"):
+        StoreSpec("btree").validate()
+
+
+def test_unknown_params_rejected():
+    with pytest.raises(SpecError, match="bogus"):
+        open_store(StoreSpec("outback", params={"bogus": 1}),
+                   KEYS[:64], VALS[:64])
+    # params valid for one kind are rejected for another
+    with pytest.raises(SpecError, match="num_compute_nodes"):
+        StoreSpec("race", params={"num_compute_nodes": 2}).validate()
+
+
+def test_bad_values_rejected():
+    with pytest.raises(SpecError, match="load_factor"):
+        StoreSpec("outback", load_factor=1.5).validate()
+    with pytest.raises(SpecError, match="1 KiB"):
+        StoreSpec("outback", cache_budget_bytes=64).validate()
+    with pytest.raises(SpecError, match="shape"):
+        open_store(StoreSpec("outback"), KEYS[:64], VALS[:63])
+
+
+def test_bad_json_rejected():
+    with pytest.raises(SpecError, match="kind"):
+        StoreSpec.from_json('{"load_factor": 0.9}')
+    with pytest.raises(SpecError, match="unknown StoreSpec fields"):
+        StoreSpec.from_json('{"kind": "outback", "turbo": true}')
+
+
+def test_accepted_inserts_stay_visible_to_get_batch():
+    """Displacement bounds: a runtime insert a baseline *accepts* must be
+    servable by its fixed-window batched kernel — never 'slot' from insert
+    but found=False from get_batch (inserts that would land beyond the
+    kernel's reach raise instead)."""
+    n = 20_000
+    keys = make_uniform_keys(n, 11)
+    vals = splitmix64(keys)
+    fresh = splitmix64(np.arange(1, 3001, dtype=np.uint64) + np.uint64(1 << 55))
+    for kind in ("mica", "cluster", "race"):
+        st = open_store(StoreSpec(kind), keys, vals)
+        accepted = []
+        for k in fresh:
+            try:
+                st.insert(int(k), int(k) >> 7)
+            except RuntimeError:
+                continue  # bounded structures may refuse; never lie
+            accepted.append(k)
+        got = st.get_batch(np.asarray(accepted, np.uint64))
+        assert got.found.all(), (
+            f"{kind}: {int((~got.found).sum())}/{len(accepted)} accepted "
+            "inserts invisible to the batched kernel")
+
+
+def test_sharded_mutations_reach_mesh_state():
+    """Mutations through the host adapter re-stack into the mesh state."""
+    st = open_store(StoreSpec("sharded", params={"num_shards": 2}),
+                    KEYS[:2048], VALS[:2048])
+    k = int(NEW[20])
+    assert bool(st.insert(k, 99).found[0])
+    state = st.mesh_state()  # re-installs the dirty shard
+    assert state is st.engine
+    assert st.get(k).value == 99

@@ -1,0 +1,198 @@
+"""Stack-composition parity: ``open_store`` middleware vs legacy kwargs.
+
+The tentpole guarantee of ``repro.api``: assembling the CN-side stack
+(Meter → CNCache → Transport) around a cache-less engine is *byte-for-byte*
+the legacy in-engine wiring (``cn_cache=`` / ``cn_cache_budget_bytes=`` /
+``transport=``) on a fixed workload — same meter totals, same cache-hit
+attribution, same transport trace — so migrating a caller can never move a
+benchmark number.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import StoreSpec, open_store
+from repro.core.cn_cache import CNKeyCache
+from repro.core.hashing import splitmix64
+from repro.core.outback import OutbackShard
+from repro.core.store import OutbackStore, make_uniform_keys
+from repro.net import Transport
+
+N = 6000
+BUDGET = 1 << 16
+
+
+@pytest.fixture(scope="module")
+def data():
+    keys = make_uniform_keys(N, 9)
+    return keys, splitmix64(keys)
+
+
+@pytest.fixture(scope="module")
+def workload(data):
+    keys, _ = data
+    absent = splitmix64(np.arange(1, 65, dtype=np.uint64) + np.uint64(1 << 44))
+    rng = np.random.default_rng(3)
+    # zipf-ish repetition so the cache actually admits + hits, plus absent
+    # keys so the negative cache and the Makeup-Get path both fire
+    return [np.concatenate([keys[rng.integers(0, N // (i + 1), 384)],
+                            absent[: 16 * (i % 3)]])
+            for i in range(6)]
+
+
+def _assert_same_result(legacy_out, res):
+    v_lo, v_hi, match = legacy_out
+    np.testing.assert_array_equal(np.asarray(match), res.found)
+    got = ((np.asarray(v_hi, np.uint64) << np.uint64(32))
+           | np.asarray(v_lo, np.uint64))
+    np.testing.assert_array_equal(got[res.found], res.values[res.found])
+
+
+def test_shard_stack_parity_batched_and_scalar(data, workload):
+    keys, vals = data
+    tr_legacy, tr_stack = Transport(), Transport()
+    legacy = OutbackShard(keys, vals, load_factor=0.85,
+                          cn_cache=CNKeyCache(BUDGET), transport=tr_legacy)
+    stack = open_store(StoreSpec("outback", load_factor=0.85,
+                                 cache_budget_bytes=BUDGET),
+                       keys, vals, transport=tr_stack)
+    for q in workload:
+        _assert_same_result(legacy.get_batch(q), stack.get_batch(q))
+    # scalar path: cached_get vs the cache layer's scalar stage
+    absent = int(splitmix64(np.uint64([1 << 43]))[0])
+    for _ in range(4):
+        for k in (int(keys[0]), int(keys[1]), absent):
+            lv = legacy.get(k).value
+            sv = stack.get(k).value
+            assert lv == sv
+    # meter totals byte-for-byte (incl. cache attribution + saved bytes)
+    assert legacy.meter.snapshot() == stack.meter_totals().snapshot()
+    # transport traces byte-for-byte (cache hits never reach the trace)
+    assert tr_legacy.trace == tr_stack.trace
+    # and the attribution the meter stage stamps is self-consistent
+    res = stack.get_batch(workload[0])
+    assert res.cache_hits + res.cache_neg_hits <= len(res)
+    assert res.round_trips >= len(res) - res.cache_hits - res.cache_neg_hits
+
+
+def test_store_stack_parity_through_resize(data):
+    """Directory store: inserts force a §4.4 split; the middleware cache
+    must join the same invalidation sync point the internal cache uses."""
+    keys, vals = data
+    m = N // 2
+    tr_legacy, tr_stack = Transport(), Transport()
+    legacy = OutbackStore(keys[:m], vals[:m], load_factor=0.85,
+                          cn_cache_budget_bytes=BUDGET, transport=tr_legacy)
+    stack = open_store(StoreSpec("outback-dir", load_factor=0.85,
+                                 cache_budget_bytes=BUDGET),
+                       keys[:m], vals[:m], transport=tr_stack)
+    fresh = splitmix64(np.arange(1, 500, dtype=np.uint64) + np.uint64(1 << 47))
+    probe = keys[:256]
+    for i, k in enumerate(fresh):
+        case = legacy.insert(int(k), i)
+        assert case == stack.insert(int(k), i).status
+        if i % 41 == 0:
+            q = np.concatenate([probe, fresh[: max(1, i)]])
+            _assert_same_result(legacy.get_batch(q), stack.get_batch(q))
+        if i % 67 == 0:
+            kk = int(keys[i % m])
+            assert legacy.update(kk, i) == bool(stack.update(kk, i).found[0])
+    assert len(legacy.tables) > 1, "workload sized to force a resize"
+    assert len(stack.engine.tables) == len(legacy.tables)
+    # deletes after the split (buffered-replay path already exercised above)
+    for k in fresh[:32]:
+        assert legacy.delete(int(k)) == bool(stack.delete(int(k)).found[0])
+    assert legacy.meter_total().snapshot() == stack.meter_totals().snapshot()
+    assert tr_legacy.trace == tr_stack.trace
+    # identical coherence: cache stats line up exactly
+    legacy_stats = legacy.cn_cache.stats
+    stack_stats = stack.cache.stats
+    assert legacy_stats.invalidated == stack_stats.invalidated
+    assert legacy_stats.hits == stack_stats.hits
+    assert legacy_stats.neg_hits == stack_stats.neg_hits
+
+
+def test_cacheless_stack_is_plain_engine(data, workload):
+    """Without a cache budget the stack is a pure pass-through: meter and
+    trace equal the bare engine's, in both resolution modes (the uniform
+    API defaults to the fully-resolved protocol; ``False`` exposes the raw
+    1-RT stream the engine's cache-less default produces)."""
+    keys, vals = data
+    tr_legacy, tr_stack = Transport(), Transport()
+    legacy = OutbackShard(keys, vals, load_factor=0.85, transport=tr_legacy)
+    stack = open_store(StoreSpec("outback", load_factor=0.85), keys, vals,
+                       transport=tr_stack)
+    for q in workload[:3]:
+        _assert_same_result(legacy.get_batch(q),
+                            stack.get_batch(q, resolve_makeup=False))
+    for q in workload[3:]:
+        _assert_same_result(legacy.get_batch(q, resolve_makeup=True),
+                            stack.get_batch(q))
+    assert legacy.meter.snapshot() == stack.meter_totals().snapshot()
+    assert tr_legacy.trace == tr_stack.trace
+
+
+def test_meter_layer_attribution(data):
+    """Round trips / makeups / cache hits stamped per call match the meter
+    deltas the call actually produced."""
+    keys, vals = data
+    stack = open_store(StoreSpec("outback", load_factor=0.85,
+                                 cache_budget_bytes=BUDGET), keys, vals)
+    hot = keys[:64]
+    for _ in range(3):
+        stack.get_batch(hot)
+    before = stack.meter_totals().snapshot()
+    res = stack.get_batch(hot)  # fully cached now
+    after = stack.meter_totals().snapshot()
+    assert res.cache_hits == 64 and res.round_trips == 0
+    assert after["round_trips"] == before["round_trips"]
+    assert after["saved_round_trips"] == before["saved_round_trips"] + 64
+
+    absent = splitmix64(np.arange(1, 9, dtype=np.uint64) + np.uint64(1 << 41))
+    res = stack.get_batch(absent)
+    # every absent lane missed the cache and took the 2-RT makeup route
+    assert not res.found.any()
+    assert res.makeups + res.cache_neg_hits == len(absent)
+    assert res.round_trips == 2 * res.makeups
+
+
+def test_cache_layer_honours_resolve_makeup_false(data):
+    """An explicit resolve_makeup=False reaches the engine through the
+    cache layer (the raw 1-RT stream the trace benchmarks record)."""
+    keys, vals = data
+    st = open_store(StoreSpec("outback", load_factor=0.85,
+                              cache_budget_bytes=BUDGET), keys, vals)
+    absent = splitmix64(np.arange(1, 33, dtype=np.uint64) + np.uint64(1 << 40))
+    res = st.get_batch(absent, resolve_makeup=False)
+    assert res.makeups == 0
+    assert res.round_trips == len(absent)  # one RT per lane, no makeup
+
+
+def test_cached_baseline_books_its_own_savings(data):
+    """A cache hit on RACE saves RACE's wire (2 one-sided RTs, raw READ
+    payloads) — not Outback's padded 1-RT shape."""
+    keys, vals = data
+    race = open_store(StoreSpec("race", cache_budget_bytes=BUDGET),
+                      keys, vals)
+    hot = keys[:64]
+    for _ in range(4):
+        race.get_batch(hot)
+    race.reset_meters()  # counters only; the cache stays warm
+    res = race.get_batch(hot)
+    m = race.meter_totals()
+    assert res.cache_hits == 64
+    assert m.saved_round_trips == 2 * 64
+    assert m.saved_req_bytes == 64 * 32
+    assert m.saved_resp_bytes == 64 * (2 * 64 + 32)
+
+
+def test_layer_delegation_exposes_engine_surface(data):
+    keys, vals = data
+    stack = open_store(StoreSpec("outback", load_factor=0.85,
+                                 cache_budget_bytes=BUDGET), keys, vals)
+    # attribute access tunnels through Meter -> CNCache -> adapter -> engine
+    assert stack.engine.n_keys == N
+    assert stack.cache.capacity > 0
+    assert stack.spec.kind == "outback"
+    stack.reset_meters()
+    assert stack.meter_totals().ops == 0
