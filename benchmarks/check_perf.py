@@ -1,0 +1,64 @@
+"""Perf-regression gate for the ``ycsb`` suite (CI smoke lane).
+
+Compares a fresh ``--only ycsb --json`` run against the recorded baseline
+(``BENCH_PR4.json``) on the *machine-portable* number — the
+vectorized-vs-reference build speedup ratio — since absolute wall-clock
+on CI runners is not comparable to the recording host.  Only the build
+row gates: its workload is identical in ``--quick`` and full runs
+(``BUILD_N`` is fixed), so a quick CI run compares apples to apples with
+the full-run baseline.  The mix/resize speedups run at smaller ``--quick``
+sizes than the recorded baseline, so they are reported informationally
+but never fail the lane.
+
+Usage: python -m benchmarks.check_perf fresh.json baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATES = (
+    # row name            tolerated fraction of the baseline ratio
+    ("ycsb/build/speedup", 0.80),  # the satellite's 20% regression bound
+)
+INFORMATIONAL = ("ycsb/A/speedup", "ycsb/resize/dip_narrowing")
+
+
+def _ratio(payload: dict, name: str) -> float:
+    for row in payload["rows"]:
+        if row["name"] == name:
+            return float(row["us_per_call"])  # speedup rows store the ratio
+    raise SystemExit(f"row {name!r} missing from bench JSON")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh")
+    ap.add_argument("baseline")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    failed = []
+    for name, floor in GATES:
+        got, want = _ratio(fresh, name), _ratio(base, name)
+        bound = want * floor
+        status = "ok" if got >= bound else "REGRESSED"
+        print(f"{name}: fresh {got:.2f}x vs baseline {want:.2f}x "
+              f"(floor {bound:.2f}x) -> {status}")
+        if got < bound:
+            failed.append(name)
+    for name in INFORMATIONAL:  # different --quick workload: never gates
+        print(f"{name}: fresh {_ratio(fresh, name):.2f}x vs baseline "
+              f"{_ratio(base, name):.2f}x (informational)")
+    if failed:
+        print(f"perf regression in: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
+    print("perf gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,8 @@ def main() -> None:
                          "across skew), lat (simulated Get latency "
                          "percentiles), scale (simulated closed-loop "
                          "throughput vs clients + resize dip), "
+                         "ycsb (batched vs scalar write mixes + Ludo "
+                         "build/resize-rebuild microbench), "
                          "kernel_paged, kernel_lookup, kernel_pagetable")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero if any suite produced an ERROR row")
@@ -45,7 +47,7 @@ def main() -> None:
                          "percentiles) as machine-readable JSON")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, net_bench, paper_figs
+    from benchmarks import kernel_bench, net_bench, paper_figs, ycsb_bench
     from benchmarks.common import emit
 
     n = 100_000 if args.quick else 300_000
@@ -65,12 +67,14 @@ def main() -> None:
         ("zipf", lambda: paper_figs.zipf_cache(min(n, 200_000))),
         ("lat", lambda: net_bench.lat_suite(args.quick)),
         ("scale", lambda: net_bench.scale_suite(args.quick)),
+        ("ycsb", lambda: ycsb_bench.ycsb_suite(args.quick)),
         ("kernel_paged", kernel_bench.paged_attention_traffic),
         ("kernel_lookup", kernel_bench.ludo_lookup_throughput),
         ("kernel_pagetable", kernel_bench.page_table_memory),
     ]
     only = [t.strip() for t in args.only.split(",")] if args.only else None
     rows = []
+    suite_seconds: dict[str, float] = {}
     for name, fn in suites:
         if only and not any(t and t in name for t in only):
             continue
@@ -79,13 +83,15 @@ def main() -> None:
             rows.extend(fn())
         except Exception as e:  # keep the harness running; report the miss
             rows.append((f"{name}/ERROR", 0.0, repr(e)[:80]))
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        suite_seconds[name] = round(time.time() - t0, 3)
+        print(f"# {name} done in {suite_seconds[name]:.1f}s", file=sys.stderr)
     emit([r[:3] for r in rows])
 
     if args.json:
         from repro.api import registered_kinds
         payload = {"quick": bool(args.quick),
                    "registry": {"kinds": list(registered_kinds())},
+                   "suite_seconds": suite_seconds,  # perf trajectory anchor
                    "rows": [dict(suite=r[0].split("/")[0], name=r[0],
                                  us_per_call=r[1], derived=r[2],
                                  **(r[3] if len(r) > 3 else {}))

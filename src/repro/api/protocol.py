@@ -8,7 +8,9 @@ call surface: ``OutbackShard.get_batch(keys, xp, cn=, mn=, ...)`` vs
 that drift with one batched-first protocol:
 
 * ``get_batch / insert_batch / update_batch / delete_batch`` — the primary
-  ops; scalar ``get / insert / update / delete`` are conveniences over the
+  ops, each served by the engines' native batched protocol paths (exact
+  vectorisations of the scalar walks: same results, same meter totals);
+  scalar ``get / insert / update / delete`` are conveniences over the
   same engines' documented scalar protocol walks.
 * Every op returns an :class:`OpResult`: combined 64-bit ``values``, a
   ``found`` mask, mutation ``statuses``, and — stamped by the stack's

@@ -4,6 +4,9 @@ Layering:
   hashing / bitarray / slots   — shared primitives (np + jnp identical)
   othello                      — Bloomier-filter bucket locator
   ludo                         — DMPH build (cuckoo place + seed search)
+  maintenance                  — vectorized build/maintenance passes
+                                 (one-shot seeds, frontier eviction)
+                                 + their scalar reference oracles
   outback                      — one shard: CN/MN split + §4.3 protocols
   store                        — extendible-hashing directory + §4.4 resize
   overflow / meter             — MN overflow cache, round-trip accounting

@@ -23,8 +23,11 @@ paper's single-MN-thread throughput experiments stress.  ``mn_get_batch``
 has one uniform signature ``(bucket, fp, lo, hi, arrays, xp)`` across all
 four (RACE's raises: one-sided designs have no MN compute to isolate), and
 every baseline also serves the full mutation surface
-(``insert``/``update``/``delete``) so ``repro.api`` can drive any
-registered store through one protocol.
+(``insert``/``update``/``delete`` plus the batched
+``insert_batch``/``update_batch``/``delete_batch``, which vectorise the
+CN-side locate hashes and keep the scalar MN walks — and their meter
+accounting — as the single source of truth) so ``repro.api`` can drive
+any registered store through one protocol.
 """
 
 from __future__ import annotations
@@ -212,8 +215,40 @@ class RaceKVS(_HeapMixin):
         g1 = int(hash_range(l32, h32, 0xACE1, self.ng))
         return lo, hi, g0, g1, int(self._fp(l32, h32))
 
+    def _locate_groups_batch(self, keys: np.ndarray):
+        """Vectorised CN locate for a key batch (the per-op hash work)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        lo, hi = split_u64(keys)
+        g0 = hash_range(lo, hi, 0xACE0, self.ng).astype(np.int64)
+        g1 = hash_range(lo, hi, 0xACE1, self.ng).astype(np.int64)
+        return lo, hi, g0, g1, self._fp(lo, hi)
+
+    def insert_batch(self, keys, values) -> list[str]:
+        lo, hi, g0, g1, fp = self._locate_groups_batch(keys)
+        return [self._insert_at(int(lo[i]), int(hi[i]), int(g0[i]),
+                                int(g1[i]), int(fp[i]), int(v))
+                for i, v in enumerate(np.asarray(values, dtype=np.uint64))]
+
+    def update_batch(self, keys, values) -> np.ndarray:
+        lo, hi, g0, g1, fp = self._locate_groups_batch(keys)
+        values = np.asarray(values, dtype=np.uint64)
+        return np.asarray([self._update_at(int(lo[i]), int(hi[i]),
+                                           int(g0[i]), int(g1[i]),
+                                           int(fp[i]), int(values[i]))
+                           for i in range(len(values))], dtype=bool)
+
+    def delete_batch(self, keys) -> np.ndarray:
+        lo, hi, g0, g1, fp = self._locate_groups_batch(keys)
+        return np.asarray([self._delete_at(int(lo[i]), int(hi[i]),
+                                           int(g0[i]), int(g1[i]),
+                                           int(fp[i]))
+                           for i in range(lo.shape[0])], dtype=bool)
+
     def insert(self, key: int, value: int) -> str:
         lo, hi, g0, g1, fp = self._locate_groups(key)
+        return self._insert_at(lo, hi, g0, g1, fp, value)
+
+    def _insert_at(self, lo, hi, g0, g1, fp, value) -> str:
         self.meter.add(rts=2, req=16 + 8 + 32, resp=2 * self.GROUP_BYTES + 8,
                        one_sided=True, cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS)
         hit = self._find_entry(lo, hi, g0, g1, fp)
@@ -244,6 +279,9 @@ class RaceKVS(_HeapMixin):
 
     def update(self, key: int, value: int) -> bool:
         lo, hi, g0, g1, fp = self._locate_groups(key)
+        return self._update_at(lo, hi, g0, g1, fp, value)
+
+    def _update_at(self, lo, hi, g0, g1, fp, value) -> bool:
         self.meter.add(rts=2, req=16 + 8 + 32, resp=2 * self.GROUP_BYTES + 8,
                        one_sided=True, cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS)
         hit = self._find_entry(lo, hi, g0, g1, fp)
@@ -254,6 +292,9 @@ class RaceKVS(_HeapMixin):
 
     def delete(self, key: int) -> bool:
         lo, hi, g0, g1, fp = self._locate_groups(key)
+        return self._delete_at(lo, hi, g0, g1, fp)
+
+    def _delete_at(self, lo, hi, g0, g1, fp) -> bool:
         self.meter.add(rts=2, req=16 + 8, resp=2 * self.GROUP_BYTES + 8,
                        one_sided=True, cn_hash=3, cn_cmp=2 * self.GROUP_SLOTS)
         hit = self._find_entry(lo, hi, g0, g1, fp)
@@ -372,6 +413,32 @@ class MicaKVS(_HeapMixin):
             g = (g + 1) % self.nb
         return None, free, free_dist, walked
 
+    def _home_batch(self, keys: np.ndarray):
+        """Vectorised home bucket + fingerprint for a key batch."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        lo, hi = split_u64(keys)
+        g = hash_range(lo, hi, 0x111CA, self.nb).astype(np.int64)
+        return lo, hi, g, RaceKVS._fp(lo, hi)
+
+    def insert_batch(self, keys, values) -> list[str]:
+        lo, hi, g, fp = self._home_batch(keys)
+        return [self._insert_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                int(fp[i]), int(v))
+                for i, v in enumerate(np.asarray(values, dtype=np.uint64))]
+
+    def update_batch(self, keys, values) -> np.ndarray:
+        lo, hi, g, fp = self._home_batch(keys)
+        values = np.asarray(values, dtype=np.uint64)
+        return np.asarray([self._update_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                           int(fp[i]), int(values[i]))
+                           for i in range(len(values))], dtype=bool)
+
+    def delete_batch(self, keys) -> np.ndarray:
+        lo, hi, g, fp = self._home_batch(keys)
+        return np.asarray([self._delete_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                           int(fp[i]))
+                           for i in range(lo.shape[0])], dtype=bool)
+
     def insert(self, key: int, value: int) -> str:
         """Runtime Insert, bounded by the batched kernel's reach: a new key
         may only land within ``SCAN_BUCKETS`` buckets of home (the scan
@@ -380,6 +447,9 @@ class MicaKVS(_HeapMixin):
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         g = int(hash_range(np.uint32(lo), np.uint32(hi), 0x111CA, self.nb))
         fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
+        return self._insert_at(lo, hi, g, fp, value)
+
+    def _insert_at(self, lo, hi, g, fp, value) -> str:
         found, free, free_dist, walked = self._walk_for(lo, hi, fp, g)
         self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=walked,
                        mn_cmp=walked * self.BUCKET_SLOTS, mn_writes=1)
@@ -410,6 +480,9 @@ class MicaKVS(_HeapMixin):
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         g = int(hash_range(np.uint32(lo), np.uint32(hi), 0x111CA, self.nb))
         fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
+        return self._update_at(lo, hi, g, fp, value)
+
+    def _update_at(self, lo, hi, g, fp, value) -> bool:
         found, _, _, walked = self._walk_for(lo, hi, fp, g)
         self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=walked,
                        mn_cmp=walked * self.BUCKET_SLOTS,
@@ -423,6 +496,9 @@ class MicaKVS(_HeapMixin):
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         g = int(hash_range(np.uint32(lo), np.uint32(hi), 0x111CA, self.nb))
         fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
+        return self._delete_at(lo, hi, g, fp)
+
+    def _delete_at(self, lo, hi, g, fp) -> bool:
         found, _, _, walked = self._walk_for(lo, hi, fp, g)
         self.meter.add(rts=1, req=16, resp=8, cn_hash=2, mn_reads=walked,
                        mn_cmp=walked * self.BUCKET_SLOTS,
@@ -589,9 +665,38 @@ class ClusterKVS(_HeapMixin):
         g = int(hash_range(np.uint32(lo), np.uint32(hi), 0xC1C1, self.nb))
         return g, int(self._fp14(np.uint32(lo), np.uint32(hi)))
 
+    def _home_batch(self, keys: np.ndarray):
+        """Vectorised home bucket + 14-bit fingerprint for a key batch."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        lo, hi = split_u64(keys)
+        g = hash_range(lo, hi, 0xC1C1, self.nb).astype(np.int64)
+        return lo, hi, g, self._fp14(lo, hi)
+
+    def insert_batch(self, keys, values) -> list[str]:
+        lo, hi, g, fp = self._home_batch(keys)
+        return [self._insert_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                int(fp[i]), int(v))
+                for i, v in enumerate(np.asarray(values, dtype=np.uint64))]
+
+    def update_batch(self, keys, values) -> np.ndarray:
+        lo, hi, g, fp = self._home_batch(keys)
+        values = np.asarray(values, dtype=np.uint64)
+        return np.asarray([self._update_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                           int(fp[i]), int(values[i]))
+                           for i in range(len(values))], dtype=bool)
+
+    def delete_batch(self, keys) -> np.ndarray:
+        lo, hi, g, fp = self._home_batch(keys)
+        return np.asarray([self._delete_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                           int(fp[i]))
+                           for i in range(lo.shape[0])], dtype=bool)
+
     def insert(self, key: int, value: int) -> str:
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         g, fp = self._home(lo, hi)
+        return self._insert_at(lo, hi, g, fp, value)
+
+    def _insert_at(self, lo, hi, g, fp, value) -> str:
         found, hops = self._chain_find(lo, hi, fp, g)
         self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=hops,
                        mn_cmp=hops * self.BUCKET_SLOTS, mn_writes=1)
@@ -613,6 +718,9 @@ class ClusterKVS(_HeapMixin):
     def update(self, key: int, value: int) -> bool:
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         g, fp = self._home(lo, hi)
+        return self._update_at(lo, hi, g, fp, value)
+
+    def _update_at(self, lo, hi, g, fp, value) -> bool:
         found, hops = self._chain_find(lo, hi, fp, g)
         self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=hops,
                        mn_cmp=hops * self.BUCKET_SLOTS,
@@ -625,6 +733,9 @@ class ClusterKVS(_HeapMixin):
     def delete(self, key: int) -> bool:
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         g, fp = self._home(lo, hi)
+        return self._delete_at(lo, hi, g, fp)
+
+    def _delete_at(self, lo, hi, g, fp) -> bool:
         found, hops = self._chain_find(lo, hi, fp, g)
         self.meter.add(rts=1, req=16, resp=8, cn_hash=2, mn_reads=hops,
                        mn_cmp=hops * self.BUCKET_SLOTS,
@@ -708,6 +819,23 @@ class DummyKVS(_HeapMixin):
     def delete(self, key: int) -> bool:
         self.meter.add(rts=1, req=16, resp=8, mn_writes=1)
         return True
+
+    # Batched mutations are pure meter movements (identical totals to the
+    # scalar loop): the upper-bound model maintains no index state.
+    def insert_batch(self, keys, values) -> list[str]:
+        n = int(np.asarray(keys).shape[0])
+        self.meter.add(n, rts=1, req=16 + 32, resp=8, mn_writes=1)
+        return ["slot"] * n
+
+    def update_batch(self, keys, values) -> np.ndarray:
+        n = int(np.asarray(keys).shape[0])
+        self.meter.add(n, rts=1, req=16 + 32, resp=8, mn_writes=1)
+        return np.ones(n, dtype=bool)
+
+    def delete_batch(self, keys) -> np.ndarray:
+        n = int(np.asarray(keys).shape[0])
+        self.meter.add(n, rts=1, req=16, resp=8, mn_writes=1)
+        return np.ones(n, dtype=bool)
 
     def mn_get_batch(self, idx, arrays, xp=np):
         vlo, vhi = arrays

@@ -91,9 +91,61 @@ def slot_hash(lo, hi, bucket_seed, xp=np):
     return (h & xp.uint32(3)).astype(xp.uint32)
 
 
+def popcount32(x, xp=np):
+    """SWAR population count over uint32 lanes (no Python loop).
+
+    Shared by the Ludo seed search (distinct-slot test over 8-bit slot
+    masks) and any future bitset accounting; identical in numpy and jax.
+    """
+    x = _as_u32(x, xp)
+    with _wrapok(xp):
+        x = x - ((x >> xp.uint32(1)) & xp.uint32(0x55555555))
+        x = (x & xp.uint32(0x33333333)) + ((x >> xp.uint32(2)) & xp.uint32(0x33333333))
+        x = (x + (x >> xp.uint32(4))) & xp.uint32(0x0F0F0F0F)
+        x = (x * xp.uint32(0x01010101)) >> xp.uint32(24)
+    return x
+
+
 def fingerprint6(lo, hi, xp=np):
     """The 6-bit slot fingerprint from the paper's bucket layout (Fig. 5)."""
     return (hash64_32(lo, hi, 0xF1A9, xp) >> xp.uint32(13)) & xp.uint32(0x3F)
+
+
+# ---------------------------------------------------------------------------
+# Pure-int scalar twins of the array hashes.  The scalar protocol walks
+# (one key at a time) spend more time building 0-d numpy arrays than
+# hashing; these compute the *bit-identical* value with Python ints
+# (tested against the array versions in tests/test_core_hashing.py).
+
+_M32 = 0xFFFFFFFF
+
+
+def fmix32_int(h: int) -> int:
+    h &= _M32
+    h ^= h >> 16
+    h = (h * _C1) & _M32
+    h ^= h >> 13
+    h = (h * _C2) & _M32
+    return h ^ (h >> 16)
+
+
+def hash64_32_int(lo: int, hi: int, seed: int) -> int:
+    h = (seed ^ _GOLDEN) & _M32
+    h = (fmix32_int(h ^ lo) * _C3) & _M32
+    h = (fmix32_int(h ^ hi) * _C4) & _M32
+    return fmix32_int(h)
+
+
+def hash_range_int(lo: int, hi: int, seed: int, size: int) -> int:
+    return hash64_32_int(lo, hi, seed) % size
+
+
+def slot_hash_int(lo: int, hi: int, bucket_seed: int) -> int:
+    return fmix32_int((lo ^ (bucket_seed * _C1) ^ (hi * _C2)) & _M32) & 3
+
+
+def fingerprint6_int(lo: int, hi: int) -> int:
+    return (hash64_32_int(lo, hi, 0xF1A9) >> 13) & 0x3F
 
 
 def split_u64(keys: np.ndarray):

@@ -10,7 +10,12 @@ A Ludo table over n keys:
     are ever stored in the table.
 
 Build is host-side numpy (the paper also builds/reseeds on CPUs); lookup is
-pure arithmetic + gathers and runs identically under numpy and jax.
+pure arithmetic + gathers and runs identically under numpy and jax.  The
+maintenance passes — cuckoo placement and the per-bucket seed search — are
+the vectorized programs in ``repro.core.maintenance``; ``build`` accepts
+``reference=True`` to run their legacy scalar counterparts instead (the
+equivalence oracle for tests and the baseline the ``ycsb`` build benchmark
+reports against).
 
 The split of the build result follows the paper exactly:
   * ``LudoCN`` (compute node): Othello arrays + seeds. 2.33 + 8/4/eps bits/key.
@@ -25,13 +30,14 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import maintenance
 from repro.core import othello as othello_mod
 from repro.core.hashing import hash_range, slot_hash
 
 SEED_BUCKET_A = 0xA11CE
 SEED_BUCKET_B = 0xB0BBE
-MAX_SEED = 256  # 8-bit per-bucket seeds, as in the paper
-_EVICT_MAX_STEPS = 800
+MAX_SEED = maintenance.MAX_SEED  # 8-bit per-bucket seeds, as in the paper
+_EVICT_MAX_STEPS = maintenance.EVICT_MAX_ROUNDS
 
 
 class LudoBuildError(RuntimeError):
@@ -97,156 +103,78 @@ class LudoBuild:
 
 def build(lo: np.ndarray, hi: np.ndarray, *, load_factor: float = 0.95,
           num_buckets: int | None = None, oth_ma: int | None = None,
-          oth_mb: int | None = None, rng_seed: int = 0) -> LudoBuild:
+          oth_mb: int | None = None, rng_seed: int = 0,
+          reference: bool = False) -> LudoBuild:
     """Build a Ludo table over the key set (lo, hi).
 
     ``num_buckets`` / ``oth_ma`` / ``oth_mb`` force the table geometry (the
     sharded engine equalizes geometry across shards so components stack).
+    ``reference=True`` swaps both maintenance passes for their legacy
+    scalar implementations (per-key eviction walk, per-bucket seed loop) —
+    the benchmark baseline; results satisfy the same invariants but the
+    placement (and hence the seeds) may differ from the vectorized build.
     """
     n = int(lo.shape[0])
     if num_buckets is None:
         num_buckets = max(1, int(np.ceil(n / (4.0 * load_factor))))
 
-    bucket_of, fallback = _cuckoo_place(lo, hi, num_buckets, rng_seed)
-
     b0, b1 = candidate_buckets(lo, hi, num_buckets)
+    place = (maintenance.cuckoo_place_reference if reference
+             else maintenance.cuckoo_place)
+    bucket_of, fallback = place(b0.astype(np.int64), b1.astype(np.int64),
+                                num_buckets, rng_seed)
+
     choice = ((bucket_of == b1) & (b0 != b1)).astype(np.uint8)
     oth = othello_mod.build(lo, hi, choice, ma=oth_ma, mb=oth_mb, seed=rng_seed)
 
-    seeds, slot_of = _find_seeds(lo, hi, bucket_of, num_buckets)
+    seeds, slot_of = _find_seeds(lo, hi, bucket_of, num_buckets,
+                                 reference=reference)
     cn = LudoCN(oth, seeds, num_buckets)
     return LudoBuild(cn, bucket_of.astype(np.uint32), slot_of, fallback)
 
 
 def find_bucket_seed(b_lo: np.ndarray, b_hi: np.ndarray) -> int | None:
-    """Brute-force an 8-bit seed that maps the (<=4) keys to distinct slots.
+    """Find the lowest 8-bit seed mapping the (<=4) keys to distinct slots.
 
-    This is the paper's MN-side re-seed step on Insert (case 2, §4.3.2).
+    This is the paper's MN-side re-seed step on Insert (case 2, §4.3.2),
+    served by the one-shot search over a single bucket (the batch form is
+    ``maintenance.find_bucket_seeds_batch``).
     """
     k = int(b_lo.shape[0])
     if k == 0:
         return 0
-    for s in range(MAX_SEED):
-        sl = slot_hash(b_lo, b_hi, np.uint32(s))
-        if np.unique(sl).size == k:
-            return s
-    return None
+    k_lo = np.zeros((1, 4), dtype=np.uint32)
+    k_hi = np.zeros((1, 4), dtype=np.uint32)
+    k_lo[0, :k] = b_lo
+    k_hi[0, :k] = b_hi
+    s = maintenance.find_bucket_seeds_batch(k_lo, k_hi, np.asarray([k]))
+    return None if int(s[0]) < 0 else int(s[0])
 
 
 # ---------------------------------------------------------------------------
 # internals
 
 
-def _cuckoo_place(lo, hi, num_buckets, rng_seed):
-    """(2,4)-cuckoo placement: two vectorised greedy passes + random-walk
-    eviction for the tail. Returns (bucket_of[n], fallback_indices)."""
-    n = lo.shape[0]
-    b0, b1 = candidate_buckets(lo, hi, num_buckets)
-    b0 = b0.astype(np.int64)
-    b1 = b1.astype(np.int64)
-    occ = np.full((num_buckets, 4), -1, dtype=np.int64)  # key index per slot-pos
-    fill = np.zeros(num_buckets, dtype=np.int64)
-    bucket_of = np.full(n, -1, dtype=np.int64)
-
-    def greedy(idx, cand):
-        """Place keys ``idx`` into buckets ``cand`` up to capacity (in order)."""
-        order = np.argsort(cand, kind="stable")
-        idx, cand = idx[order], cand[order]
-        # rank within equal-bucket runs
-        start = np.r_[0, np.nonzero(np.diff(cand))[0] + 1]
-        run_id = np.zeros(cand.size, dtype=np.int64)
-        run_id[start[1:]] = 1
-        run_id = np.cumsum(run_id)
-        rank = np.arange(cand.size) - start[run_id]
-        slot_pos = fill[cand] + rank
-        take = slot_pos < 4
-        t_idx, t_cand, t_pos = idx[take], cand[take], slot_pos[take]
-        occ[t_cand, t_pos] = t_idx
-        bucket_of[t_idx] = t_cand
-        np.add.at(fill, cand[take], 1)
-        return idx[~take]
-
-    rest = greedy(np.arange(n, dtype=np.int64), b0)
-    rest = greedy(rest, b1[rest])
-
-    # Random-walk eviction for the tail (expected O(1) per key at lf<=0.95).
-    rng = np.random.default_rng(rng_seed ^ 0x5EED)
-    fallback = []
-    for start_idx in rest:
-        cur = int(start_idx)
-        b = int(b0[cur]) if rng.integers(2) == 0 else int(b1[cur])
-        placed = False
-        for _ in range(_EVICT_MAX_STEPS):
-            if fill[b] < 4:
-                occ[b, fill[b]] = cur
-                bucket_of[cur] = b
-                fill[b] += 1
-                placed = True
-                break
-            lane = int(rng.integers(4))
-            victim = int(occ[b, lane])
-            occ[b, lane] = cur
-            bucket_of[cur] = b
-            cur = victim
-            b = int(b1[cur]) if int(b0[cur]) == b else int(b0[cur])
-        if not placed:
-            bucket_of[cur] = -1
-            fallback.append(cur)
-    return bucket_of, np.asarray(fallback, dtype=np.int64)
-
-
-def _find_seeds(lo, hi, bucket_of, num_buckets):
-    """Vectorised per-bucket 8-bit seed search (rounds over seed values)."""
+def _find_seeds(lo, hi, bucket_of, num_buckets, *, reference: bool = False):
+    """Per-bucket 8-bit seed search over the whole table at once."""
     n = lo.shape[0]
     placed = np.nonzero(bucket_of >= 0)[0]
     if placed.size == 0:
         return np.zeros(num_buckets, dtype=np.uint8), np.zeros(n, dtype=np.uint32)
-    order = placed[np.argsort(bucket_of[placed], kind="stable")]
-    bsorted = bucket_of[order]
-    start = np.searchsorted(bsorted, np.arange(num_buckets), side="left")
-    end = np.searchsorted(bsorted, np.arange(num_buckets), side="right")
-    count = (end - start).astype(np.int64)
-    if count.size and count.max(initial=0) > 4:
-        raise LudoBuildError("bucket occupancy > 4 after placement")
+    try:
+        g_lo, g_hi, valid, order, _ = maintenance.gather_buckets(
+            lo, hi, bucket_of, num_buckets)
+    except ValueError as e:
+        raise LudoBuildError(str(e)) from None
 
-    # Gather each bucket's keys into (nb, 4); empty lanes get sentinel slots
-    # 4+lane so they never collide with real slots 0..3 in the distinctness
-    # test below.
-    lane = np.zeros(order.size, dtype=np.int64)
-    lane = np.arange(order.size) - start[bsorted]
-    key_at = np.full((num_buckets, 4), -1, dtype=np.int64)
-    key_at[bsorted, lane] = order
-    valid = key_at >= 0
-    g_lo = np.where(valid, lo[np.clip(key_at, 0, None)], 0).astype(np.uint32)
-    g_hi = np.where(valid, hi[np.clip(key_at, 0, None)], 0).astype(np.uint32)
-
-    seeds = np.zeros(num_buckets, dtype=np.uint8)
-    resolved = count == 0
-    sentinel = (np.uint32(4) + np.arange(4, dtype=np.uint32))[None, :]
-    slot_of = np.zeros(n, dtype=np.uint32)
-    for s in range(MAX_SEED):
-        todo = np.nonzero(~resolved)[0]
-        if todo.size == 0:
-            break
-        h = slot_hash(g_lo[todo], g_hi[todo], np.uint32(s))
-        h = np.where(valid[todo], h, np.broadcast_to(sentinel, h.shape))
-        bits = np.bitwise_or.reduce(np.uint32(1) << h, axis=1)
-        distinct = _popcount8(bits) == 4
-        ok = todo[distinct]
-        seeds[ok] = s
-        resolved[ok] = True
-    if not bool(resolved.all()):
+    search = (maintenance.seed_search_reference if reference
+              else maintenance.one_shot_seeds)
+    seeds, ok = search(g_lo, g_hi, valid)
+    if not bool(ok.all()):
         # The paper observed this never happens with 8-bit seeds; keep the
         # contract explicit rather than silently mis-hashing.
         raise LudoBuildError("bucket with no perfect 8-bit seed")
 
+    slot_of = np.zeros(n, dtype=np.uint32)
     slot_of[order] = slot_hash(lo[order], hi[order], seeds[bucket_of[order]])
     return seeds, slot_of
-
-
-def _popcount8(x: np.ndarray) -> np.ndarray:
-    x = x.astype(np.uint32)
-    c = np.zeros_like(x)
-    for i in range(8):
-        c += (x >> np.uint32(i)) & np.uint32(1)
-    return c

@@ -1,0 +1,297 @@
+"""Vectorized DMPH maintenance: the write half of the Ludo build path.
+
+Outback's write-path economics (paper §4.3/§4.4) assume index maintenance
+is cheap: an insert re-seeds one 4-slot bucket, and a resize rebuilds a
+shard's Ludo table fast enough that the Fig.-17 throughput dip stays
+short.  The original build path here was interpreter-bound: an 8-bit seed
+search that tried seeds one Python iteration at a time, and a cuckoo
+eviction tail that random-walked one key at a time.  This module replaces
+both with array programs and keeps the scalar originals as *references* —
+the equivalence oracle for tests and the baseline the ``ycsb`` benchmark
+suite reports its speedup against.
+
+* :func:`one_shot_seeds` — the one-shot seed search: broadcast
+  ``slot_hash`` over ``(num_buckets, seed_tile, 4)``, reduce each
+  (bucket, seed) pair to an occupancy bitmask, and pick the **lowest**
+  seed whose popcount is 4.  Seed tiles keep the early-exit economics of
+  the rounds loop (most buckets resolve within the first 32 seeds) while
+  the whole table is searched in a handful of array ops.
+* :func:`cuckoo_place` — (2,4)-cuckoo placement with the greedy passes
+  unchanged and the eviction tail turned into a batched BFS-style
+  frontier walk: every pending key steps once per round (place into a
+  free slot, or evict a victim who joins the frontier with its alternate
+  bucket), instead of ``_EVICT_MAX_STEPS`` Python iterations per key.
+* :func:`find_bucket_seeds_batch` — the insert-time re-seed (§4.3.2
+  case 2) over a *batch* of buckets at once; ``ludo.find_bucket_seed``
+  is the single-bucket view of it.
+* ``*_reference`` — the legacy scalar implementations, element-wise
+  oracles for the vectorized paths (lowest-valid-seed semantics,
+  including the no-seed-found error path).
+
+Everything is host-side numpy, like the rest of the build path (the paper
+builds and re-seeds on CPUs); lookup-side code is untouched.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hashing import popcount32, slot_hash
+
+MAX_SEED = 256  # 8-bit per-bucket seeds, as in the paper
+SEED_TILE = 32  # seeds searched per array op round (8 tiles cover MAX_SEED)
+EVICT_MAX_ROUNDS = 800  # frontier rounds (reference: steps per key)
+
+# Empty bucket lanes hash to sentinel slots 4..7, disjoint from the real
+# slots 0..3, so a bucket with k < 4 keys still tests "popcount == 4".
+_SENTINEL = np.uint32(4) + np.arange(4, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# seed search
+
+
+def one_shot_seeds(g_lo: np.ndarray, g_hi: np.ndarray, valid: np.ndarray,
+                   *, max_seed: int = MAX_SEED, tile: int | None = None):
+    """Vectorized lowest-valid-seed search over gathered buckets.
+
+    Host-side numpy, like the rest of the build path.
+
+    ``g_lo``/``g_hi`` are ``(nb, 4)`` uint32 key lanes per bucket (empty
+    lanes arbitrary), ``valid`` the matching bool mask.  Returns
+    ``(seeds uint8[nb], ok bool[nb])`` where ``seeds[b]`` is the smallest
+    seed in ``[0, max_seed)`` mapping bucket ``b``'s keys to distinct
+    slots and ``ok[b]`` is False when no such seed exists (the caller
+    owns the ``LudoBuildError`` / overflow fallback semantics).
+
+    Element-wise identical to :func:`seed_search_reference` (tested); the
+    tiling is purely an execution schedule — tiles scan seeds in
+    ascending order and a bucket resolves in the first tile that contains
+    a valid seed, so "lowest valid seed" is preserved exactly.
+    """
+    g_lo = np.asarray(g_lo, dtype=np.uint32)
+    g_hi = np.asarray(g_hi, dtype=np.uint32)
+    valid = np.asarray(valid, dtype=bool)
+    nb = int(g_lo.shape[0])
+    seeds = np.zeros(nb, dtype=np.uint8)
+    ok = ~valid.any(axis=1)  # empty buckets resolve to seed 0 immediately
+    if tile is None:
+        # tiny batches (single-bucket re-seeds) are cheaper in one shot
+        tile = max_seed if nb <= 64 else SEED_TILE
+    todo = np.nonzero(~ok)[0]
+    sentinel = _SENTINEL[None, None, :]
+    for s0 in range(0, max_seed, tile):
+        if todo.size == 0:
+            break
+        svals = np.arange(s0, min(s0 + tile, max_seed), dtype=np.uint32)
+        # (t, S, 4): every remaining bucket x every seed of the tile
+        h = slot_hash(g_lo[todo][:, None, :], g_hi[todo][:, None, :],
+                      svals[None, :, None])
+        h = np.where(valid[todo][:, None, :], h, sentinel)
+        bits = np.bitwise_or.reduce(np.uint32(1) << h, axis=2)
+        good = popcount32(bits) == 4
+        hit = good.any(axis=1)
+        first = np.argmax(good, axis=1)
+        found = todo[hit]
+        seeds[found] = (s0 + first[hit]).astype(np.uint8)
+        ok[found] = True
+        todo = todo[~hit]
+    return seeds, ok
+
+
+def seed_search_reference(g_lo: np.ndarray, g_hi: np.ndarray,
+                          valid: np.ndarray, *, max_seed: int = MAX_SEED):
+    """The legacy per-bucket Python loop over seeds — the scalar oracle.
+
+    Same inputs/outputs as :func:`one_shot_seeds`; this is what the
+    original build and the §4.3.2 re-seed did, one bucket and one seed at
+    a time, and what the ``ycsb`` build benchmark reports speedup over.
+    """
+    nb = int(g_lo.shape[0])
+    seeds = np.zeros(nb, dtype=np.uint8)
+    ok = np.zeros(nb, dtype=bool)
+    for b in range(nb):
+        lanes = np.nonzero(valid[b])[0]
+        if lanes.size == 0:
+            ok[b] = True
+            continue
+        b_lo = np.asarray(g_lo[b, lanes], dtype=np.uint32)
+        b_hi = np.asarray(g_hi[b, lanes], dtype=np.uint32)
+        for s in range(max_seed):
+            sl = slot_hash(b_lo, b_hi, np.uint32(s))
+            if np.unique(sl).size == lanes.size:
+                seeds[b] = s
+                ok[b] = True
+                break
+    return seeds, ok
+
+
+def find_bucket_seeds_batch(k_lo: np.ndarray, k_hi: np.ndarray,
+                            counts: np.ndarray) -> np.ndarray:
+    """Insert-time re-seed over a batch of buckets (§4.3.2 case 2).
+
+    ``k_lo``/``k_hi`` are ``(B, 4)`` key lanes (lane ``j`` meaningful when
+    ``j < counts[b]``), ``counts`` the per-bucket key counts.  Returns
+    int16 seeds with ``-1`` where no 8-bit seed is perfect (the caller
+    falls back to the overflow cache, exactly as the scalar path did).
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    valid = np.arange(4)[None, :] < counts[:, None]
+    seeds, ok = one_shot_seeds(k_lo, k_hi, valid)
+    out = seeds.astype(np.int16)
+    out[~ok] = -1
+    return out
+
+
+def gather_buckets(lo: np.ndarray, hi: np.ndarray, bucket_of: np.ndarray,
+                   num_buckets: int):
+    """Gather each bucket's (<=4) keys into dense ``(nb, 4)`` lane arrays.
+
+    Returns ``(g_lo, g_hi, valid, order, bsorted)`` where ``order`` is
+    the placed-key index array sorted by bucket and ``bsorted`` its
+    buckets — what the build uses to scatter per-key slots back out.
+    Raises ``ValueError`` if any bucket holds more than 4 keys.
+    """
+    placed = np.nonzero(bucket_of >= 0)[0]
+    order = placed[np.argsort(bucket_of[placed], kind="stable")]
+    bsorted = bucket_of[order]
+    start = np.searchsorted(bsorted, np.arange(num_buckets), side="left")
+    end = np.searchsorted(bsorted, np.arange(num_buckets), side="right")
+    if num_buckets and (end - start).max(initial=0) > 4:
+        raise ValueError("bucket occupancy > 4 after placement")
+    lane = np.arange(order.size) - start[bsorted]
+    key_at = np.full((num_buckets, 4), -1, dtype=np.int64)
+    key_at[bsorted, lane] = order
+    valid = key_at >= 0
+    g_lo = np.where(valid, lo[np.clip(key_at, 0, None)], 0).astype(np.uint32)
+    g_hi = np.where(valid, hi[np.clip(key_at, 0, None)], 0).astype(np.uint32)
+    return g_lo, g_hi, valid, order, bsorted
+
+
+# ---------------------------------------------------------------------------
+# cuckoo placement
+
+
+def _greedy_pass(idx, cand, occ, fill, bucket_of):
+    """Place keys ``idx`` into buckets ``cand`` up to capacity (in order).
+
+    The shared vectorised greedy wave: rank keys within equal-bucket runs
+    so each bucket accepts at most its remaining capacity this pass.
+    Returns the indices it could not place.
+    """
+    order = np.argsort(cand, kind="stable")
+    idx, cand = idx[order], cand[order]
+    start = np.r_[0, np.nonzero(np.diff(cand))[0] + 1]
+    run_id = np.zeros(cand.size, dtype=np.int64)
+    run_id[start[1:]] = 1
+    run_id = np.cumsum(run_id)
+    rank = np.arange(cand.size) - start[run_id]
+    slot_pos = fill[cand] + rank
+    take = slot_pos < 4
+    occ[cand[take], slot_pos[take]] = idx[take]
+    bucket_of[idx[take]] = cand[take]
+    np.add.at(fill, cand[take], 1)
+    return idx[~take], cand[~take]
+
+
+def cuckoo_place(b0: np.ndarray, b1: np.ndarray, num_buckets: int,
+                 rng_seed: int, *, max_rounds: int = EVICT_MAX_ROUNDS):
+    """(2,4)-cuckoo placement: greedy waves + a batched frontier eviction.
+
+    ``b0``/``b1`` are each key's two candidate buckets.  Returns
+    ``(bucket_of int64[n], fallback int64[])`` — same contract as the
+    reference: ``-1`` / listed in ``fallback`` for keys that could not be
+    placed (they spill to the overflow cache).
+
+    The eviction tail runs as a BFS-style frontier: every round, all
+    pending keys first try to place into free capacity (one greedy wave),
+    then **one** pending key per still-full bucket evicts a random victim
+    — the victim joins the frontier with its alternate bucket.  Rounds
+    are a handful of array ops regardless of frontier size; the expected
+    number of rounds is the longest eviction chain, not the sum of all
+    chains.  Deterministic for a fixed ``rng_seed``.
+    """
+    b0 = np.asarray(b0, dtype=np.int64)
+    b1 = np.asarray(b1, dtype=np.int64)
+    n = int(b0.shape[0])
+    occ = np.full((num_buckets, 4), -1, dtype=np.int64)
+    fill = np.zeros(num_buckets, dtype=np.int64)
+    bucket_of = np.full(n, -1, dtype=np.int64)
+
+    rest, _ = _greedy_pass(np.arange(n, dtype=np.int64), b0, occ, fill,
+                           bucket_of)
+    rest, _ = _greedy_pass(rest, b1[rest], occ, fill, bucket_of)
+    if rest.size == 0:
+        return bucket_of, rest
+
+    rng = np.random.default_rng(rng_seed ^ 0x5EED)
+    cur = rest
+    b = np.where(rng.integers(0, 2, size=cur.size) == 0, b0[cur], b1[cur])
+    for _ in range(max_rounds):
+        if cur.size == 0:
+            break
+        # placement wave: free capacity absorbs what it can
+        cur, b = _greedy_pass(cur, b, occ, fill, bucket_of)
+        if cur.size == 0:
+            break
+        # eviction wave: the first pending key of each (full) bucket kicks
+        # a random resident out; the victim re-enters with its other bucket
+        _, first_idx = np.unique(b, return_index=True)
+        ev = np.zeros(cur.size, dtype=bool)
+        ev[first_idx] = True
+        eb, ec = b[ev], cur[ev]
+        lanes = rng.integers(0, 4, size=eb.size)
+        victims = occ[eb, lanes]
+        occ[eb, lanes] = ec
+        bucket_of[ec] = eb
+        alt = np.where(b0[victims] == eb, b1[victims], b0[victims])
+        cur = np.concatenate([victims, cur[~ev]])
+        b = np.concatenate([alt, b[~ev]])
+    if cur.size:
+        bucket_of[cur] = -1
+    return bucket_of, np.sort(cur)
+
+
+def cuckoo_place_reference(b0: np.ndarray, b1: np.ndarray, num_buckets: int,
+                           rng_seed: int, *,
+                           max_steps: int = EVICT_MAX_ROUNDS):
+    """The legacy eviction tail: one random walk per unplaced key.
+
+    Kept verbatim (greedy waves shared) as the scalar baseline the build
+    benchmark times and a behavioural reference for the frontier walk's
+    invariants.
+    """
+    b0 = np.asarray(b0, dtype=np.int64)
+    b1 = np.asarray(b1, dtype=np.int64)
+    n = int(b0.shape[0])
+    occ = np.full((num_buckets, 4), -1, dtype=np.int64)
+    fill = np.zeros(num_buckets, dtype=np.int64)
+    bucket_of = np.full(n, -1, dtype=np.int64)
+
+    rest, _ = _greedy_pass(np.arange(n, dtype=np.int64), b0, occ, fill,
+                           bucket_of)
+    rest, _ = _greedy_pass(rest, b1[rest], occ, fill, bucket_of)
+
+    rng = np.random.default_rng(rng_seed ^ 0x5EED)
+    fallback = []
+    for start_idx in rest:
+        cur = int(start_idx)
+        b = int(b0[cur]) if rng.integers(2) == 0 else int(b1[cur])
+        placed = False
+        for _ in range(max_steps):
+            if fill[b] < 4:
+                occ[b, fill[b]] = cur
+                bucket_of[cur] = b
+                fill[b] += 1
+                placed = True
+                break
+            lane = int(rng.integers(4))
+            victim = int(occ[b, lane])
+            occ[b, lane] = cur
+            bucket_of[cur] = b
+            cur = victim
+            b = int(b1[cur]) if int(b0[cur]) == b else int(b0[cur])
+        if not placed:
+            bucket_of[cur] = -1
+            fallback.append(cur)
+    return bucket_of, np.asarray(fallback, dtype=np.int64)

@@ -38,7 +38,8 @@ import numpy as np
 
 from repro.core import ludo, slots
 from repro.core.cn_cache import CNKeyCache
-from repro.core.hashing import fingerprint6, slot_hash, split_u64
+from repro.core.hashing import (fingerprint6, fingerprint6_int, slot_hash,
+                                slot_hash_int, split_u64)
 from repro.core.meter import MSG_BYTES, CommMeter
 from repro.core.overflow import OverflowCache
 
@@ -185,15 +186,15 @@ class OutbackShard:
         # CN: locator math (5 hashes), then ONE round trip carrying 8 bytes.
         b, s = self.cn.locate(np.uint32([lo]), np.uint32([hi]))
         b, s = int(b[0]), int(s[0])
+        # The CN always inspects the returned block (one compare) — counted
+        # up front so the scalar walk and ``get_batch`` meter identically.
         self.meter.add(rts=1, req=GET_REQ_BYTES, resp=KV_BLOCK_BYTES,
-                       cn_hash=5, mn_reads=2)
+                       cn_hash=5, cn_cmp=1, mn_reads=2)
         # MN: pure dereference — slot, then heap block. No compute.
         f = slots.unpack(self.slots_lo[b, s], self.slots_hi[b, s])
         if int(f["len"]) != 0:
             addr = int(f["addr_lo"])
             k_lo, k_hi = int(self.heap_klo[addr]), int(self.heap_khi[addr])
-            # CN: full-key check on the returned block.
-            self.meter.add(0, cn_cmp=1, attach=True)
             if (k_lo, k_hi) == (lo, hi):
                 val = (int(self.heap_vhi[addr]) << 32) | int(self.heap_vlo[addr])
                 return GetResult(val, 1, False)
@@ -241,13 +242,22 @@ class OutbackShard:
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         # CN sends ind_bucket + full KV (not ind_slot: MN owns latest seeds).
         b_arr, _ = self.cn.locate(np.uint32([lo]), np.uint32([hi]))
-        b = int(b_arr[0])
+        return self._insert_located(lo, hi, value, int(b_arr[0]))
+
+    def _insert_located(self, lo: int, hi: int, value: int, b: int,
+                        s: int | None = None, fp: int | None = None) -> str:
+        """The MN half of Insert, after the CN locate.  ``insert_batch``
+        precomputes ``s``/``fp`` vectorised; the scalar path derives them
+        here — either way the protocol walk and accounting are this one
+        code path."""
         self.meter.add(rts=1, req=8 + KV_BLOCK_BYTES, resp=8,
                        cn_hash=4, mn_hash=1, mn_writes=1)
         # MN: seeded slot with the *latest* seed.
-        s = int(slot_hash(np.uint32(lo), np.uint32(hi), self.seeds_mn[b]))
+        if s is None:
+            s = slot_hash_int(lo, hi, int(self.seeds_mn[b]))
         f = slots.unpack(self.slots_lo[b, s], self.slots_hi[b, s])
-        fp = int(fingerprint6(np.uint32(lo), np.uint32(hi)))
+        if fp is None:
+            fp = fingerprint6_int(lo, hi)
 
         if int(f["len"]) != 0:
             # Occupied: fingerprint short-circuit, then full-key compare.
@@ -396,6 +406,127 @@ class OutbackShard:
         self.meter.add(0, mn_hash=1, mn_cmp=probes, mn_writes=1 if ok else 0, attach=True)
         if ok:
             self.n_keys -= 1
+        return ok
+
+    # --------------------------------------------------- batched write path
+    # The batched mutations are *exact* vectorisations of the scalar §4.3
+    # walks: the CN locate and the MN fast-path classification run as array
+    # ops over the whole batch, lanes the fast path fully resolves are
+    # applied with scatters, and every remaining lane falls through to the
+    # scalar protocol walk (which meters itself).  Results, MN state, meter
+    # totals and CN-cache state are identical to the scalar loop — tested
+    # property-style in tests/test_write_batch_parity.py.  The transport
+    # sink sees one doorbell-batched event per fast wave instead of one
+    # event per op (same totals; that is the point of doorbell batching).
+
+    def _locate_batch(self, keys: np.ndarray):
+        keys = np.asarray(keys, dtype=np.uint64)
+        lo, hi = split_u64(keys)
+        b, s = self.cn.locate(lo, hi)
+        return keys, lo, hi, b.astype(np.int64), s.astype(np.int64)
+
+    def insert_batch(self, keys: np.ndarray, values: np.ndarray) -> list[str]:
+        """Batched Insert: one status string per lane (§4.3.2 cases).
+
+        The CN locate, MN slot hash and fingerprints are vectorised over
+        the batch; the MN state machine itself (free slot / re-seed /
+        overflow) runs per lane against live state, so intra-batch
+        interactions — two lanes landing in one bucket, a re-seed moving a
+        later lane's slot — resolve exactly as the scalar stream would.
+        """
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = np.asarray(values, dtype=np.uint64)
+        n = int(keys.shape[0])
+        if n == 0:
+            return []
+        if self.frozen:
+            return ["frozen"] * n
+        lo, hi = split_u64(keys)
+        b_vec, _ = self.cn.locate(lo, hi)
+        b_vec = b_vec.astype(np.int64)
+        s_vec = slot_hash(lo, hi, self.seeds_mn[b_vec])
+        fp_vec = fingerprint6(lo, hi)
+        reseeded: set[int] = set()
+        statuses: list[str] = []
+        for i in range(n):
+            b = int(b_vec[i])
+            # a re-seed earlier in the batch rotated this bucket's seed:
+            # the precomputed slot is stale, recompute against seeds_mn
+            s = None if b in reseeded else int(s_vec[i])
+            case = self._insert_located(int(lo[i]), int(hi[i]),
+                                        int(values[i]), b, s=s,
+                                        fp=int(fp_vec[i]))
+            if case == "reseed":
+                reseeded.add(b)
+            statuses.append(case)
+            if self.cn_cache is not None:
+                self.cn_cache.note_insert(int(keys[i]), int(values[i]))
+        return statuses
+
+    def update_batch(self, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+        """Batched Update (§4.3.3): returns the per-lane success mask.
+
+        Fast lanes (full-key match at the located slot) are one gather +
+        one scatter for the whole wave; mismatched lanes (overflow
+        residents, stale CN seeds) take the scalar walk unchanged.
+        """
+        keys, lo, hi, b, s = self._locate_batch(keys)
+        values = np.asarray(values, dtype=np.uint64)
+        vlo, vhi = split_u64(values)
+        s_hi = self.slots_hi[b, s]
+        length = slots.unpack_len(s_hi)
+        addr = slots.unpack_addr32(self.slots_lo[b, s], s_hi).astype(np.int64)
+        fast = ((length != 0) & (self.heap_klo[addr] == lo)
+                & (self.heap_khi[addr] == hi))
+        ok = fast.copy()
+        n_fast = int(fast.sum())
+        if n_fast:
+            a = addr[fast]  # duplicate keys: last lane wins, as in order
+            self.heap_vlo[a] = vlo[fast]
+            self.heap_vhi[a] = vhi[fast]
+            self.meter.add(n_fast, rts=1, req=8 + KV_BLOCK_BYTES, resp=8,
+                           cn_hash=5, mn_reads=2, mn_cmp=1, mn_writes=1)
+        for i in np.nonzero(~fast)[0]:
+            ok[i] = self._update_mn(int(keys[i]), int(values[i]))
+        if self.cn_cache is not None:
+            for i in np.nonzero(ok)[0]:
+                self.cn_cache.note_update(int(keys[i]), int(values[i]))
+        return ok
+
+    def delete_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Batched Delete (§4.3.3): returns the per-lane success mask.
+
+        Fast lanes (first occurrence of a slot-resident key) clear their
+        slots in one scatter, preserving the cache-hint bit; duplicates
+        and non-residents take the scalar walk so repeat-deletes miss and
+        overflow residents are removed exactly as the scalar stream does.
+        """
+        if self.frozen:
+            return np.zeros(int(np.asarray(keys).shape[0]), dtype=bool)
+        keys, lo, hi, b, s = self._locate_batch(keys)
+        n = int(keys.shape[0])
+        s_hi = self.slots_hi[b, s]
+        length = slots.unpack_len(s_hi)
+        addr = slots.unpack_addr32(self.slots_lo[b, s], s_hi).astype(np.int64)
+        first = np.zeros(n, dtype=bool)
+        first[np.unique(keys, return_index=True)[1]] = True
+        fast = (first & (length != 0) & (self.heap_klo[addr] == lo)
+                & (self.heap_khi[addr] == hi))
+        ok = fast.copy()
+        n_fast = int(fast.sum())
+        if n_fast:
+            bf, sf = b[fast], s[fast]
+            cache_bits = self.slots_hi[bf, sf] & np.uint32(1 << slots.CACHE_SHIFT)
+            self.slots_lo[bf, sf] = 0
+            self.slots_hi[bf, sf] = cache_bits  # keep cache hint
+            self.meter.add(n_fast, rts=1, req=8 + 8, resp=8, cn_hash=5,
+                           mn_reads=2, mn_cmp=1, mn_writes=1)
+            self.n_keys -= n_fast
+        for i in np.nonzero(~fast)[0]:
+            ok[i] = self._delete_mn(int(keys[i]))
+        if self.cn_cache is not None:
+            for i in np.nonzero(ok)[0]:
+                self.cn_cache.note_delete(int(keys[i]))
         return ok
 
     # ------------------------------------------------- batched (device) path

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.hashing import hash_range
+from repro.core.hashing import hash_range_int
 
 
 class OverflowCache:
@@ -34,7 +34,7 @@ class OverflowCache:
     # -- host protocol ops (memory-node side) --------------------------------
     def _probe(self, lo: int, hi: int):
         """Yield probe positions; returns (pos_of_key | None, first_free | None)."""
-        h = int(hash_range(np.uint32(lo), np.uint32(hi), self._seed, self.cap))
+        h = hash_range_int(int(lo), int(hi), self._seed, self.cap)
         free = None
         for i in range(self._PROBE_LIMIT):
             p = (h + i) % self.cap
@@ -73,7 +73,7 @@ class OverflowCache:
         nxt = (pos + 1) % self.cap
         while self.used[nxt]:
             lo2, hi2 = int(self.k_lo[nxt]), int(self.k_hi[nxt])
-            home = int(hash_range(np.uint32(lo2), np.uint32(hi2), self._seed, self.cap))
+            home = hash_range_int(lo2, hi2, self._seed, self.cap)
             if _between(home, pos, nxt, self.cap):
                 self.k_lo[pos], self.k_hi[pos] = self.k_lo[nxt], self.k_hi[nxt]
                 self.addr[pos] = self.addr[nxt]

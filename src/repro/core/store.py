@@ -138,6 +138,111 @@ class OutbackStore:
             self._split(self.directory[self._entry(key)])
         return case
 
+    # ------------------------------------------------- batched write path
+    # Mirrors the scalar ops lane-for-lane: vectorised directory routing,
+    # per-table sub-batches served by the shard's batched protocol, frozen
+    # tables buffering (with the same FALSE'd accounting), and the §4.4
+    # split trigger evaluated between chunks (the scalar stream checks
+    # after every insert; the chunk is the granularity a doorbell-batched
+    # CN naturally observes).  The chunk never exceeds a third of the
+    # table's overflow capacity, so a batch cannot sail from below the
+    # ``s_slow`` trigger past the ``s_stop`` hard limit between two
+    # checks.  After a split the remaining lanes re-route through the new
+    # directory.
+
+    SPLIT_CHECK_CHUNK = 256
+
+    def _insert_chunk_len(self, table: OutbackShard) -> int:
+        return max(1, min(self.SPLIT_CHECK_CHUNK,
+                          int(0.35 * table.overflow.cap)))
+
+    def _route_tables(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorised directory routing: key -> owning table index."""
+        e = (self._dir_hash(keys)
+             & np.uint64((1 << self.global_depth) - 1)).astype(np.int64)
+        return np.asarray(self.directory, dtype=np.int64)[e]
+
+    def insert_batch(self, keys: np.ndarray, values: np.ndarray) -> list[str]:
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = np.asarray(values, dtype=np.uint64)
+        n = int(keys.shape[0])
+        self._op_count += n
+        statuses: list[str | None] = [None] * n
+        done = np.zeros(n, dtype=bool)
+        while not bool(done.all()):
+            remaining = np.nonzero(~done)[0]
+            tbl = self._route_tables(keys[remaining])
+            resized = False
+            for t in np.unique(tbl):
+                lanes = remaining[tbl == t]
+                table = self.tables[int(t)]
+                if table.frozen:
+                    # Paper: FALSE status; MN buffers and replays post-resize.
+                    for i in lanes:
+                        self._buffer.append(("insert", int(keys[i]),
+                                             int(values[i])))
+                        statuses[i] = "frozen"
+                    self.meter.add(int(lanes.size), rts=1, req=MSG_BYTES,
+                                   resp=8)
+                    done[lanes] = True
+                    continue
+                if table.needs_resize() and self._open_split is None:
+                    self._split(int(t))
+                    resized = True
+                    break
+                step = self._insert_chunk_len(table)
+                for c0 in range(0, int(lanes.size), step):
+                    chunk = lanes[c0:c0 + step]
+                    cases = table.insert_batch(keys[chunk], values[chunk])
+                    for i, case in zip(chunk, cases):
+                        statuses[i] = case
+                    done[chunk] = True
+                    if self.cn_cache is not None:
+                        for i in chunk:
+                            self.cn_cache.note_insert(int(keys[i]),
+                                                      int(values[i]))
+                    if table.needs_resize() and self._open_split is None:
+                        self._split(int(t))
+                        resized = True
+                        break
+                if resized:
+                    break  # directory changed: re-route the rest
+        return statuses
+
+    def update_batch(self, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = np.asarray(values, dtype=np.uint64)
+        n = int(keys.shape[0])
+        self._op_count += n
+        ok = np.zeros(n, dtype=bool)
+        tbl = self._route_tables(keys)
+        for t in np.unique(tbl):
+            m = tbl == t
+            ok[m] = self.tables[int(t)].update_batch(keys[m], values[m])
+        if self.cn_cache is not None:
+            for i in np.nonzero(ok)[0]:
+                self.cn_cache.note_update(int(keys[i]), int(values[i]))
+        return ok
+
+    def delete_batch(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.uint64)
+        n = int(keys.shape[0])
+        self._op_count += n
+        ok = np.zeros(n, dtype=bool)
+        tbl = self._route_tables(keys)
+        for t in np.unique(tbl):
+            m = tbl == t
+            table = self.tables[int(t)]
+            if table.frozen:
+                for i in np.nonzero(m)[0]:
+                    self._buffer.append(("delete", int(keys[i]), 0))
+                continue
+            ok[m] = table.delete_batch(keys[m])
+        if self.cn_cache is not None:
+            for i in np.nonzero(ok)[0]:
+                self.cn_cache.note_delete(int(keys[i]))
+        return ok
+
     def get_batch(self, keys: np.ndarray, xp=np, *,
                   resolve_makeup: bool | None = None):
         """Vectorised Get across the directory (single-table fast path).

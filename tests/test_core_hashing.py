@@ -5,8 +5,11 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bitarray, slots
-from repro.core.hashing import (fingerprint6, fmix32, hash64_32, hash_range,
-                                join_u64, slot_hash, split_u64, splitmix64)
+from repro.core.hashing import (fingerprint6, fingerprint6_int, fmix32,
+                                fmix32_int, hash64_32, hash64_32_int,
+                                hash_range, hash_range_int, join_u64,
+                                popcount32, slot_hash, slot_hash_int,
+                                split_u64, splitmix64)
 
 u32s = st.integers(min_value=0, max_value=2**32 - 1)
 u64s = st.integers(min_value=0, max_value=2**64 - 1)
@@ -81,6 +84,31 @@ def test_bitarray_set_get(bits_on, m):
     # jnp path agrees
     got_j = bitarray.get_bit(jnp.asarray(words), jnp.asarray(idx), jnp)
     np.testing.assert_array_equal(np.asarray(got_j), expect)
+
+
+@settings(deadline=None, max_examples=60)
+@given(u32s, u32s, u32s, st.integers(1, 100_000))
+def test_int_twins_bit_identical(lo, hi, seed, size):
+    """The pure-int scalar hashes (the fast path of the scalar protocol
+    walks) must equal the array versions bit-for-bit."""
+    l32, h32, s32 = np.uint32(lo), np.uint32(hi), np.uint32(seed)
+    assert fmix32_int(lo) == int(fmix32(l32))
+    assert hash64_32_int(lo, hi, seed) == int(hash64_32(l32, h32, s32))
+    assert hash_range_int(lo, hi, seed, size) == int(
+        hash_range(l32, h32, s32, size))
+    assert slot_hash_int(lo, hi, seed & 0xFF) == int(
+        slot_hash(l32, h32, np.uint32(seed & 0xFF)))
+    assert fingerprint6_int(lo, hi) == int(fingerprint6(l32, h32))
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.lists(u32s, min_size=1, max_size=64))
+def test_popcount32_np_jnp_agree(vals):
+    a = np.asarray(vals, dtype=np.uint32)
+    expect = np.asarray([bin(v).count("1") for v in vals], np.uint32)
+    np.testing.assert_array_equal(popcount32(a), expect)
+    np.testing.assert_array_equal(np.asarray(popcount32(jnp.asarray(a), jnp)),
+                                  expect)
 
 
 @settings(deadline=None, max_examples=50)

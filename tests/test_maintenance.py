@@ -1,0 +1,192 @@
+"""repro.core.maintenance: vectorized DMPH maintenance vs scalar oracles.
+
+The contract under test is *element-wise equivalence*: the one-shot seed
+search must return exactly what the legacy per-bucket 256-seed Python loop
+returned (lowest-valid-seed semantics, including the no-seed-found path),
+and the batched frontier eviction must satisfy every placement invariant
+the per-key random walk satisfied.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ludo, maintenance
+from repro.core.hashing import popcount32, split_u64, splitmix64
+from repro.core.store import make_uniform_keys
+
+
+def _keys(n, seed=1):
+    return make_uniform_keys(n, seed)
+
+
+def _gathered(n, seed, lf=0.9):
+    """A real placement's gathered buckets: the seed-search input."""
+    keys = _keys(n, seed)
+    lo, hi = split_u64(keys)
+    nb = max(1, int(np.ceil(n / (4.0 * lf))))
+    b0, b1 = ludo.candidate_buckets(lo, hi, nb)
+    bucket_of, _ = maintenance.cuckoo_place(
+        b0.astype(np.int64), b1.astype(np.int64), nb, seed)
+    g_lo, g_hi, valid, _, _ = maintenance.gather_buckets(lo, hi, bucket_of, nb)
+    return g_lo, g_hi, valid
+
+
+# ------------------------------------------------------------- seed search
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=4, max_value=3000), st.integers(0, 6))
+def test_one_shot_seeds_match_reference(n, seed):
+    g_lo, g_hi, valid = _gathered(n, seed)
+    s_vec, ok_vec = maintenance.one_shot_seeds(g_lo, g_hi, valid)
+    s_ref, ok_ref = maintenance.seed_search_reference(g_lo, g_hi, valid)
+    np.testing.assert_array_equal(ok_vec, ok_ref)
+    np.testing.assert_array_equal(s_vec, s_ref)  # lowest valid seed
+
+
+def test_one_shot_seeds_tiling_is_pure_schedule():
+    """Any tile size gives the same (lowest) seeds as one 256-wide shot."""
+    g_lo, g_hi, valid = _gathered(1200, 3)
+    base, ok = maintenance.one_shot_seeds(g_lo, g_hi, valid, tile=256)
+    assert ok.all()
+    for tile in (1, 7, 32, 100):
+        s, o = maintenance.one_shot_seeds(g_lo, g_hi, valid, tile=tile)
+        np.testing.assert_array_equal(s, base)
+        assert o.all()
+
+
+def test_no_seed_found_path_matches_reference():
+    """Duplicate keys in a bucket can never reach 4 distinct slots: both
+    searches must report the bucket unresolved (not mis-hash it)."""
+    keys = _keys(8, 2)
+    lo, hi = split_u64(keys)
+    g_lo = np.zeros((2, 4), np.uint32)
+    g_hi = np.zeros((2, 4), np.uint32)
+    g_lo[0], g_hi[0] = lo[0], hi[0]  # bucket 0: the same key 4 times
+    g_lo[1, :4], g_hi[1, :4] = lo[4:8], hi[4:8]  # bucket 1: fine
+    valid = np.ones((2, 4), bool)
+    s_vec, ok_vec = maintenance.one_shot_seeds(g_lo, g_hi, valid)
+    s_ref, ok_ref = maintenance.seed_search_reference(g_lo, g_hi, valid)
+    np.testing.assert_array_equal(ok_vec, [False, True])
+    np.testing.assert_array_equal(ok_vec, ok_ref)
+    assert s_vec[1] == s_ref[1]
+
+
+def test_build_raises_on_unseedable_bucket():
+    """The LudoBuildError contract survives the vectorized search."""
+    keys = _keys(12, 5)
+    lo, hi = split_u64(keys)
+    lo[1], hi[1] = lo[0], hi[0]  # duplicate key pair
+    bucket_of = np.zeros(12, np.int64)  # force everyone into bucket 0...
+    bucket_of[4:] = -1  # ...but only 4 keys placed (incl. the duplicate)
+    with pytest.raises(ludo.LudoBuildError):
+        ludo._find_seeds(lo, hi, bucket_of, 1)
+    with pytest.raises(ludo.LudoBuildError):
+        ludo._find_seeds(lo, hi, bucket_of, 1, reference=True)
+
+
+def test_find_bucket_seed_matches_batch_and_legacy_semantics():
+    keys = _keys(64, 9)
+    lo, hi = split_u64(keys)
+    # single-bucket view == batch view == brute-force reference
+    k_lo = np.zeros((16, 4), np.uint32)
+    k_hi = np.zeros((16, 4), np.uint32)
+    counts = np.zeros(16, np.int64)
+    for b in range(16):
+        k = 1 + (b % 4)
+        k_lo[b, :k] = lo[4 * b:4 * b + k]
+        k_hi[b, :k] = hi[4 * b:4 * b + k]
+        counts[b] = k
+    batch = maintenance.find_bucket_seeds_batch(k_lo, k_hi, counts)
+    for b in range(16):
+        k = int(counts[b])
+        single = ludo.find_bucket_seed(k_lo[b, :k], k_hi[b, :k])
+        assert single == int(batch[b])
+        # legacy loop semantics: lowest seed with k distinct slots
+        from repro.core.hashing import slot_hash
+        for s in range(single):
+            assert np.unique(slot_hash(k_lo[b, :k], k_hi[b, :k],
+                                       np.uint32(s))).size < k
+    # duplicates -> no seed
+    dup_lo = np.asarray([lo[0]] * 2, np.uint32)
+    dup_hi = np.asarray([hi[0]] * 2, np.uint32)
+    assert ludo.find_bucket_seed(dup_lo, dup_hi) is None
+    assert ludo.find_bucket_seed(np.zeros(0, np.uint32),
+                                 np.zeros(0, np.uint32)) == 0
+
+
+# -------------------------------------------------------------- popcount
+def test_popcount32_matches_naive():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 1 << 32, 4096, dtype=np.uint64).astype(np.uint32)
+    naive = np.asarray([bin(int(v)).count("1") for v in x], np.uint32)
+    np.testing.assert_array_equal(popcount32(x), naive)
+    assert int(popcount32(np.uint32(0))) == 0
+    assert int(popcount32(np.uint32(0xFFFFFFFF))) == 32
+
+
+# -------------------------------------------------------- cuckoo placement
+@settings(deadline=None, max_examples=8)
+@given(st.integers(min_value=16, max_value=4000),
+       st.sampled_from([0.7, 0.9, 0.95]), st.integers(0, 4))
+def test_frontier_eviction_invariants(n, lf, seed):
+    keys = _keys(n, seed + 1)
+    lo, hi = split_u64(keys)
+    nb = max(1, int(np.ceil(n / (4.0 * lf))))
+    b0, b1 = ludo.candidate_buckets(lo, hi, nb)
+    b0l, b1l = b0.astype(np.int64), b1.astype(np.int64)
+    bucket_of, fallback = maintenance.cuckoo_place(b0l, b1l, nb, seed)
+    placed = bucket_of >= 0
+    # every placed key sits in one of its two candidate buckets
+    assert ((bucket_of[placed] == b0l[placed])
+            | (bucket_of[placed] == b1l[placed])).all()
+    # occupancy <= 4 everywhere
+    assert np.bincount(bucket_of[placed], minlength=nb).max(initial=0) <= 4
+    # fallback is exactly the unplaced set
+    np.testing.assert_array_equal(np.sort(np.nonzero(~placed)[0]), fallback)
+    # deterministic for a fixed seed
+    again, fb2 = maintenance.cuckoo_place(b0l, b1l, nb, seed)
+    np.testing.assert_array_equal(bucket_of, again)
+    np.testing.assert_array_equal(fallback, fb2)
+
+
+def test_frontier_eviction_actually_evicts():
+    """At a load where the greedy passes cannot finish, the frontier walk
+    must still place (nearly) everything — same bar the reference meets."""
+    n = 6000
+    keys = _keys(n, 7)
+    lo, hi = split_u64(keys)
+    nb = int(np.ceil(n / (4.0 * 0.95)))
+    b0, b1 = ludo.candidate_buckets(lo, hi, nb)
+    b0l, b1l = b0.astype(np.int64), b1.astype(np.int64)
+    # greedy alone leaves a tail at lf 0.95 (precondition for the test)
+    occ = np.full((nb, 4), -1, np.int64)
+    fill = np.zeros(nb, np.int64)
+    bo = np.full(n, -1, np.int64)
+    rest, _ = maintenance._greedy_pass(np.arange(n, dtype=np.int64), b0l,
+                                       occ, fill, bo)
+    rest, _ = maintenance._greedy_pass(rest, b1l[rest], occ, fill, bo)
+    assert rest.size > 0
+    vec_bo, vec_fb = maintenance.cuckoo_place(b0l, b1l, nb, 7)
+    ref_bo, ref_fb = maintenance.cuckoo_place_reference(b0l, b1l, nb, 7)
+    assert vec_fb.size <= max(8, ref_fb.size + 8)  # no systematic give-up
+    assert (vec_bo >= 0).sum() >= (ref_bo >= 0).sum() - 8
+
+
+def test_gather_buckets_rejects_overfull():
+    keys = _keys(8, 1)
+    lo, hi = split_u64(keys)
+    with pytest.raises(ValueError):
+        maintenance.gather_buckets(lo, hi, np.zeros(8, np.int64), 2)
+
+
+def test_build_reference_flag_same_invariants():
+    keys = _keys(3000, 13)
+    lo, hi = split_u64(keys)
+    for reference in (False, True):
+        b = ludo.build(lo, hi, load_factor=0.92, reference=reference)
+        assert b.ok
+        pos = b.bucket.astype(np.int64) * 4 + b.slot
+        assert np.unique(pos).size == keys.size
+        bb, ss = b.cn.locate(lo, hi)
+        np.testing.assert_array_equal(bb, b.bucket)
+        np.testing.assert_array_equal(ss, b.slot)

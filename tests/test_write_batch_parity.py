@@ -1,0 +1,291 @@
+"""Scalar-vs-batched write parity: the batched ops ARE the protocol.
+
+``insert_batch``/``update_batch``/``delete_batch`` must be *exact*
+vectorisations of the scalar §4.3 walks: applying a shuffled op mix
+scalarly and via the batch ops must leave identical MN state
+(``mn_arrays``), identical CommMeter totals (byte-for-byte), and an
+identical CN-cache — plus identical results lane-for-lane.  The same
+contract flows up through ``OutbackStore`` (directory routing, frozen
+buffering) and the ``repro.api`` stack, including CN-cache coherence
+through a live §4.4 split.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import StoreSpec, open_store
+from repro.core.cn_cache import CNKeyCache
+from repro.core.hashing import splitmix64
+from repro.core.outback import OutbackShard
+from repro.core.store import OutbackStore, make_uniform_keys
+
+N = 12_000
+
+
+def _mix(n_ops, seed, n_keys=N, n_new=3000):
+    """A shuffled insert/update/delete mix (existing, fresh + repeat keys)."""
+    rng = np.random.default_rng(seed)
+    keys = make_uniform_keys(n_keys, 5)
+    new = splitmix64(np.arange(1, n_new + 1, dtype=np.uint64)
+                     + np.uint64(77 << 40))
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.35:
+            ops.append(("u", int(keys[rng.integers(n_keys)]),
+                        int(rng.integers(1 << 30))))
+        elif r < 0.65:
+            ops.append(("i", int(new[rng.integers(n_new)]),
+                        int(rng.integers(1 << 30))))
+        elif r < 0.85:
+            ops.append(("d", int(keys[rng.integers(n_keys)]), 0))
+        else:  # deletes of maybe-absent keys (repeat-delete path)
+            ops.append(("d", int(new[rng.integers(n_new)]), 0))
+    return keys, ops
+
+
+def _apply_scalar(sh, ops):
+    for op, k, v in ops:
+        if op == "u":
+            sh.update(k, v)
+        elif op == "i":
+            sh.insert(k, v)
+        else:
+            sh.delete(k)
+
+
+def _apply_batched(sh, ops):
+    """Same stream, grouped into runs of consecutive same-type ops — the
+    order-preserving batching a doorbell window performs."""
+    i = 0
+    while i < len(ops):
+        j = i
+        while j < len(ops) and ops[j][0] == ops[i][0]:
+            j += 1
+        ks = np.asarray([o[1] for o in ops[i:j]], np.uint64)
+        vs = np.asarray([o[2] for o in ops[i:j]], np.uint64)
+        if ops[i][0] == "u":
+            sh.update_batch(ks, vs)
+        elif ops[i][0] == "i":
+            sh.insert_batch(ks, vs)
+        else:
+            sh.delete_batch(ks)
+        i = j
+
+
+def _shard_state(sh):
+    return ([a.copy() for a in sh.mn_arrays()]
+            + [sh.cn.seeds.copy(), sh.seeds_mn.copy(),
+               np.int64(sh.n_keys), np.int64(sh.heap_top),
+               np.sort(np.asarray(sh.overflow.items()[0]))])
+
+
+def _assert_same_state(a, b):
+    for x, y in zip(_shard_state(a), _shard_state(b)):
+        np.testing.assert_array_equal(x, y)
+    assert a.meter.snapshot() == b.meter.snapshot()
+
+
+# --------------------------------------------------------------- shard level
+@settings(deadline=None, max_examples=4)
+@given(st.integers(0, 1000))
+def test_shard_mix_parity(seed):
+    keys, ops = _mix(1200, seed)
+    vals = splitmix64(keys)
+    a = OutbackShard(keys, vals, load_factor=0.88)
+    b = OutbackShard(keys, vals, load_factor=0.88)
+    _apply_scalar(a, ops)
+    _apply_batched(b, ops)
+    _assert_same_state(a, b)
+
+
+def test_shard_mix_parity_with_cn_cache():
+    keys, ops = _mix(1500, 42)
+    vals = splitmix64(keys)
+    a = OutbackShard(keys, vals, load_factor=0.88, cn_cache=CNKeyCache(1 << 16))
+    b = OutbackShard(keys, vals, load_factor=0.88, cn_cache=CNKeyCache(1 << 16))
+    # warm both caches identically so coherence notes have entries to touch
+    a.get_batch(keys[:512])
+    b.get_batch(keys[:512])
+    _apply_scalar(a, ops)
+    _apply_batched(b, ops)
+    _assert_same_state(a, b)
+    for x, y in zip(a.cn_cache.arrays(), b.cn_cache.arrays()):
+        np.testing.assert_array_equal(x, y)
+    for x, y in zip(a.cn_cache.neg_arrays(), b.cn_cache.neg_arrays()):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_shard_scalar_vs_batched_get_meters_identical():
+    """Get accounting parity: n scalar Gets == one n-lane batched Get,
+    present keys, absent keys and makeup lanes included."""
+    keys = make_uniform_keys(4000, 3)
+    vals = splitmix64(keys)
+    absent = splitmix64(np.arange(1, 65, dtype=np.uint64) + np.uint64(9 << 41))
+    q = np.concatenate([keys[:192], absent])
+    a = OutbackShard(keys, vals, load_factor=0.9)
+    b = OutbackShard(keys, vals, load_factor=0.9)
+    for k in q:
+        a.get(int(k))
+    b.get_batch(q, resolve_makeup=True)
+    assert a.meter.snapshot() == b.meter.snapshot()
+
+
+def test_update_batch_duplicate_lanes_apply_in_order():
+    keys = make_uniform_keys(256, 8)
+    sh = OutbackShard(keys, splitmix64(keys), load_factor=0.8)
+    k = keys[5]
+    ok = sh.update_batch(np.asarray([k, k, k], np.uint64),
+                         np.asarray([1, 2, 3], np.uint64))
+    assert ok.all()
+    assert sh.get(int(k)).value == 3  # last lane wins, like the scalar loop
+
+
+def test_delete_batch_duplicate_lanes_second_misses():
+    keys = make_uniform_keys(256, 8)
+    sh = OutbackShard(keys, splitmix64(keys), load_factor=0.8)
+    k = keys[7]
+    ok = sh.delete_batch(np.asarray([k, k], np.uint64))
+    assert ok.tolist() == [True, False]
+    assert sh.get(int(k)).value is None
+
+
+# --------------------------------------------------------------- store level
+def test_store_mix_parity_below_resize():
+    keys, ops = _mix(900, 17, n_keys=8000, n_new=500)
+    keys = keys[:8000]
+    vals = splitmix64(keys)
+    a = OutbackStore(keys, vals, load_factor=0.85, initial_depth=1)
+    b = OutbackStore(keys, vals, load_factor=0.85, initial_depth=1)
+    _apply_scalar(a, ops)
+    _apply_batched(b, ops)
+    assert len(a.resize_events) == len(b.resize_events) == 0
+    assert a.meter_total().snapshot() == b.meter_total().snapshot()
+    for ta, tb in zip(a.tables, b.tables):
+        _assert_same_state(ta, tb)
+
+
+def test_store_insert_batch_triggers_split_and_stays_correct():
+    keys = make_uniform_keys(10_000, 21)
+    vals = splitmix64(keys)
+    store = OutbackStore(keys, vals, load_factor=0.85)
+    new = splitmix64(np.arange(1, 6001, dtype=np.uint64) + np.uint64(3 << 42))
+    statuses = store.insert_batch(new, new >> np.uint64(3))
+    assert len(store.resize_events) >= 1 and store.global_depth >= 1
+    assert "frozen" not in statuses  # splits complete inside the batch
+    v_lo, v_hi, match = store.get_batch(new, resolve_makeup=True)
+    got = (np.asarray(v_hi, np.uint64) << np.uint64(32)) | np.asarray(v_lo, np.uint64)
+    assert match.all()
+    np.testing.assert_array_equal(got, new >> np.uint64(3))
+    # the preload survived the split too
+    _, _, m2 = store.get_batch(keys[::17], resolve_makeup=True)
+    assert m2.all()
+
+
+def test_store_frozen_window_buffers_batched_mutations():
+    keys = make_uniform_keys(6000, 31)
+    vals = splitmix64(keys)
+    store = OutbackStore(keys, vals, load_factor=0.85)
+    h = store.begin_split(0)
+    new = splitmix64(np.arange(1, 33, dtype=np.uint64) + np.uint64(5 << 42))
+    st_frozen = store.insert_batch(new, new)
+    assert st_frozen == ["frozen"] * len(new)
+    assert not store.delete_batch(keys[:8]).any()  # FALSE'd + buffered
+    h.build()
+    h.finish()
+    _, _, match = store.get_batch(new, resolve_makeup=True)
+    assert match.all()  # buffered inserts replayed after the swap
+    # buffered deletes replayed too
+    assert not store.get_batch(keys[:8], resolve_makeup=True)[2].any()
+
+
+# ----------------------------------------------------------------- api level
+def test_api_batched_mutations_match_scalar_loop():
+    keys = make_uniform_keys(6000, 2)
+    vals = splitmix64(keys)
+    cand = splitmix64(np.arange(1, 257, dtype=np.uint64) + np.uint64(11 << 40))
+    for kind in ("outback", "outback-dir", "race", "mica", "cluster", "dummy"):
+        # keep only inserts the kind accepts (MICA/RACE/cluster bound
+        # rejections raise identically on both paths; rejected inserts
+        # leave the index unchanged, so the filtered replay is faithful)
+        probe = open_store(StoreSpec(kind), keys, vals)
+        new = []
+        for k in cand:
+            try:
+                probe.insert(int(k), 1)
+                new.append(int(k))
+            except RuntimeError:
+                pass
+        new = np.asarray(new, np.uint64)
+        assert new.size > 200, kind
+        a = open_store(StoreSpec(kind), keys, vals)
+        b = open_store(StoreSpec(kind), keys, vals)
+        # scalar loop on a
+        cases_a, ok_ua, ok_da = [], [], []
+        for k in new:
+            cases_a.append(a.insert(int(k), int(k) >> 3).status)
+        for k in keys[:256]:
+            ok_ua.append(bool(a.update(int(k), 9).found[0]))
+        for k in keys[:64]:
+            ok_da.append(bool(a.delete(int(k)).found[0]))
+        # batched on b
+        res_i = b.insert_batch(new, new >> np.uint64(3))
+        res_u = b.update_batch(keys[:256], np.full(256, 9, np.uint64))
+        res_d = b.delete_batch(keys[:64])
+        assert list(res_i.statuses) == cases_a, kind
+        assert res_u.found.tolist() == ok_ua, kind
+        assert res_d.found.tolist() == ok_da, kind
+        assert (a.meter_totals().snapshot()
+                == b.meter_totals().snapshot()), kind
+        # per-call attribution is stamped by the meter layer
+        assert res_u.round_trips > 0 and res_u.req_bytes > 0
+
+
+def test_api_stack_cache_coherent_through_batched_split():
+    """Acceptance: batched writes through the full stack keep the CN cache
+    coherent across a live §4.4 split."""
+    keys = make_uniform_keys(9000, 4)
+    vals = splitmix64(keys)
+    spec = StoreSpec("outback-dir", load_factor=0.85,
+                     cache_budget_bytes=64 << 10)
+    store = open_store(spec, keys, vals)
+    store.get_batch(keys[:2000])  # warm the cache
+    store.get_batch(keys[:2000])
+    new = splitmix64(np.arange(1, 5001, dtype=np.uint64) + np.uint64(13 << 42))
+    store.insert_batch(new, new >> np.uint64(2))
+    assert len(store.engine.resize_events) >= 1  # a split really happened
+    # updates through the batch path refresh/invalidate cached entries
+    store.update_batch(keys[:64], np.full(64, 123, np.uint64))
+    res = store.get_batch(np.concatenate([keys[:64], new[:64]]))
+    assert res.found.all()
+    np.testing.assert_array_equal(np.asarray(res.values[:64]),
+                                  np.full(64, 123, np.uint64))
+    np.testing.assert_array_equal(np.asarray(res.values[64:]),
+                                  (new[:64] >> np.uint64(2)))
+    # deletes stay coherent too (no stale positive hit from the cache)
+    store.delete_batch(keys[:8])
+    assert not store.get_batch(keys[:8]).found.any()
+
+
+def test_api_sharded_batched_mutations():
+    keys = make_uniform_keys(4096, 6)
+    vals = splitmix64(keys)
+    st_ = open_store(StoreSpec("sharded", params={"num_shards": 2}),
+                     keys, vals)
+    new = []
+    for k in splitmix64(np.arange(1, 200, dtype=np.uint64) + np.uint64(1 << 43)):
+        try:  # displacement/fp bounds may reject a few; match scalar policy
+            if bool(st_.insert(int(k), 1).found[0]):
+                new.append(int(k))
+        except RuntimeError:
+            pass
+    res = st_.update_batch(np.asarray(new, np.uint64),
+                           np.full(len(new), 7, np.uint64))
+    assert res.found.all()
+    got = st_.get_batch(np.asarray(new, np.uint64))
+    assert got.found.all()
+    assert set(np.asarray(got.values).tolist()) == {7}
+    res_d = st_.delete_batch(np.asarray(new[:16], np.uint64))
+    assert res_d.found.all()
+    assert not st_.get_batch(np.asarray(new[:16], np.uint64)).found.any()
