@@ -37,7 +37,8 @@ def main() -> None:
                          "across skew), lat (simulated Get latency "
                          "percentiles), scale (simulated closed-loop "
                          "throughput vs clients + resize dip), "
-                         "ycsb (batched vs scalar write mixes + Ludo "
+                         "ycsb (pipelined vs hand-batched vs scalar write "
+                         "mixes, BatchPolicy window sweep + Ludo "
                          "build/resize-rebuild microbench), "
                          "kernel_paged, kernel_lookup, kernel_pagetable")
     ap.add_argument("--strict", action="store_true",
@@ -45,6 +46,9 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows (with extras such as latency "
                          "percentiles) as machine-readable JSON")
+    ap.add_argument("--ycsb-window", type=int, default=None, metavar="N",
+                    help="override the ycsb suite's BatchPolicy doorbell "
+                         "window (default: the store policy's 1024)")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, net_bench, paper_figs, ycsb_bench
@@ -67,7 +71,8 @@ def main() -> None:
         ("zipf", lambda: paper_figs.zipf_cache(min(n, 200_000))),
         ("lat", lambda: net_bench.lat_suite(args.quick)),
         ("scale", lambda: net_bench.scale_suite(args.quick)),
-        ("ycsb", lambda: ycsb_bench.ycsb_suite(args.quick)),
+        ("ycsb", lambda: ycsb_bench.ycsb_suite(args.quick,
+                                               window=args.ycsb_window)),
         ("kernel_paged", kernel_bench.paged_attention_traffic),
         ("kernel_lookup", kernel_bench.ludo_lookup_throughput),
         ("kernel_pagetable", kernel_bench.page_table_memory),

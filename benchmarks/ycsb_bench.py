@@ -1,19 +1,28 @@
 """YCSB write-mix suite + DMPH maintenance microbenchmarks (``--only ycsb``).
 
-Three parts, all driven through ``repro.api.open_store``:
+Four parts, all driven through ``repro.api.open_store``:
 
 * **build** — Ludo build at n=64k: the vectorized maintenance passes
   (``repro.core.maintenance``: one-shot seed search + batched frontier
   eviction) vs the legacy scalar reference (per-bucket 256-seed Python
   loop + per-key random-walk eviction, ``ludo.build(reference=True)``).
   The speedup row is the machine-portable number CI regresses against.
-* **mixes** — YCSB A/B/C/D op streams executed twice against identical
-  stores: the scalar protocol loop (one ``KVStore.get/update/insert`` per
-  op) vs doorbell windows of batched ops (``get_batch``/``update_batch``/
-  ``insert_batch``, ops grouped by type within each window).  The two
-  runs must produce **byte-identical CommMeter totals** — asserted here,
-  recorded in the row extras — so the speedup is pure interpreter-overhead
-  removal, not accounting drift.
+* **mixes** — YCSB A/B/C/D op streams executed three ways against
+  identical stores: the scalar protocol loop (one ``KVStore.get/update/
+  insert`` per op), the hand-batched reference (ops grouped by type in
+  fixed doorbell windows — what the bench hardcoded pre-pipeline), and
+  the v2 pipeline (one ``submit`` per op; the store's ``BatchPolicy``
+  coalesces them into the same windows).  All three must produce
+  **byte-identical CommMeter totals** — asserted here, recorded in the
+  row extras — so the speedup is pure interpreter-overhead removal, not
+  accounting drift.  The window comes from the store's ``BatchPolicy``
+  (CLI-overridable via ``--ycsb-window``), and every row records the
+  effective policy.
+* **sweep** — the same pipelined YCSB-B stream under
+  ``BatchPolicy(window ∈ {1, 64, 1024})``, meter-identity asserted
+  against the hand-batched reference at each window, and the recorded
+  trace replayed through ``repro.net`` with ``window="policy"`` so the
+  simulated latency/throughput reflects the policy's doorbell windows.
 * **resize** — drive batched inserts into an ``outback-dir`` store until
   a §4.4 split fires (recorded on a ``repro.net`` transport), then replay
   the trace with the MN rebuild rate measured from the vectorized build
@@ -32,7 +41,7 @@ import time
 import numpy as np
 
 from benchmarks import common as C
-from repro.api import StoreSpec, open_store
+from repro.api import BatchPolicy, StoreSpec, open_store
 from repro.core import ludo
 from repro.core.hashing import split_u64, splitmix64
 from repro.net import CX6, Transport, simulate
@@ -41,9 +50,19 @@ BUILD_N = 65536  # acceptance-criterion size; kept in --quick so CI compares
 MIX_SPEC = StoreSpec("outback", load_factor=0.85)
 DIR_SPEC = StoreSpec("outback-dir", load_factor=0.85,
                      params={"num_compute_nodes": 2})
-WINDOW = 1024  # doorbell window: ops batched per type within each window
+DEFAULT_WINDOW = 1024  # doorbell window when --ycsb-window is not given
+SWEEP_WINDOWS = (1, 64, 1024)
 
 MIXES = ("A", "B", "C", "D")
+
+
+def _mix_spec(window: int) -> StoreSpec:
+    """The pipelined mix store: YCSB models many independent closed-loop
+    clients sharing one doorbell, so intra-window order carries no
+    meaning -> ``order="relaxed"`` (no hazard tracking), exactly the
+    hand-batched grouping."""
+    return StoreSpec("outback", load_factor=0.85,
+                     batch=BatchPolicy(window=window, order="relaxed"))
 
 
 def _extras(spec: StoreSpec | None, wall_s: float, **kw) -> dict:
@@ -112,9 +131,12 @@ def _run_scalar(store, keys, stream):
             store.insert(fresh, v)
 
 
-def _run_batched(store, keys, stream):
-    for w0 in range(0, len(stream), WINDOW):
-        win = stream[w0:w0 + WINDOW]
+def _run_hand_batched(store, keys, stream, window: int):
+    """The pre-pipeline reference driver: fixed windows, ops grouped by
+    type — kept as the identity baseline the pipelined runs are asserted
+    against (and for the sweep's hand-vs-pipeline comparison)."""
+    for w0 in range(0, len(stream), window):
+        win = stream[w0:w0 + window]
         by = {"get": [], "update": [], "insert": []}
         for op, i, v, fresh in win:
             by[op].append((i, v, fresh))
@@ -130,40 +152,111 @@ def _run_batched(store, keys, stream):
                 np.asarray([v for _, v, _ in by["insert"]], dtype=np.uint64))
 
 
-def mix_rows(quick: bool):
+def _run_pipelined(store, keys, stream):
+    """One ``submit`` per op; the store's ``BatchPolicy`` owns the window."""
+    submit = store.submit
+    for op, i, v, fresh in stream:
+        if op == "get":
+            submit("get", keys[i])
+        elif op == "update":
+            submit("update", keys[i], v)
+        else:
+            submit("insert", fresh, v)
+    store.flush()
+
+
+def _assert_meters_identical(mix: str, tag: str, snap_ref, snap_got):
+    if snap_ref != snap_got:
+        diff = {k: (snap_ref[k], snap_got[k]) for k in snap_ref
+                if snap_ref[k] != snap_got[k]}
+        raise AssertionError(
+            f"ycsb{mix}: {tag} meter diverged: {diff}")
+
+
+def mix_rows(quick: bool, window: int = DEFAULT_WINDOW):
     n = 20_000 if quick else BUILD_N
     n_ops = 3_000 if quick else 10_000
     keys = C.fb_like_keys(n)
     vals = C.values_for(keys)
+    spec = _mix_spec(window)
     rows = []
     for mix in MIXES:
         stream = _op_stream(mix, n_ops, n, seed=11)
         scalar = open_store(MIX_SPEC, keys, vals)
-        batched = open_store(MIX_SPEC, keys, vals)
+        hand = open_store(MIX_SPEC, keys, vals)
+        piped = open_store(spec, keys, vals)
         t0 = time.perf_counter()
         _run_scalar(scalar, keys, stream)
         t_s = time.perf_counter() - t0
         t0 = time.perf_counter()
-        _run_batched(batched, keys, stream)
+        _run_hand_batched(hand, keys, stream, window)
+        t_h = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _run_pipelined(piped, keys, stream)
         t_b = time.perf_counter() - t0
         snap_s = scalar.meter_totals().snapshot()
-        snap_b = batched.meter_totals().snapshot()
-        if snap_s != snap_b:
-            diff = {k: (snap_s[k], snap_b[k]) for k in snap_s
-                    if snap_s[k] != snap_b[k]}
-            raise AssertionError(
-                f"ycsb{mix}: batched meter diverged from scalar: {diff}")
+        _assert_meters_identical(mix, "hand-batched vs scalar", snap_s,
+                                 hand.meter_totals().snapshot())
+        _assert_meters_identical(mix, "pipelined vs scalar", snap_s,
+                                 piped.meter_totals().snapshot())
         speedup = t_s / max(t_b, 1e-9)
-        ex = _extras(MIX_SPEC, t_s + t_b, ops=n_ops, n_keys=n,
-                     meter_identical=True,
-                     ops_per_s_scalar=round(n_ops / t_s, 1),
-                     ops_per_s_batched=round(n_ops / t_b, 1))
+        wall = t_s + t_h + t_b
+        base = dict(ops=n_ops, n_keys=n, meter_identical=True,
+                    ops_per_s_scalar=round(n_ops / t_s, 1),
+                    ops_per_s_hand_batched=round(n_ops / t_h, 1),
+                    ops_per_s_batched=round(n_ops / t_b, 1))
+        # each row records the spec *its* store was opened with (the
+        # bench-JSON contract is reconstructability): the scalar baseline
+        # ran the plain sync spec, so only the pipelined rows carry the
+        # BatchPolicy window/flush metadata
+        ex_scalar = _extras(MIX_SPEC, wall, **base)
+        ex_piped = _extras(spec, wall, window=window,
+                           policy=spec.batch.to_json_dict(),
+                           pipeline_flushes=piped.stats.flushes, **base)
         rows.append((f"ycsb/{mix}/scalar", round(t_s / n_ops * 1e6, 3),
-                     round(n_ops / t_s / 1e6, 4), ex))
+                     round(n_ops / t_s / 1e6, 4), ex_scalar))
         rows.append((f"ycsb/{mix}/batched", round(t_b / n_ops * 1e6, 3),
-                     round(n_ops / t_b / 1e6, 4), ex))
+                     round(n_ops / t_b / 1e6, 4), ex_piped))
         rows.append((f"ycsb/{mix}/speedup", round(speedup, 2),
-                     f"{speedup:.1f}x", ex))
+                     f"{speedup:.1f}x", ex_piped))
+    return rows
+
+
+# ------------------------------------------------------------------ sweep
+def sweep_rows(quick: bool):
+    """Pipeline window sweep: meter identity vs hand-batched at every
+    window, plus the recorded trace replayed at ``window="policy"`` so the
+    simulated tail reflects the policy's actual doorbell coalescing."""
+    n = 12_000 if quick else 32_000
+    n_ops = 2_000 if quick else 6_000
+    keys = C.fb_like_keys(n, seed=2)
+    vals = C.values_for(keys)
+    stream = _op_stream("B", n_ops, n, seed=23)
+    rows = []
+    for w in SWEEP_WINDOWS:
+        hand = open_store(MIX_SPEC, keys, vals)
+        t0 = time.perf_counter()
+        _run_hand_batched(hand, keys, stream, w)
+        t_h = time.perf_counter() - t0
+        tr = Transport()
+        piped = open_store(_mix_spec(w), keys, vals, transport=tr)
+        t0 = time.perf_counter()
+        _run_pipelined(piped, keys, stream)
+        t_b = time.perf_counter() - t0
+        _assert_meters_identical("B", f"sweep w={w} pipelined vs hand",
+                                 hand.meter_totals().snapshot(),
+                                 piped.meter_totals().snapshot())
+        sim = simulate(tr.trace, clients=4, window="policy")
+        pct = sim.percentiles()
+        ex = _extras(piped.spec, t_h + t_b, ops=n_ops, n_keys=n, window=w,
+                     meter_identical=True,
+                     policy=piped.spec.batch.to_json_dict(),
+                     pipeline_flushes=piped.stats.flushes,
+                     sim_tput_mops=round(sim.tput_mops, 4),
+                     p50_us=round(pct["p50_us"], 3),
+                     p99_us=round(pct["p99_us"], 3))
+        rows.append((f"ycsb/sweep/w{w}", round(t_b / n_ops * 1e6, 3),
+                     round(sim.tput_mops, 4), ex))
     return rows
 
 
@@ -224,9 +317,12 @@ def resize_rows(quick: bool):
     ]
 
 
-def ycsb_suite(quick: bool = False):
+def ycsb_suite(quick: bool = False, window: int | None = None):
+    window = DEFAULT_WINDOW if window is None else int(window)
     rows = []
-    for part in (build_rows, mix_rows, resize_rows):
+    parts = [build_rows, lambda q: mix_rows(q, window), sweep_rows,
+             resize_rows]
+    for part in parts:
         t0 = time.perf_counter()
         part_rows = part(quick)
         wall = time.perf_counter() - t0

@@ -2,10 +2,15 @@
 
 The seam between Outback's engines and everything that drives them:
 
-* :mod:`repro.api.protocol` — the batched-first :class:`KVStore` protocol
-  and the structured :class:`OpResult` every op returns;
+* :mod:`repro.api.protocol` — the batched-first :class:`KVStore` protocol,
+  the v2 :class:`PipelinedKVStore` submission plane, and the structured
+  :class:`OpResult` every op returns;
+* :mod:`repro.api.pipeline` — the asynchronous submission/completion
+  plane: :class:`BatchPolicy` (per-store batching policy, a first-class
+  ``StoreSpec`` field), ``submit``/``poll``/``flush`` and
+  :class:`OpHandle`;
 * :mod:`repro.api.stack` — the CN-side middleware stack
-  (``Meter → CNCache → Transport``), assembled once per store;
+  (``Pipeline → Meter → CNCache → Transport``), assembled once per store;
 * :mod:`repro.api.registry` — :class:`StoreSpec` (JSON-round-trippable
   config) and :func:`open_store`, covering every store kind in the repo.
 
@@ -13,12 +18,17 @@ The benchmarks (``benchmarks/``), the serving session store
 (``repro.serve.session_store``), and CI's api-surface lane all construct
 stores exclusively through :func:`open_store`; the engines' legacy
 keyword seams (``cn_cache=``/``cn_cache_budget_bytes=``/``transport=``)
-remain as thin deprecated shims for existing callers (see README
-§`repro.api` for the migration notes and deprecation policy).
+remain as thin deprecated shims for existing callers, and the v1
+call-and-wait ops are now conveniences over the pipeline (see README
+§`Async API & BatchPolicy` for the migration table and deprecation
+policy).
 """
 
 from repro.api.adapters import StoreAdapter
-from repro.api.protocol import (KVStore, OpResult, UnsupportedOperation,
+from repro.api.pipeline import (BatchPolicy, OpHandle, PipelineLayer,
+                                PipelineStats)
+from repro.api.protocol import (OP_KINDS, KVStore, OpResult,
+                                PipelinedKVStore, UnsupportedOperation,
                                 pack_result)
 from repro.api.registry import (SpecError, StoreSpec, open_store,
                                 register_store, registered_kinds,
@@ -27,11 +37,17 @@ from repro.api.stack import (CNCacheLayer, CNStack, MeterLayer, StoreLayer,
                              TransportBinding)
 
 __all__ = [
+    "BatchPolicy",
     "CNCacheLayer",
     "CNStack",
     "KVStore",
     "MeterLayer",
+    "OP_KINDS",
+    "OpHandle",
     "OpResult",
+    "PipelineLayer",
+    "PipelineStats",
+    "PipelinedKVStore",
     "SpecError",
     "StoreAdapter",
     "StoreLayer",

@@ -15,6 +15,13 @@ so a 10k-op YCSB-A window is a few array calls end-to-end instead of 10k
 Python round trips.  The engine-level batch ops return native types
 (status lists / bool masks); the adapters only translate them into the
 protocol's ``OpResult``.
+
+These batch paths are also what the v2 submission plane
+(``repro.api.pipeline``) coalesces scalar submissions into, and the
+per-kind ``cache_hit_savings``/``cache_neg_savings`` declarations below
+price *every* locally-answered read on that kind's wire — CN-cache hits
+and the pipeline's write-combined reads alike — so saved-bytes
+attribution can never drift between the two fronts.
 """
 
 from __future__ import annotations

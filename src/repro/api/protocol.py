@@ -36,6 +36,11 @@ class UnsupportedOperation(RuntimeError):
     """The store kind cannot serve this op (e.g. no MN kernel on RACE)."""
 
 
+# The op kinds the v2 submission plane accepts — also the complete set of
+# batched protocol entry points every registered kind serves.
+OP_KINDS = ("get", "insert", "update", "delete")
+
+
 @dataclasses.dataclass
 class OpResult:
     """Structured result of one (batched) KVStore operation.
@@ -130,3 +135,25 @@ class KVStore(typing.Protocol):
     def meter_totals(self): ...  # -> repro.core.meter.CommMeter (merged)
 
     def reset_meters(self) -> None: ...
+
+
+@typing.runtime_checkable
+class PipelinedKVStore(KVStore, typing.Protocol):
+    """The v2 surface ``open_store`` returns: the v1 sync ops (kept as
+    conveniences over the pipeline) plus the asynchronous submission/
+    completion plane served by :class:`repro.api.pipeline.PipelineLayer`.
+
+    ``submit(op, keys, values)`` enqueues one op (``op`` one of
+    :data:`OP_KINDS`; ``keys`` scalar or array) and returns an
+    ``OpHandle``; pending submissions coalesce into the engines' batched
+    kernels when the store's ``BatchPolicy`` fires a flush (window-full /
+    explicit / read-after-write hazard).  ``poll()`` drains completed
+    handles without executing anything; ``flush()`` forces execution and
+    drains.  See ``repro.api.pipeline`` for the ordering semantics.
+    """
+
+    def submit(self, op: str, keys, values=None) -> "OpHandle": ...  # noqa: F821
+
+    def poll(self) -> list: ...
+
+    def flush(self) -> list: ...

@@ -37,6 +37,7 @@ import typing
 import numpy as np
 
 from repro.api import adapters
+from repro.api.pipeline import BatchPolicy
 from repro.api.stack import CNStack, TransportBinding
 from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
 from repro.core.cn_cache import CNKeyCache
@@ -57,13 +58,26 @@ class StoreSpec:
     load_factor: float | None = None  # None -> the kind's native default
     rng_seed: int = 0
     cache_budget_bytes: int = 0  # CN hot-key cache budget; 0 disables
+    # submission-plane batching policy (repro.api.pipeline.BatchPolicy or
+    # its JSON dict); None -> the synchronous v1 behaviour (window=1)
+    batch: BatchPolicy | None = None
     params: dict = dataclasses.field(default_factory=dict)  # kind-specific
+
+    def __post_init__(self):
+        if isinstance(self.batch, dict):  # JSON round-trip normalisation
+            try:
+                object.__setattr__(self, "batch",
+                                   BatchPolicy.from_json_dict(self.batch))
+            except ValueError as e:
+                raise SpecError(str(e)) from e
 
     # ------------------------------------------------------------- json
     def to_json_dict(self) -> dict:
         return {"kind": self.kind, "load_factor": self.load_factor,
                 "rng_seed": self.rng_seed,
                 "cache_budget_bytes": self.cache_budget_bytes,
+                "batch": (None if self.batch is None
+                          else self.batch.to_json_dict()),
                 "params": dict(self.params)}
 
     def to_json(self) -> str:
@@ -101,6 +115,14 @@ class StoreSpec:
         if self.cache_budget_bytes and self.cache_budget_bytes < 1024:
             raise SpecError("cache_budget_bytes below 1 KiB is meaningless "
                             "(0 disables the CN cache)")
+        if self.batch is not None:
+            if not isinstance(self.batch, BatchPolicy):
+                raise SpecError(f"batch must be a BatchPolicy (or its JSON "
+                                f"dict), got {type(self.batch).__name__}")
+            try:
+                self.batch.validate()
+            except ValueError as e:
+                raise SpecError(str(e)) from e
         return reg
 
     def merged_params(self) -> dict:
@@ -150,7 +172,9 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
     ``keys``/``values`` are the build-time key set (uint64 arrays);
     ``transport`` an optional ``repro.net.Transport`` bound below the
     engine as the stack's recording stage.  Returns a
-    :class:`repro.api.protocol.KVStore` (Meter → [CNCache →] adapter).
+    :class:`repro.api.protocol.PipelinedKVStore`
+    (Pipeline → Meter → [CNCache →] adapter), with the pipeline stage
+    shaped by ``spec.batch`` (synchronous when the spec carries none).
     """
     reg = spec.validate()
     keys = np.asarray(keys, dtype=np.uint64)
@@ -162,7 +186,8 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
     cache = (CNKeyCache(spec.cache_budget_bytes)
              if spec.cache_budget_bytes else None)
     stack = CNStack(cache=cache,
-                    transport_binding=TransportBinding(transport))
+                    transport_binding=TransportBinding(transport),
+                    policy=spec.batch)
     return stack.assemble(adapter)
 
 

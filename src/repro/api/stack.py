@@ -1,4 +1,4 @@
-"""The composable CN-side stack: ``Meter → CNCache → Transport``.
+"""The composable CN-side stack: ``Pipeline → Meter → CNCache → Transport``.
 
 Before this seam existed, every cross-cutting CN feature was threaded by
 keyword through ten constructors (`cn_cache=`/`cn_cache_budget_bytes=`/
@@ -221,13 +221,23 @@ class TransportBinding:
 @dataclasses.dataclass(frozen=True)
 class CNStack:
     """Composition root for the CN-side stack.  ``open_store`` builds one
-    per store; tests may assemble their own around any adapter."""
+    per store; tests may assemble their own around any adapter.
+
+    ``policy`` (a ``repro.api.pipeline.BatchPolicy``, or ``None`` for the
+    synchronous ``BatchPolicy.sync()``) shapes the outermost pipeline
+    stage, so the assembled order reads
+    ``Pipeline → Meter → [CNCache →] adapter (→ Transport)``.
+    """
 
     cache: CNKeyCache | None = None
     transport_binding: TransportBinding = TransportBinding()
+    policy: object | None = None  # BatchPolicy; None -> sync()
 
     def assemble(self, adapter):
+        from repro.api.pipeline import PipelineLayer  # avoid import cycle
         store = adapter  # transport already bound below the engine
         if self.cache is not None:
             store = CNCacheLayer(store, self.cache)
-        return MeterLayer(store)
+        store = MeterLayer(store)
+        return PipelineLayer(store, policy=self.policy,
+                             transport=self.transport_binding.transport)

@@ -39,6 +39,10 @@ class CommMeter:
     # the round trips / on-wire bytes those local answers saved
     cache_hits: int = 0
     cache_neg_hits: int = 0
+    # pipeline write-combining (repro.api.pipeline): reads of a pending
+    # write answered from the CN's write buffer — like a cache hit, the op
+    # happened and the kind's wire costs land in the saved_* counters
+    wc_hits: int = 0
     saved_round_trips: int = 0
     saved_req_bytes: int = 0
     saved_resp_bytes: int = 0
@@ -107,6 +111,16 @@ class CommMeter:
             self.cache_neg_hits += n
         else:
             self.cache_hits += n
+        self.saved_round_trips += n * saved_rts
+        self.saved_req_bytes += n * saved_req
+        self.saved_resp_bytes += n * saved_resp
+
+    def add_wc_hit(self, n: int = 1, *, saved_rts: int = 1,
+                   saved_req: int = MSG_BYTES, saved_resp: int = 0) -> None:
+        """Account ``n`` reads served from the pipeline's write-combining
+        buffer: the op happened locally; the listed wire costs were saved."""
+        self.ops += n
+        self.wc_hits += n
         self.saved_round_trips += n * saved_rts
         self.saved_req_bytes += n * saved_req
         self.saved_resp_bytes += n * saved_resp

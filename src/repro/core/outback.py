@@ -614,8 +614,69 @@ class OutbackShard:
     def _resolve_makeups(self, keys: np.ndarray, v_lo, v_hi, match, *,
                          xp=np, skip=None):
         """Host Makeup-Get for mismatched lanes of a batched Get (overflow
-        residents / stale CN seeds) — the §4.3.1 ind_slot=-1 path, metered
-        per lane by ``_makeup_get`` itself."""
+        residents / stale CN seeds) — the §4.3.1 ind_slot=-1 path.
+
+        Vectorised end-to-end: one CN locate over all mismatched lanes,
+        one batched overflow probe (``OverflowCache.lookup_batch``), and
+        one (m, 4) bucket-slot scan replace the per-lane Python walks, so
+        heavy overflow pressure (post-``s_slow``, pre-split) no longer
+        drags the miss path through the interpreter.  The *accounting*
+        stays a per-lane loop emitting exactly the meter events the scalar
+        ``_makeup_get`` emits — same totals, same transport-trace
+        continuation attachment — proven lane-identical against
+        ``_resolve_makeups_reference`` in ``tests/test_makeup_batch.py``.
+        """
+        pending = ~np.asarray(match)
+        if skip is not None:
+            pending &= ~np.asarray(skip)
+        idx = np.nonzero(pending)[0]
+        if idx.size == 0:
+            return v_lo, v_hi, match
+        v_lo = np.asarray(v_lo).copy()
+        v_hi = np.asarray(v_hi).copy()
+        match = np.asarray(match).copy()
+        lo, hi = split_u64(np.asarray(keys, np.uint64)[idx])
+        b, _ = self.cn.locate(lo, hi)
+        b = b.astype(np.int64)
+        o_addr, o_probes = self.overflow.lookup_batch(lo, hi)
+        o_hit = o_addr >= 0
+        # the bucket's (<=4) blocks, scanned only where the overflow missed
+        s_hi = self.slots_hi[b]
+        s_addr = slots.unpack_addr32(self.slots_lo[b], s_hi).astype(np.int64)
+        nonempty = slots.unpack_len(s_hi) != 0
+        s_match = (nonempty & (self.heap_klo[s_addr] == lo[:, None])
+                   & (self.heap_khi[s_addr] == hi[:, None]))
+        any_s = s_match.any(axis=1) & ~o_hit
+        first = np.where(s_match.any(axis=1), np.argmax(s_match, axis=1), 4)
+        # the scalar walk skips empty slots silently and stops at the
+        # match, so it examines every non-empty slot up to (and incl.) it
+        n_exam = (nonempty & (np.arange(4)[None, :] <= first[:, None])).sum(1)
+        lanes = np.arange(idx.shape[0])
+        res_addr = np.where(o_hit, o_addr,
+                            s_addr[lanes, np.minimum(first, 3)])
+        ok = o_hit | any_s
+        for t in range(idx.shape[0]):
+            self.meter.add(rts=1, req=GET_REQ_BYTES + 8, resp=KV_BLOCK_BYTES,
+                           mn_hash=1, mn_cmp=int(o_probes[t]),
+                           mn_reads=int(o_probes[t]), cont=True)
+            if not o_hit[t]:
+                for _ in range(int(n_exam[t])):
+                    self.meter.add(0, mn_cmp=1, mn_reads=2, attach=True)
+        if any_s.any():
+            # seed changed MN-side; CN refreshes its copy (paper §4.3.1)
+            bb = b[any_s]
+            self.cn.seeds[bb] = self.seeds_mn[bb]
+        hit_idx = idx[ok]
+        a = res_addr[ok]
+        v_lo[hit_idx] = self.heap_vlo[a]
+        v_hi[hit_idx] = self.heap_vhi[a]
+        match[hit_idx] = True
+        return xp.asarray(v_lo), xp.asarray(v_hi), xp.asarray(match)
+
+    def _resolve_makeups_reference(self, keys: np.ndarray, v_lo, v_hi, match,
+                                   *, xp=np, skip=None):
+        """The legacy per-lane Makeup-Get loop, kept as the parity twin
+        the vectorised ``_resolve_makeups`` is tested against."""
         pending = ~np.asarray(match)
         if skip is not None:
             pending &= ~np.asarray(skip)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.hashing import hash_range_int
+from repro.core.hashing import hash_range, hash_range_int
 
 
 class OverflowCache:
@@ -62,6 +62,35 @@ class OverflowCache:
     def lookup(self, lo: int, hi: int) -> tuple[int | None, int]:
         pos, _, probes = self._probe(lo, hi)
         return (int(self.addr[pos]) if pos is not None else None), probes
+
+    def lookup_batch(self, lo: np.ndarray, hi: np.ndarray):
+        """Vectorised ``lookup`` over many keys at once.
+
+        Returns ``(addr, probes)``: int64 heap addresses (-1 where the key
+        is absent) and the exact per-lane probe count the scalar walk
+        would report — probing advances one step for *all* unresolved
+        lanes per iteration, so the loop runs max-probes times instead of
+        lanes × probes Python iterations.  Element-wise identical to
+        ``lookup`` (tested), so the batched Makeup-Get meters the same.
+        """
+        lo = np.asarray(lo, dtype=np.uint32)
+        hi = np.asarray(hi, dtype=np.uint32)
+        n = int(lo.shape[0])
+        h = hash_range(lo, hi, self._seed, self.cap).astype(np.int64)
+        addr = np.full(n, -1, dtype=np.int64)
+        probes = np.zeros(n, dtype=np.int64)
+        active = np.ones(n, dtype=bool)
+        for i in range(self._PROBE_LIMIT):
+            idx = np.nonzero(active)[0]
+            if idx.size == 0:
+                break
+            p = (h[idx] + i) % self.cap
+            used = self.used[p]
+            match = used & (self.k_lo[p] == lo[idx]) & (self.k_hi[p] == hi[idx])
+            probes[idx] += 1
+            addr[idx[match]] = self.addr[p[match]]
+            active[idx[match | ~used]] = False
+        return addr, probes
 
     def delete(self, lo: int, hi: int) -> tuple[bool, int]:
         pos, _, probes = self._probe(lo, hi)

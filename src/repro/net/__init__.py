@@ -26,7 +26,9 @@ clock, no RNG in any event path.
 from repro.net.replay import SimResult, simulate
 from repro.net.service import CX3, CX6, ServiceModel
 from repro.net.sim import Server, Simulator
-from repro.net.transport import OpEvent, ResizeMark, Segment, Transport
+from repro.net.transport import (DoorbellMark, OpEvent, ResizeMark, Segment,
+                                 Transport)
 
-__all__ = ["CX3", "CX6", "OpEvent", "ResizeMark", "Segment", "Server",
-           "ServiceModel", "SimResult", "Simulator", "Transport", "simulate"]
+__all__ = ["CX3", "CX6", "DoorbellMark", "OpEvent", "ResizeMark", "Segment",
+           "Server", "ServiceModel", "SimResult", "Simulator", "Transport",
+           "simulate"]

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.net.service import CX6, ServiceModel
 from repro.net.sim import Server, Simulator
-from repro.net.transport import OpEvent, ResizeMark
+from repro.net.transport import DoorbellMark, OpEvent, ResizeMark
 
 
 @dataclasses.dataclass
@@ -66,17 +66,27 @@ class SimResult:
         return n / (t1 - t0) / 1e6
 
 
-def simulate(trace, *, clients: int = 1, window: int = 1,
+def simulate(trace, *, clients: int = 1, window: int | str = 1,
              mn_threads: int = 1, doorbell: bool = True,
              service: ServiceModel = CX6,
              max_ops: int | None = None) -> SimResult:
     """Replay ``trace`` with ``clients`` closed-loop clients.
 
     ``window`` bounds each client QP's outstanding ops (>=1); posting more
-    than one WQE back-to-back is where doorbell batching pays off.  There
-    is no randomness anywhere: the same trace and parameters produce
-    bit-identical percentiles on every run.
+    than one WQE back-to-back is where doorbell batching pays off.  Pass
+    ``window="policy"`` to take the window from the trace's recorded
+    :class:`repro.net.transport.DoorbellMark` boundaries instead: each
+    pipeline flush of ``n`` ops replays with an ``n``-deep window (ops
+    recorded before any mark replay synchronously), so the simulated
+    latency/throughput reflects the store's ``BatchPolicy`` rather than a
+    sweep parameter.  There is no randomness anywhere: the same trace and
+    parameters produce bit-identical percentiles on every run.
     """
+    policy_window = window == "policy"
+    # "left" counts the current doorbell group down so ops recorded
+    # *outside* any flush (scalar conveniences, pre-pipeline traffic)
+    # revert to a synchronous window instead of inheriting the last mark
+    cur_w = {"w": 1 if policy_window else max(1, int(window)), "left": 0}
     sim = Simulator()
     mn_cpu = Server(sim, workers=max(1, mn_threads), name="mn_cpu")
     mn_nic = Server(sim, workers=1, name="mn_nic")
@@ -105,6 +115,16 @@ def simulate(trace, *, clients: int = 1, window: int = 1,
                 _open_resize_window(sim, mn_cpu, it, service, windows,
                                     slow_open)
                 continue
+            if isinstance(it, DoorbellMark):
+                if policy_window:  # numeric windows ignore recorded flushes
+                    cur_w["w"] = max(1, it.n_ops)
+                    cur_w["left"] = it.n_ops
+                continue
+            if policy_window:
+                if cur_w["left"] <= 0:
+                    cur_w["w"] = 1  # op outside any doorbell group
+                else:
+                    cur_w["left"] -= 1
             return it
         return None
 
@@ -122,7 +142,7 @@ def simulate(trace, *, clients: int = 1, window: int = 1,
             self.inflight = 0
 
         def pump(self) -> None:
-            while self.inflight < window:
+            while self.inflight < cur_w["w"]:
                 op = next_item()
                 if op is None:
                     return

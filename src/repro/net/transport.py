@@ -70,6 +70,17 @@ class ResizeMark:
     n_live: int
 
 
+@dataclasses.dataclass(frozen=True)
+class DoorbellMark:
+    """A pipeline flush rang the doorbell here: the next ``n_ops`` ops
+    were posted under one coalesced window (``repro.api.pipeline``).
+    ``replay.simulate(window="policy")`` uses these to set each client's
+    outstanding-ops window to what the store's ``BatchPolicy`` actually
+    produced; numeric-window replays skip them."""
+
+    n_ops: int
+
+
 class Transport:
     """CommMeter sink: builds the op trace the simulator replays.
 
@@ -116,6 +127,23 @@ class Transport:
         self._attach = -1
         self._cont_used = False
 
+    def begin_doorbell(self) -> int:
+        """Open a doorbell window (a pipeline flush boundary) whose op
+        count is not yet known — lanes a CN cache absorbs never reach the
+        trace; returns a token for :meth:`close_doorbell`.  The
+        placeholder mark stays in place (so attachment indices never
+        shift) and is patched to the *recorded* op count at close.
+        Unlike ``mark_resize`` this does not move the attachment cursor:
+        the flush's ops follow immediately and makeup continuations must
+        still walk back through the previous batch unimpeded."""
+        token = len(self.trace)
+        self.trace.append(DoorbellMark(0))
+        return token
+
+    def close_doorbell(self, token: int) -> None:
+        n = sum(1 for e in self.trace[token + 1:] if isinstance(e, OpEvent))
+        self.trace[token] = DoorbellMark(n)
+
     # --------------------------------------------------------------- util
     @staticmethod
     def _make_segments(rts, req, resp, mn_hash, mn_cmp, mn_reads, mn_writes,
@@ -138,7 +166,7 @@ class Transport:
         """Fold an attachment (``n==0``) or a Makeup-Get continuation
         (``cont=True``) into the op at the attachment cursor."""
         i = self._attach
-        while i >= 0 and isinstance(self.trace[i], ResizeMark):
+        while i >= 0 and isinstance(self.trace[i], (ResizeMark, DoorbellMark)):
             i -= 1
         self._attach = i
         if i < 0:  # nothing to attach to: record as a standalone op

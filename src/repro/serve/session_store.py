@@ -7,12 +7,20 @@ derived 64-bit key via the Insert protocol, and read back with the batched
 Get.
 
 The store is opened through the ``repro.api`` registry — one
-``StoreSpec('outback-dir', cache_budget_bytes=...)`` — so reads go through
-the stack's CN-side hot-key cache layer (a conversation that bounces
-between park and resume — the common chat pattern — stops paying MN round
-trips for its state after the first resume), and the spec that backs a
-serving deployment is recordable/rebuildable config rather than keyword
-threading.
+``StoreSpec('outback-dir', cache_budget_bytes=..., batch=...)`` — so reads
+go through the stack's CN-side hot-key cache layer (a conversation that
+bounces between park and resume — the common chat pattern — stops paying
+MN round trips for its state after the first resume), and the spec that
+backs a serving deployment is recordable/rebuildable config rather than
+keyword threading.
+
+Parks ride the v2 submission plane: ``put`` *submits* its Insert batch and
+returns without flushing, so bursts of parks (every decode step may park
+several finished lanes) coalesce under the store's ``BatchPolicy`` window
+into one doorbell ring.  The policy's strict ordering makes this safe —
+a resume (``get``) of a still-pending session is a read-after-write hazard
+on the chunk keys, which flushes the queue before the read crosses the
+wire, and re-parks of the same session coalesce in submission order.
 
 Key derivation: ``splitmix64(SALT ^ (rid << 20) + index)`` — index 0 holds
 the blob's byte length, indices 1.. hold the data words.  Collisions with
@@ -24,7 +32,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.api import StoreSpec, open_store
+from repro.api import BatchPolicy, StoreSpec, open_store
 from repro.core.hashing import splitmix64
 from repro.core.store import make_uniform_keys
 
@@ -33,20 +41,25 @@ _MAX_CHUNKS = 1 << 20
 
 
 class KVSessionStore:
-    """Park/resume blobs in an Outback directory store, reads served via
-    the ``repro.api`` stack's CN cache layer."""
+    """Park/resume blobs in an Outback directory store: reads served via
+    the ``repro.api`` stack's CN cache layer, parks coalesced by the
+    store's ``BatchPolicy``."""
 
     def __init__(self, *, cn_cache_budget_bytes: int = 64 << 10,
                  bootstrap_keys: int = 4096, load_factor: float = 0.85,
-                 rng_seed: int = 0, transport=None):
+                 rng_seed: int = 0, batch_window: int = 2048,
+                 transport=None):
         # The store needs a non-empty build set; runtime Inserts grow it
         # (and exercise the §4.4 resize path once sessions pile up).
         # ``transport`` (a repro.net.Transport) puts every park/resume
         # Insert/Get on the simulated RDMA clock alongside user traffic.
+        # ``batch_window=1`` restores the synchronous per-park behaviour.
         boot = make_uniform_keys(bootstrap_keys, seed=rng_seed + 97)
         self.spec = StoreSpec("outback-dir", load_factor=load_factor,
                               rng_seed=rng_seed,
-                              cache_budget_bytes=cn_cache_budget_bytes)
+                              cache_budget_bytes=cn_cache_budget_bytes,
+                              batch=BatchPolicy(window=batch_window,
+                                                order="strict"))
         self.store = open_store(self.spec, boot, splitmix64(boot),
                                 transport=transport)
         self._lengths: dict[int, int] = {}  # rid -> n_words (for delete)
@@ -58,7 +71,12 @@ class KVSessionStore:
 
     # ----------------------------------------------------------------- api
     def put(self, rid: int, blob: bytes) -> int:
-        """Store ``blob`` under ``rid``; returns the number of KV inserts."""
+        """Park ``blob`` under ``rid``; returns the number of KV inserts.
+
+        Submits without flushing: the Insert lanes ride the store's
+        ``BatchPolicy`` window and hit the wire at the next doorbell
+        (window-full, an explicit ``flush``, or a hazarding read).
+        """
         pad = (-len(blob)) % 8
         words = np.frombuffer(blob + b"\0" * pad, dtype="<u8")
         if words.size >= _MAX_CHUNKS:
@@ -68,16 +86,19 @@ class KVSessionStore:
             # shrinking re-park: reclaim the tail chunks the overwrite below
             # will not touch, or they leak in the store forever
             tail = self._chunk_keys(rid, old + 1)[words.size + 1:]
-            self.store.delete_batch([int(k) for k in tail])
+            self.store.submit("delete", tail)
         ks = self._chunk_keys(rid, words.size + 1)
-        self.store.insert(int(ks[0]), len(blob))
-        self.store.insert_batch([int(k) for k in ks[1:]],
-                                [int(w) for w in words])
+        vals = np.concatenate([np.uint64([len(blob)]),
+                               words.astype(np.uint64)])
+        self.store.submit("insert", ks, vals)
         self._lengths[rid] = words.size
         return words.size + 1
 
     def get(self, rid: int) -> bytes | None:
-        """Fetch ``rid``'s blob (batched Get through the CN cache layer)."""
+        """Fetch ``rid``'s blob (batched Get through the CN cache layer).
+
+        A still-pending park of this session is a read-after-write hazard:
+        the pipeline flushes it before either Get crosses the wire."""
         head = self.store.get(int(self._chunk_keys(rid, 1)[0]))
         if head.value is None:
             return None
@@ -95,8 +116,12 @@ class KVSessionStore:
         n = self._lengths.pop(rid, None)
         if n is None:
             return False
-        self.store.delete_batch([int(k) for k in self._chunk_keys(rid, n + 1)])
+        self.store.submit("delete", self._chunk_keys(rid, n + 1))
         return True
+
+    def flush(self) -> None:
+        """Force every pending park/delete onto the wire."""
+        self.store.flush()
 
     # ---------------------------------------------------------- accounting
     @property
@@ -104,4 +129,5 @@ class KVSessionStore:
         return self.store.cache.stats
 
     def meter_total(self):
+        self.store.flush()  # pending parks are not on the wire yet
         return self.store.meter_totals()

@@ -1,0 +1,540 @@
+"""The v2 submission/completion plane (``repro.api.pipeline``).
+
+Covers the PR's acceptance criteria:
+
+* ``StoreSpec`` with a ``BatchPolicy`` survives a JSON round trip through
+  ``open_store`` (the policy is pure config, not runtime wiring);
+* pipelined submissions produce **byte-identical** CommMeter totals and
+  CN-cache state to the hand-batched ``*_batch`` driver on YCSB-style
+  streams;
+* submission-order semantics across op kinds — read-after-write,
+  write-after-write, delete-after-insert to the same key inside one open
+  window — hold on every registered kind;
+* the write-combining buffer answers hazarding reads locally without a
+  flush when the policy asks for it;
+* each flush maps onto ``repro.net``'s doorbell coalescing
+  (``simulate(window="policy")``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (BatchPolicy, OpHandle, PipelinedKVStore, SpecError,
+                       StoreSpec, open_store)
+from repro.core.hashing import splitmix64
+from repro.core.store import make_uniform_keys
+from repro.net import DoorbellMark, Transport, simulate
+
+N = 4096
+
+KINDS = ("outback", "race", "mica", "cluster", "dummy", "sharded")
+
+
+def _spec(kind: str, **kw) -> StoreSpec:
+    if kind in ("outback", "outback-dir"):
+        kw.setdefault("load_factor", 0.85)
+    return StoreSpec(kind, **kw)
+
+
+@pytest.fixture(scope="module")
+def data():
+    keys = make_uniform_keys(N, 5)
+    return keys, splitmix64(keys)
+
+
+# ------------------------------------------------------------ spec / config
+def test_batch_policy_json_round_trip_through_open_store(data):
+    keys, vals = data
+    spec = _spec("outback",
+                 batch=BatchPolicy(window=64, order="relaxed"))
+    spec2 = StoreSpec.from_json(spec.to_json())
+    assert spec2 == spec and spec2.batch == spec.batch
+    st = open_store(spec2, keys, vals)
+    assert isinstance(st, PipelinedKVStore)
+    assert st.policy == spec.batch
+    # a policy given as its JSON dict normalises to the same spec
+    spec3 = StoreSpec("outback", load_factor=0.85,
+                      batch={"window": 64, "order": "relaxed",
+                             "coalesce": ["get", "insert", "update",
+                                          "delete"],
+                             "combine_reads": False})
+    assert spec3 == spec
+
+
+def test_batch_policy_validation():
+    with pytest.raises(ValueError, match="window"):
+        BatchPolicy(window=0).validate()
+    with pytest.raises(ValueError, match="order"):
+        BatchPolicy(order="chaotic").validate()
+    with pytest.raises(ValueError, match="combine_reads"):
+        BatchPolicy(order="relaxed", combine_reads=True).validate()
+    with pytest.raises(ValueError, match="unknown op kinds"):
+        BatchPolicy(coalesce=("get", "scan")).validate()
+    with pytest.raises(ValueError, match="unknown BatchPolicy fields"):
+        BatchPolicy.from_json_dict({"window": 4, "burst": 2})
+    # invalid policies are caught at spec validation too
+    with pytest.raises(SpecError):
+        StoreSpec("outback", batch={"window": -3}).validate()
+
+
+def test_default_spec_is_synchronous(data):
+    keys, vals = data
+    st = open_store(_spec("outback"), keys, vals)
+    assert st.policy.window == 1
+    h = st.submit("get", keys[:4])
+    assert h.done  # window=1: submit flushed immediately
+    assert h.result().found.all()
+
+
+# --------------------------------------------------------- submit/poll/flush
+def test_submit_poll_flush_lifecycle(data):
+    keys, vals = data
+    st = open_store(_spec("outback", batch=BatchPolicy(window=128)),
+                    keys, vals)
+    h1 = st.submit("get", keys[:8])
+    h2 = st.submit("update", keys[:4], np.arange(4, dtype=np.uint64))
+    assert not h1.done and not h2.done and st.poll() == []
+    done = st.flush()
+    assert {id(h1), id(h2)} == {id(h) for h in done}
+    assert h1.result().found.all()
+    assert all(h2.result().found) and h2.result().statuses == ("ok",) * 4
+    assert st.poll() == []  # drained
+    # window-full trigger: the window-th lane flushes without being asked
+    hs = [st.submit("get", int(k)) for k in keys[:128]]
+    assert all(h.done for h in hs)
+    assert st.stats.window_flushes >= 1
+    # completions from the auto-flush are still pollable
+    polled = st.poll()
+    assert {id(h) for h in polled} == {id(h) for h in hs}
+
+
+def test_coalesced_lanes_slice_back_to_submissions(data):
+    keys, vals = data
+    st = open_store(_spec("outback", batch=BatchPolicy(window=1024)),
+                    keys, vals)
+    absent = splitmix64(np.arange(1, 5, dtype=np.uint64) + np.uint64(1 << 44))
+    ha = st.submit("get", keys[:6])
+    hb = st.submit("get", absent)
+    hc = st.submit("get", keys[6:9])
+    st.flush()
+    assert ha.result().found.all() and hc.result().found.all()
+    assert not hb.result().found.any()
+    # the three submissions shared one engine batch call + batch result
+    assert st.stats.batch_calls == 1
+    assert ha.batch is hb.batch is hc.batch
+    assert ha.batch.round_trips >= 9  # attribution lives on the batch
+    assert ha.result().round_trips == 0  # sliced handles carry none
+    vexp = np.asarray(vals[:6], np.uint64)
+    np.testing.assert_array_equal(ha.result().values, vexp)
+
+
+def test_non_coalesced_kind_executes_immediately(data):
+    keys, vals = data
+    st = open_store(
+        _spec("outback", batch=BatchPolicy(window=512, coalesce=("get",))),
+        keys, vals)
+    st.submit("get", keys[:4])
+    h = st.submit("update", keys[0], 77)  # not coalesced: runs now
+    assert h.done and bool(h.result().found[0])
+    assert st.get(int(keys[0])).value == 77
+
+
+# ------------------------------------------------- ordering semantics (all kinds)
+@pytest.mark.parametrize("kind", KINDS)
+def test_ordering_semantics_within_one_window(kind, data):
+    """Read-after-write, write-after-write and delete-after-insert to the
+    same key inside one open window resolve in submission order."""
+    keys, vals = data
+    st = open_store(_spec(kind, batch=BatchPolicy(window=4096)), keys, vals)
+    verifies = st.verifies_keys  # dummy answers one fixed read
+
+    def insertable(seed: int) -> int:
+        """A fresh key this kind's runtime insert accepts (MICA/RACE may
+        bound-reject particular keys); probed sync, then removed again."""
+        for i in range(128):
+            k = int(splitmix64(np.uint64([seed + i]))[0])
+            try:
+                ok = bool(st.insert(k, 1).found[0])
+            except RuntimeError:
+                continue
+            if ok:
+                st.delete(k)
+                return k
+        pytest.skip(f"{kind}: no insertable fresh key found")
+
+    fresh = insertable(1 << 20)
+    # read-after-write: the pending write is visible to the read
+    st.submit("insert", fresh, 1111)
+    h_get = st.submit("get", fresh)
+    res = h_get.result()
+    if verifies:
+        assert res.value == 1111
+    assert st.stats.hazard_flushes >= 1
+
+    # write-after-write (update over pending insert) resolves in order
+    fresh2 = insertable(1 << 21)
+    st.submit("insert", fresh2, 1)
+    st.submit("update", fresh2, 2)
+    st.flush()
+    if verifies:
+        assert st.get(fresh2).value == 2
+
+    # delete-after-insert inside one window: the key ends up absent
+    fresh3 = insertable(1 << 22)
+    st.submit("insert", fresh3, 9)
+    h_del = st.submit("delete", fresh3)
+    st.flush()
+    assert bool(h_del.result().found[0])
+    if verifies:
+        assert st.get(fresh3).value is None
+
+    # update-after-read keeps the read's pre-write answer (no hazard:
+    # canonical flush order already serves reads first)
+    k0 = int(keys[0])
+    before = st.get(k0).value
+    h_r = st.submit("get", k0)
+    st.submit("update", k0, 424242)
+    st.flush()
+    if verifies:
+        assert h_r.result().value == before
+        assert st.get(k0).value == 424242
+
+
+def test_relaxed_order_skips_hazard_tracking(data):
+    keys, vals = data
+    st = open_store(
+        _spec("outback", batch=BatchPolicy(window=4096, order="relaxed")),
+        keys, vals)
+    fresh = int(splitmix64(np.uint64([1 << 41]))[0])
+    st.submit("insert", fresh, 5)
+    h = st.submit("get", fresh)
+    st.flush()
+    # relaxed: the read rode the same window and was served before the
+    # insert (canonical order) — the paper's independent-clients model
+    assert h.result().value is None
+    assert st.stats.hazard_flushes == 0
+
+
+def test_write_combining_buffer(data):
+    keys, vals = data
+    st = open_store(
+        _spec("outback",
+              batch=BatchPolicy(window=4096, combine_reads=True)),
+        keys, vals)
+    fresh = int(splitmix64(np.uint64([1 << 40]))[0])
+    st.submit("insert", fresh, 31337)
+    before = st.meter_totals()
+    h = st.submit("get", fresh)          # hazard -> served locally
+    h2 = st.submit("delete", int(keys[3]))
+    h3 = st.submit("get", int(keys[3]))  # pending delete -> locally absent
+    after = st.meter_totals()
+    assert h.done and h.result().value == 31337
+    assert h3.done and h3.result().value is None
+    assert st.stats.hazard_flushes == 0 and st.stats.combined_reads == 2
+    # no wire crossed: only saved-cost attribution moved
+    assert after.round_trips == before.round_trips
+    assert after.wc_hits == before.wc_hits + 2
+    assert after.saved_round_trips > before.saved_round_trips
+    # mixed submission: combined lanes + wire lanes reassemble in order
+    h4 = st.submit("get", np.asarray([fresh, int(keys[7])], np.uint64))
+    res = h4.result()
+    assert res.values[0] == 31337 and bool(res.found[1])
+    st.flush()
+    assert bool(h2.result().found[0])
+
+
+def test_completion_backlog_is_bounded(data):
+    """A fire-and-forget caller (submit, never poll) must not accumulate
+    completed handles forever; aged-out handles keep their results."""
+    from repro.api.pipeline import DONE_BACKLOG_MAX
+    keys, vals = data
+    st = open_store(_spec("outback", batch=BatchPolicy(window=8)),
+                    keys, vals)
+    hs = [st.submit("get", int(keys[i % N])) for i in
+          range(DONE_BACKLOG_MAX + 256)]
+    assert len(st._done) == DONE_BACKLOG_MAX
+    assert st.stats.dropped_completions == 256
+    assert all(h.done for h in hs)
+    assert hs[0].result().found.all()  # aged out, result still readable
+    assert len(st.poll()) == DONE_BACKLOG_MAX
+    assert st.poll() == []
+
+
+def test_flush_survives_engine_exception(data):
+    """An engine batch op raising mid-flush must not strand later-kind
+    submissions: they stay queued (pending count + hazard state rebuilt)
+    and execute at the next flush; an open doorbell window still closes."""
+    keys, vals = data
+    tr = Transport()
+    st = open_store(_spec("outback", batch=BatchPolicy(window=4096)),
+                    keys, vals, transport=tr)
+
+    class Boom(RuntimeError):
+        pass
+
+    real = st.inner.insert_batch
+    calls = {"n": 0}
+
+    def exploding(ks, vs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise Boom("engine bound-rejection")
+        return real(ks, vs)
+
+    st.inner.insert_batch = exploding
+    fresh = int(splitmix64(np.uint64([1 << 39]))[0])
+    h_ins = st.submit("insert", fresh, 7)
+    h_del = st.submit("delete", int(keys[11]))
+    with pytest.raises(Boom):
+        st.flush()
+    # the failing group's handle is dead, but the delete is still queued
+    assert not h_ins.done and not h_del.done
+    assert st._n_pending == 1
+    with pytest.raises(RuntimeError, match="lost"):
+        h_ins.result()  # clear lost-op signal, not an opaque assert
+    # hazard state was rebuilt: a read of the queued delete's key flushes
+    r = st.submit("get", int(keys[11])).result()
+    assert not bool(r.found[0])  # the delete ran first (submission order)
+    assert bool(h_del.result().found[0])
+    # the aborted flush's doorbell placeholder was closed, not leaked
+    marks = [m for m in tr.trace if isinstance(m, DoorbellMark)]
+    assert all(m.n_ops >= 0 for m in marks)
+    st.inner.insert_batch = real
+    assert st.get(int(keys[0])).value == int(vals[0])  # store still sane
+
+
+# ----------------------------------------------- meter + cache-state identity
+def _mixed_stream(keys, n_ops, seed):
+    rng = np.random.default_rng(seed)
+    ops = rng.choice(3, size=n_ops, p=[0.7, 0.2, 0.1])
+    idx = rng.integers(0, len(keys) // 2, size=n_ops)
+    fresh = splitmix64(np.arange(1, n_ops + 1, dtype=np.uint64)
+                       + np.uint64(seed << 40))
+    return [("get" if o == 0 else "update" if o == 1 else "insert",
+             int(keys[i]), int(fresh[t]), t)
+            for t, (o, i) in enumerate(zip(ops, idx))]
+
+
+@pytest.mark.parametrize("window", (1, 64, 1024))
+def test_pipelined_meters_identical_to_hand_batched(data, window):
+    keys, vals = data
+    stream = _mixed_stream(keys, 1500, seed=13)
+
+    def run_hand(store):
+        for w0 in range(0, len(stream), window):
+            win = stream[w0:w0 + window]
+            by = {"get": [], "update": [], "insert": []}
+            for op, k, v, t in win:
+                by[op].append((k, v))
+            if by["get"]:
+                store.get_batch(np.asarray([k for k, _ in by["get"]],
+                                           np.uint64))
+            if by["update"]:
+                store.update_batch(
+                    np.asarray([k for k, _ in by["update"]], np.uint64),
+                    np.asarray([v for _, v in by["update"]], np.uint64))
+            if by["insert"]:
+                store.insert_batch(
+                    np.asarray([v for _, v in by["insert"]], np.uint64),
+                    np.asarray([k for k, _ in by["insert"]], np.uint64))
+
+    def run_piped(store):
+        for op, k, v, t in stream:
+            if op == "get":
+                store.submit("get", k)
+            elif op == "update":
+                store.submit("update", k, v)
+            else:
+                store.submit("insert", v, k)
+        store.flush()
+
+    hand = open_store(_spec("outback"), keys, vals)
+    piped = open_store(
+        _spec("outback",
+              batch=BatchPolicy(window=window, order="relaxed")),
+        keys, vals)
+    run_hand(hand)
+    run_piped(piped)
+    assert hand.meter_totals().snapshot() == piped.meter_totals().snapshot()
+
+
+def test_pipelined_mixed_stream_cached_identity(data):
+    """Relaxed-mode pipelining replays the hand-batched call sequence
+    exactly, so even a *cached* store under a mixed read/write stream
+    (YCSB-A-like: hazards abound) ends with byte-identical meters and
+    cache state."""
+    keys, vals = data
+    stream = _mixed_stream(keys, 1200, seed=29)
+    budget = 1 << 15
+    hand = open_store(_spec("outback", cache_budget_bytes=budget),
+                      keys, vals)
+    piped = open_store(
+        _spec("outback", cache_budget_bytes=budget,
+              batch=BatchPolicy(window=256, order="relaxed")),
+        keys, vals)
+    for w0 in range(0, len(stream), 256):
+        win = stream[w0:w0 + 256]
+        by = {"get": [], "update": [], "insert": []}
+        for op, k, v, t in win:
+            by[op].append((k, v))
+        if by["get"]:
+            hand.get_batch(np.asarray([k for k, _ in by["get"]], np.uint64))
+        if by["update"]:
+            hand.update_batch(
+                np.asarray([k for k, _ in by["update"]], np.uint64),
+                np.asarray([v for _, v in by["update"]], np.uint64))
+        if by["insert"]:
+            hand.insert_batch(
+                np.asarray([v for _, v in by["insert"]], np.uint64),
+                np.asarray([k for k, _ in by["insert"]], np.uint64))
+    for op, k, v, t in stream:
+        if op == "get":
+            piped.submit("get", k)
+        elif op == "update":
+            piped.submit("update", k, v)
+        else:
+            piped.submit("insert", v, k)
+    piped.flush()
+    assert hand.meter_totals().snapshot() == piped.meter_totals().snapshot()
+    hs, ps = hand.cache.stats, piped.cache.stats
+    assert (hs.hits, hs.neg_hits, hs.admitted, hs.evicted) == \
+        (ps.hits, ps.neg_hits, ps.admitted, ps.evicted)
+
+
+def test_pipelined_cache_state_identical_to_hand_batched(data):
+    """With a CN cache attached, a hazard-free pipelined stream leaves the
+    cache in exactly the hand-batched state (same hits, same admissions,
+    same follow-up behaviour)."""
+    keys, vals = data
+    budget = 1 << 16
+    rng = np.random.default_rng(7)
+    qs = [keys[rng.integers(0, N // (i + 1), 256)] for i in range(8)]
+
+    hand = open_store(_spec("outback", cache_budget_bytes=budget),
+                      keys, vals)
+    piped = open_store(
+        _spec("outback", cache_budget_bytes=budget,
+              batch=BatchPolicy(window=256, order="strict")),
+        keys, vals)
+    for q in qs:
+        hand.get_batch(q)
+        piped.submit("get", q)  # window == |q|: flushes as one batch
+    piped.flush()
+    assert hand.meter_totals().snapshot() == piped.meter_totals().snapshot()
+    hs, ps = hand.cache.stats, piped.cache.stats
+    assert (hs.hits, hs.neg_hits, hs.admitted) == \
+        (ps.hits, ps.neg_hits, ps.admitted)
+    # identical future behaviour: one more identical batch, same deltas
+    hand.get_batch(qs[0])
+    piped.get_batch(qs[0])
+    assert hand.meter_totals().snapshot() == piped.meter_totals().snapshot()
+
+
+# --------------------------------------------------- doorbell -> repro.net
+def test_flushes_map_onto_doorbell_windows(data):
+    keys, vals = data
+    tr = Transport()
+    st = open_store(
+        _spec("outback", batch=BatchPolicy(window=128, order="relaxed")),
+        keys, vals, transport=tr)
+    for i in range(0, 1024, 32):
+        st.submit("get", keys[i:i + 32])
+    st.flush()
+    marks = [m for m in tr.trace if isinstance(m, DoorbellMark)]
+    assert len(marks) == 8 and all(m.n_ops == 128 for m in marks)
+    sync = simulate(tr.trace, window=1)
+    pol = simulate(tr.trace, window="policy")
+    deep = simulate(tr.trace, window=128)
+    assert pol.n_ops == sync.n_ops == 1024
+    # the policy window replays like the matching numeric window, and far
+    # from the synchronous one
+    assert pol.seconds < 0.5 * sync.seconds
+    assert abs(pol.seconds - deep.seconds) / deep.seconds < 0.05
+    # determinism: bit-identical on re-run
+    again = simulate(tr.trace, window="policy")
+    assert again.seconds == pol.seconds
+    np.testing.assert_array_equal(again.latencies_us, pol.latencies_us)
+
+
+def test_doorbell_window_closes_after_its_group(data):
+    """Ops recorded *outside* a flush (scalar conveniences) must replay
+    synchronously — a doorbell mark scopes only its own group's ops."""
+    keys, vals = data
+    tr = Transport()
+    st = open_store(
+        _spec("outback", batch=BatchPolicy(window=64, order="relaxed")),
+        keys, vals, transport=tr)
+    st.submit("get", keys[:64])      # one 64-deep doorbell group
+    for k in keys[64:80]:
+        st.get(int(k))               # 16 scalar sync ops, no marks
+    pol = simulate(tr.trace, window="policy")
+    deep = simulate(tr.trace, window=64)
+    sync = simulate(tr.trace, window=1)
+    assert pol.n_ops == 80
+    # the scalar tail is synchronous under "policy": strictly slower than
+    # an all-64-deep replay, strictly faster than an all-sync one
+    assert deep.seconds < pol.seconds < sync.seconds
+
+
+def test_doorbell_marks_count_wire_ops_not_lanes(data):
+    """CN-cache hits never reach the trace; the flush's DoorbellMark must
+    record the wire-bound op count, not the pre-cache lane count."""
+    keys, vals = data
+    tr = Transport()
+    st = open_store(
+        _spec("outback", cache_budget_bytes=1 << 16,
+              batch=BatchPolicy(window=64, order="relaxed")),
+        keys, vals, transport=tr)
+    hot = keys[:64]
+    for _ in range(4):
+        st.submit("get", hot)
+        st.flush()
+    marks = [m for m in tr.trace if isinstance(m, DoorbellMark)]
+    assert len(marks) == 4
+    assert marks[0].n_ops == 64          # cold: every lane hit the wire
+    assert marks[-1].n_ops < 64          # warm: hits absorbed locally
+    # every mark equals the OpEvents recorded inside its group
+    counts, cur = [], None
+    for e in tr.trace:
+        if isinstance(e, DoorbellMark):
+            if cur is not None:
+                counts.append(cur)
+            cur = 0
+        elif cur is not None:
+            cur += 1
+    counts.append(cur)
+    assert counts == [m.n_ops for m in marks]
+
+
+def test_sync_surface_emits_no_marks_for_sync_policy(data):
+    keys, vals = data
+    tr_legacy, tr_stack = Transport(), Transport()
+    legacy = open_store(_spec("outback"), keys, vals, transport=tr_legacy)
+    stack = open_store(_spec("outback"), keys, vals, transport=tr_stack)
+    legacy.get_batch(keys[:64])
+    stack.get_batch(keys[:64])
+    assert not any(isinstance(m, DoorbellMark) for m in tr_stack.trace)
+    assert tr_legacy.trace == tr_stack.trace
+
+
+# ------------------------------------------------------------- session store
+def test_session_store_coalesces_parks():
+    from repro.serve.session_store import KVSessionStore
+    tr = Transport()
+    ss = KVSessionStore(cn_cache_budget_bytes=32 << 10, batch_window=512,
+                        transport=tr)
+    blobs = {rid: bytes([rid % 256]) * (64 + rid) for rid in range(8)}
+    for rid, blob in blobs.items():
+        ss.put(rid, blob)
+    # parks are pending (submitted, not flushed) until a read hazards
+    assert ss.store._n_pending > 0
+    assert ss.get(3) == blobs[3]  # read-after-write hazard -> flush
+    assert ss.store._n_pending == 0
+    for rid, blob in blobs.items():
+        assert ss.get(rid) == blob
+    # re-park + shrink + delete still correct through the pipeline
+    ss.put(3, b"xy")
+    assert ss.get(3) == b"xy"
+    assert ss.delete(3) and ss.get(3) is None
+    m = ss.meter_total()  # flushes pending deletes before reporting
+    assert m.round_trips > 0 and ss.store._n_pending == 0

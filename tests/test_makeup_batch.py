@@ -1,0 +1,105 @@
+"""Batched Makeup-Get parity (ROADMAP "Batched Makeup-Get").
+
+``OutbackShard._resolve_makeups`` now runs the §4.3.1 miss path
+vectorised — one CN locate, one ``OverflowCache.lookup_batch`` probe and
+one (m, 4) bucket-slot scan — while the legacy per-lane loop is kept as
+``_resolve_makeups_reference``.  These tests pin the two lane-identical
+under post-``s_slow`` overflow pressure: same answers, same CN seed
+refreshes, byte-identical meter totals and transport traces.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.hashing import split_u64, splitmix64
+from repro.core.outback import OutbackShard
+from repro.core.store import make_uniform_keys
+from repro.net import Transport
+
+N = 4000
+
+
+def _pressured_shard(transport=None):
+    """A shard driven past the §4.4 ``s_slow`` trigger: tight table, small
+    overflow cache, then fresh inserts until overflow pressure is real."""
+    keys = make_uniform_keys(N, 7)
+    vals = splitmix64(keys)
+    sh = OutbackShard(keys, vals, load_factor=0.95, overflow_frac=0.05,
+                      rng_seed=3, transport=transport)
+    fresh = splitmix64(np.arange(1, 600, dtype=np.uint64) + np.uint64(9 << 40))
+    for k in fresh:
+        if sh.must_stop():
+            break
+        sh.insert(int(k), int(splitmix64(np.uint64([k]))[0]))
+    return sh, keys, fresh
+
+
+@pytest.fixture(scope="module")
+def queries():
+    keys = make_uniform_keys(N, 7)
+    fresh = splitmix64(np.arange(1, 600, dtype=np.uint64) + np.uint64(9 << 40))
+    absent = splitmix64(np.arange(1, 64, dtype=np.uint64) + np.uint64(1 << 45))
+    # slot residents + overflow residents + absent keys: every makeup case
+    return np.concatenate([keys[:800], fresh[:400], absent])
+
+
+def test_overflow_lookup_batch_matches_scalar(queries):
+    sh, _, _ = _pressured_shard()
+    assert sh.overflow.size > 20, "workload sized for real overflow pressure"
+    assert sh.needs_resize(), "post-s_slow is the scenario under test"
+    lo, hi = split_u64(queries)
+    addr_b, probes_b = sh.overflow.lookup_batch(lo, hi)
+    for j in range(queries.shape[0]):
+        addr, probes = sh.overflow.lookup(int(lo[j]), int(hi[j]))
+        assert (addr if addr is not None else -1) == addr_b[j]
+        assert probes == probes_b[j]
+
+
+def test_resolve_makeups_matches_reference(queries):
+    tr_vec, tr_ref = Transport(), Transport()
+    a, _, _ = _pressured_shard(transport=tr_vec)
+    b, _, _ = _pressured_shard(transport=tr_ref)
+
+    out_vec = a.get_batch(queries, resolve_makeup=True)
+    raw = b.get_batch(queries, resolve_makeup=False)
+    assert int((~np.asarray(raw[2])).sum()) > 200, \
+        "workload sized for a real makeup wave"
+    out_ref = b._resolve_makeups_reference(queries, *raw, xp=np)
+
+    for got, want in zip(out_vec, out_ref):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # identical accounting: meter totals, trace (cont-attachment order
+    # included), and the §4.3.1 CN seed refreshes
+    assert a.meter.snapshot() == b.meter.snapshot()
+    assert tr_vec.trace == tr_ref.trace
+    np.testing.assert_array_equal(a.cn.seeds, b.cn.seeds)
+
+
+def test_resolve_makeups_skip_mask_respected():
+    sh, keys, _ = _pressured_shard()
+    q = keys[:64]
+    raw = sh.get_batch(q, resolve_makeup=False)
+    before = sh.meter.snapshot()
+    skip = np.ones(q.shape[0], dtype=bool)  # every lane masked out
+    v_lo, v_hi, match = sh._resolve_makeups(q, *raw, xp=np, skip=skip)
+    assert sh.meter.snapshot() == before  # nothing resolved, nothing spent
+    np.testing.assert_array_equal(np.asarray(match), np.asarray(raw[2]))
+
+
+def test_batched_get_through_api_under_pressure(queries):
+    """End-to-end: the api-level resolved Get over a pressured shard equals
+    the scalar protocol answers (overflow residents included)."""
+    from repro.api import StoreSpec, open_store
+    sh, keys, fresh = _pressured_shard()
+    st = open_store(StoreSpec("outback", load_factor=0.95,
+                              params={"overflow_frac": 0.05}, rng_seed=3),
+                    keys, splitmix64(keys))
+    for k in fresh:
+        if st.engine.must_stop():
+            break
+        st.insert(int(k), int(splitmix64(np.uint64([k]))[0]))
+    res = st.get_batch(queries)
+    for j in range(0, queries.shape[0], 37):  # spot-check vs scalar walks
+        want = sh.get(int(queries[j])).value
+        got = int(res.values[j]) if res.found[j] else None
+        assert got == want

@@ -304,12 +304,21 @@ def test_session_store_rides_the_clock():
                         transport=tr)
     blob = bytes(range(256)) * 8
     ss.put(1, blob)
+    # v2: the park is *submitted*, riding the store's BatchPolicy window —
+    # nothing on the (recorded) wire until a doorbell rings
+    assert len(tr) == 0 and ss.store._n_pending > 0
+    ss.flush()
     n_after_put = len(tr)
-    assert n_after_put > 0  # inserts were recorded
+    assert n_after_put > 0  # inserts were recorded at the flush
     assert ss.get(1) == blob
     assert len(tr) > n_after_put  # ...and so were the reads
     res = simulate(tr.trace, clients=4)
     assert res.n_ops == len(tr) and res.percentile_us(50) > 0
+    # the recorded flush replays as one coalesced doorbell window
+    res_pol = simulate(tr.trace, clients=1, window="policy")
+    res_sync = simulate(tr.trace, clients=1, window=1)
+    assert res_pol.n_ops == res_sync.n_ops
+    assert res_pol.seconds < res_sync.seconds
 
 
 def test_trace_segments_wellformed(traces):

@@ -1,0 +1,113 @@
+"""Store-level split timing: scalar vs batched (ROADMAP "Store-level
+split timing").
+
+The batched ``OutbackStore.insert_batch`` re-checks the §4.4 split trigger
+per *chunk* (bounded by ``_insert_chunk_len``: never more than
+``SPLIT_CHECK_CHUNK`` ops, never more than a third of the table's overflow
+capacity), while the scalar stream checks after every insert.  A split can
+therefore land up to one chunk later in the batched stream.  This test
+pins the contract:
+
+* both streams split, at op indices **at most one chunk apart**;
+* the final MN state is identical — same directory depth, same live keys,
+  same answers for every key (original, pre-split and post-split inserts);
+* CN-cache coherence holds through the differently-timed splits;
+* the meter divergence is **bounded by the chunk**: the two runs differ
+  only because ops near the boundary land pre-split in one stream and
+  post-split in the other (frozen FALSE'd bookkeeping + buffered replay),
+  never by more than a chunk's worth of round trips.
+"""
+
+import numpy as np
+
+from repro.api import BatchPolicy, StoreSpec, open_store
+from repro.core.hashing import splitmix64
+from repro.core.store import OutbackStore, make_uniform_keys
+
+N = 3000
+CHUNK = OutbackStore.SPLIT_CHECK_CHUNK
+
+
+def _fresh(n: int) -> np.ndarray:
+    return splitmix64(np.arange(1, n + 1, dtype=np.uint64) + np.uint64(31 << 40))
+
+
+def _drive(batched: bool):
+    keys = make_uniform_keys(N, 11)
+    vals = splitmix64(keys)
+    spec = StoreSpec("outback-dir", load_factor=0.85,
+                     cache_budget_bytes=32 << 10,
+                     batch=BatchPolicy(window=CHUNK, order="relaxed"))
+    st = open_store(spec, keys, vals)
+    fresh = _fresh(2 * N)
+    fvals = splitmix64(fresh)
+    i = 0
+    while not st.engine.resize_events and i < fresh.shape[0]:
+        if batched:
+            st.insert_batch(fresh[i:i + CHUNK], fvals[i:i + CHUNK])
+            i += CHUNK
+        else:
+            for j in range(i, min(i + CHUNK, fresh.shape[0])):
+                st.insert(int(fresh[j]), int(fvals[j]))
+            i += CHUNK
+        st.get_batch(keys[:128])  # keep the CN cache warm across the split
+    assert st.engine.resize_events, "workload sized to force a split"
+    return st, keys, fresh[:i], fvals[:i]
+
+
+def test_split_timing_and_final_state_parity():
+    s_st, keys, s_fresh, s_fvals = _drive(batched=False)
+    b_st, _, b_fresh, _ = _drive(batched=True)
+
+    # ---- split timing: batched lands at most one chunk later -----------
+    ev_s = s_st.engine.resize_events[0]
+    ev_b = b_st.engine.resize_events[0]
+    # both streams interleave one 128-key Get batch per chunk, so op
+    # indices are comparable; the batched trigger is only evaluated at
+    # chunk boundaries (and insert_batch counts its ops up front), so it
+    # may trail the scalar trigger — but never by more than one chunk of
+    # inserts plus the interleaved reads
+    assert ev_b.step >= ev_s.step - CHUNK
+    assert ev_b.step - ev_s.step <= 2 * (CHUNK + 128)
+    # the split happened on (almost) the same table content: the rebuilt
+    # key counts differ by at most the ops of one chunk
+    assert abs(ev_b.table_keys - ev_s.table_keys) <= CHUNK
+
+    # ---- final MN state: same directory shape, same answers ------------
+    assert s_st.engine.global_depth == b_st.engine.global_depth
+    assert len(s_st.engine.tables) == len(b_st.engine.tables)
+    n_ins = min(s_fresh.shape[0], b_fresh.shape[0])
+    probe = np.concatenate([keys, s_fresh[:n_ins]])
+    rs = s_st.get_batch(probe)
+    rb = b_st.get_batch(probe)
+    np.testing.assert_array_equal(rs.found, rb.found)
+    np.testing.assert_array_equal(rs.values, rb.values)
+    # coherence: the CN caches survived their (differently-timed) splits
+    # without serving stale answers — checked against the engine truth
+    for j in range(0, probe.shape[0], 101):
+        want = s_st.engine.get(int(probe[j]))
+        got = int(rs.values[j]) if rs.found[j] else None
+        assert got == want.value
+
+    # ---- documented meter divergence: bounded by the chunk -------------
+    ms = s_st.meter_totals()
+    mb = b_st.meter_totals()
+    # both streams executed the same op multiset up to one chunk of
+    # boundary inserts (frozen FALSE'd + replayed vs accepted directly);
+    # each such op costs at most 2 RTs (FALSE + replay), so the RT gap is
+    # bounded by ~2 chunks of inserts plus one interleaved read batch
+    assert abs(ms.round_trips - mb.round_trips) <= 2 * (CHUNK + 128), (
+        ms.round_trips, mb.round_trips)
+    # and neither run lost ops: op counts line up within the same bound
+    assert abs(ms.ops - mb.ops) <= 2 * (CHUNK + 128)
+
+
+def test_batched_split_chunk_never_breaches_overflow_headroom():
+    """The chunk the split check bounds is a third of the table's overflow
+    capacity at most — a batch cannot sail past ``s_stop`` between two
+    checks (regression guard for the §4.4 hard limit)."""
+    keys = make_uniform_keys(1024, 3)
+    st = OutbackStore(keys, splitmix64(keys), load_factor=0.85)
+    table = st.tables[0]
+    assert st._insert_chunk_len(table) <= max(1, int(0.35 * table.overflow.cap))
+    assert st._insert_chunk_len(table) <= OutbackStore.SPLIT_CHECK_CHUNK
