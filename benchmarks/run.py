@@ -40,6 +40,9 @@ def main() -> None:
                          "ycsb (pipelined vs hand-batched vs scalar write "
                          "mixes, BatchPolicy window sweep + Ludo "
                          "build/resize-rebuild microbench), "
+                         "faults (K=2 crash/failover: p999 through a "
+                         "seeded MN crash, availability curve, zero lost "
+                         "acked writes, dormant-plane meter identity), "
                          "kernel_paged, kernel_lookup, kernel_pagetable")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero if any suite produced an ERROR row")
@@ -51,7 +54,8 @@ def main() -> None:
                          "window (default: the store policy's 1024)")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, net_bench, paper_figs, ycsb_bench
+    from benchmarks import (faults_bench, kernel_bench, net_bench,
+                            paper_figs, ycsb_bench)
     from benchmarks.common import emit
 
     n = 100_000 if args.quick else 300_000
@@ -73,6 +77,7 @@ def main() -> None:
         ("scale", lambda: net_bench.scale_suite(args.quick)),
         ("ycsb", lambda: ycsb_bench.ycsb_suite(args.quick,
                                                window=args.ycsb_window)),
+        ("faults", lambda: faults_bench.faults_suite(args.quick)),
         ("kernel_paged", kernel_bench.paged_attention_traffic),
         ("kernel_lookup", kernel_bench.ludo_lookup_throughput),
         ("kernel_pagetable", kernel_bench.page_table_memory),

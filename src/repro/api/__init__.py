@@ -12,7 +12,14 @@ The seam between Outback's engines and everything that drives them:
 * :mod:`repro.api.stack` — the CN-side middleware stack
   (``Pipeline → Meter → CNCache → Transport``), assembled once per store;
 * :mod:`repro.api.registry` — :class:`StoreSpec` (JSON-round-trippable
-  config) and :func:`open_store`, covering every store kind in the repo.
+  config) and :func:`open_store`, covering every store kind in the repo;
+* :mod:`repro.api.replication` — the failure plane's CN half:
+  :class:`ReplicaSetAdapter` (K-way replication of the memory-heavy MN
+  component, CN-driven failover and resync) and the lease guard, driven
+  by a deterministic :class:`repro.net.FaultSchedule` carried on the spec
+  (``StoreSpec(kind, replicas=2, faults=...)``); the stack inserts its
+  :class:`repro.api.stack.RetryLayer` (BACKOFF/retry with jittered
+  backoff) above it.  See ``docs/FAILURE_MODEL.md``.
 
 The benchmarks (``benchmarks/``), the serving session store
 (``repro.serve.session_store``), and CI's api-surface lane all construct
@@ -33,8 +40,9 @@ from repro.api.protocol import (OP_KINDS, KVStore, OpResult,
 from repro.api.registry import (SpecError, StoreSpec, open_store,
                                 register_store, registered_kinds,
                                 registry_docs)
-from repro.api.stack import (CNCacheLayer, CNStack, MeterLayer, StoreLayer,
-                             TransportBinding)
+from repro.api.replication import ReplicaSetAdapter, ShardLease
+from repro.api.stack import (CNCacheLayer, CNStack, MeterLayer, RetryLayer,
+                             StoreLayer, TransportBinding)
 
 __all__ = [
     "BatchPolicy",
@@ -48,6 +56,9 @@ __all__ = [
     "PipelineLayer",
     "PipelineStats",
     "PipelinedKVStore",
+    "ReplicaSetAdapter",
+    "RetryLayer",
+    "ShardLease",
     "SpecError",
     "StoreAdapter",
     "StoreLayer",

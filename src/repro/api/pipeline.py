@@ -146,6 +146,9 @@ class PipelineStats:
     combined_reads: int = 0   # read lanes served from the write buffer
     batch_calls: int = 0      # engine *_batch calls issued by flushes
     dropped_completions: int = 0  # handles aged out of the poll() backlog
+    unavailable_lanes: int = 0  # lanes answered degraded ("unavailable")
+    #   by the retry stage after its budget ran out — in-flight OpHandles
+    #   still resolve (found=False), the FlexChain answer-don't-block idiom
 
 
 # How many completed-but-unpolled handles the pipeline retains for
@@ -501,12 +504,16 @@ class PipelineLayer(StoreLayer):
 
     def _execute(self, kind: str, keys, values) -> OpResult:
         if kind == "get":
-            return self.inner.get_batch(keys)
-        if kind == "insert":
-            return self.inner.insert_batch(keys, values)
-        if kind == "update":
-            return self.inner.update_batch(keys, values)
-        return self.inner.delete_batch(keys)
+            res = self.inner.get_batch(keys)
+        elif kind == "insert":
+            res = self.inner.insert_batch(keys, values)
+        elif kind == "update":
+            res = self.inner.update_batch(keys, values)
+        else:
+            res = self.inner.delete_batch(keys)
+        if res.statuses is not None:
+            self.stats.unavailable_lanes += res.statuses.count("unavailable")
+        return res
 
     # --------------------------------------- v1 sync surface (deprecated)
     # The call-and-wait ops are kept as thin conveniences over the

@@ -54,8 +54,14 @@ class OpResult:
 
     values: np.ndarray  # uint64, zeros where ``found`` is False
     found: np.ndarray  # bool: key present (Get) / op succeeded (mutations)
-    # mutation resolution cases ('slot' | 'reseed' | 'overflow' | 'update'
-    # | 'frozen' | 'ok' | 'miss'), one per lane; None for Gets
+    # per-lane resolution cases; None for fault-free Gets.  Mutations use
+    # ('slot' | 'reseed' | 'overflow' | 'update' | 'frozen' | 'ok' |
+    # 'miss'); the failure plane (repro.api.replication) adds two more on
+    # any op kind: 'backoff' — the serving MN was unreachable and the
+    # retry stage will re-issue (callers below the RetryLayer see it;
+    # callers above never do) — and 'unavailable' — the retry budget is
+    # exhausted and the lane is answered degraded (found=False, no state
+    # changed), the FlexChain idiom: stores answer, they don't block.
     statuses: tuple[str, ...] | None = None
     # ---- per-call attribution (meter deltas; see stack.MeterLayer) ----
     round_trips: int = 0
@@ -64,6 +70,10 @@ class OpResult:
     makeups: int = 0  # lanes that took the §4.3.1 Makeup-Get continuation
     cache_hits: int = 0
     cache_neg_hits: int = 0
+    # ---- failure-plane attribution (zero on the no-fault path) ----
+    retries: int = 0    # lanes re-issued by the retry stage on this call
+    backoffs: int = 0   # BACKOFF answers absorbed before this call resolved
+    failovers: int = 0  # primary switches this call rode through
 
     def __len__(self) -> int:
         return int(self.found.shape[0])
@@ -92,6 +102,8 @@ def pack_result(v_lo, v_hi, match) -> OpResult:
 
 
 def status_result(statuses: tuple[str, ...], ok: np.ndarray) -> OpResult:
+    """Build a mutation OpResult from per-lane case strings + ok mask
+    (zero values — mutations don't return data)."""
     return OpResult(values=np.zeros(len(statuses), np.uint64),
                     found=np.asarray(ok, bool), statuses=statuses)
 

@@ -38,16 +38,24 @@ import numpy as np
 
 from repro.api import adapters
 from repro.api.pipeline import BatchPolicy
+from repro.api.replication import ReplicaSetAdapter
 from repro.api.stack import CNStack, TransportBinding
 from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
 from repro.core.cn_cache import CNKeyCache
 from repro.core.outback import OutbackShard
 from repro.core.sharded_kvs import build_sharded
 from repro.core.store import OutbackStore
+from repro.net.faults import FaultPlane, FaultSchedule
 
 
 class SpecError(ValueError):
     """A StoreSpec that cannot be built: unknown kind / param / value."""
+
+
+# Kinds whose engines export the mn_state()/install_mn_state() replication
+# surface (the memory-heavy MN half is shippable); replicas > 1 and fault
+# schedules are restricted to these.
+_REPLICABLE_KINDS = frozenset(("outback", "outback-dir"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,12 +70,25 @@ class StoreSpec:
     # its JSON dict); None -> the synchronous v1 behaviour (window=1)
     batch: BatchPolicy | None = None
     params: dict = dataclasses.field(default_factory=dict)  # kind-specific
+    # failure plane (repro.net.faults / repro.api.replication): K-way
+    # replication of the MN half, and a deterministic fault schedule
+    # (FaultSchedule or its JSON dict); the defaults (1, None) build the
+    # exact pre-failure-plane store, so old spec JSON keeps parsing and
+    # no-fault meter totals stay byte-identical
+    replicas: int = 1
+    faults: FaultSchedule | None = None
 
     def __post_init__(self):
         if isinstance(self.batch, dict):  # JSON round-trip normalisation
             try:
                 object.__setattr__(self, "batch",
                                    BatchPolicy.from_json_dict(self.batch))
+            except ValueError as e:
+                raise SpecError(str(e)) from e
+        if isinstance(self.faults, dict):
+            try:
+                object.__setattr__(self, "faults",
+                                   FaultSchedule.from_json_dict(self.faults))
             except ValueError as e:
                 raise SpecError(str(e)) from e
 
@@ -78,7 +99,10 @@ class StoreSpec:
                 "cache_budget_bytes": self.cache_budget_bytes,
                 "batch": (None if self.batch is None
                           else self.batch.to_json_dict()),
-                "params": dict(self.params)}
+                "params": dict(self.params),
+                "replicas": self.replicas,
+                "faults": (None if self.faults is None
+                           else self.faults.to_json_dict())}
 
     def to_json(self) -> str:
         return json.dumps(self.to_json_dict(), sort_keys=True)
@@ -123,6 +147,28 @@ class StoreSpec:
                 self.batch.validate()
             except ValueError as e:
                 raise SpecError(str(e)) from e
+        if not isinstance(self.replicas, int) or self.replicas < 1:
+            raise SpecError(f"replicas must be an int >= 1, "
+                            f"got {self.replicas!r}")
+        if ((self.replicas > 1 or self.faults is not None)
+                and self.kind not in _REPLICABLE_KINDS):
+            raise SpecError(
+                f"replication/faults need a kind exporting mn_state "
+                f"(one of {sorted(_REPLICABLE_KINDS)}), got {self.kind!r}")
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultSchedule):
+                raise SpecError(f"faults must be a FaultSchedule (or its "
+                                f"JSON dict), got "
+                                f"{type(self.faults).__name__}")
+            try:
+                self.faults.validate()
+            except ValueError as e:
+                raise SpecError(str(e)) from e
+            for ev in self.faults.events:
+                if ev.mn >= self.replicas:
+                    raise SpecError(
+                        f"fault event targets MN {ev.mn} but the spec "
+                        f"deploys {self.replicas} replica(s)")
         return reg
 
     def merged_params(self) -> dict:
@@ -159,10 +205,14 @@ def register_store(name: str, factory, *, params=(), defaults=None,
 
 
 def registered_kinds() -> tuple[str, ...]:
+    """All registered kind names, sorted — the exact strings
+    :class:`StoreSpec` accepts as ``kind``."""
     return tuple(sorted(_REGISTRY))
 
 
 def registry_docs() -> dict[str, str]:
+    """``{kind: one-line doc}`` for every registered kind (the source of
+    the README's kind table)."""
     return {k: _REGISTRY[k].doc for k in registered_kinds()}
 
 
@@ -173,8 +223,18 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
     ``transport`` an optional ``repro.net.Transport`` bound below the
     engine as the stack's recording stage.  Returns a
     :class:`repro.api.protocol.PipelinedKVStore`
-    (Pipeline → Meter → [CNCache →] adapter), with the pipeline stage
-    shaped by ``spec.batch`` (synchronous when the spec carries none).
+    (Pipeline → Meter → [CNCache →] [Retry →] adapter), with the pipeline
+    stage shaped by ``spec.batch`` (synchronous when the spec carries
+    none).
+
+    When the spec carries ``replicas > 1`` or a ``faults`` schedule, the
+    factory is invoked once per replica (same spec + seed ⇒ identical
+    twins) and the set is wrapped in a
+    :class:`repro.api.replication.ReplicaSetAdapter` driven by one
+    :class:`repro.net.faults.FaultPlane`; the stack then inserts its
+    :class:`repro.api.stack.RetryLayer` above it.  A replicas-only spec
+    (no schedule) gets a dormant plane with leasing off, so its meter
+    totals match the unreplicated store byte-for-byte.
     """
     reg = spec.validate()
     keys = np.asarray(keys, dtype=np.uint64)
@@ -183,11 +243,20 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
         raise SpecError(f"keys/values shape mismatch: "
                         f"{keys.shape} vs {values.shape}")
     adapter = reg.factory(spec, keys, values, transport)
+    retry = None
+    if spec.replicas > 1 or spec.faults is not None:
+        group = [adapter] + [reg.factory(spec, keys, values, transport)
+                             for _ in range(spec.replicas - 1)]
+        plane = FaultPlane(spec.faults if spec.faults is not None
+                           else FaultSchedule(lease_term_ops=0))
+        adapter = ReplicaSetAdapter(group, spec, plane, transport=transport)
+        retry = plane
     cache = (CNKeyCache(spec.cache_budget_bytes)
              if spec.cache_budget_bytes else None)
     stack = CNStack(cache=cache,
                     transport_binding=TransportBinding(transport),
-                    policy=spec.batch)
+                    policy=spec.batch,
+                    retry=retry)
     return stack.assemble(adapter)
 
 

@@ -1,0 +1,344 @@
+"""K-way replication of the memory-heavy MN component, with CN-driven
+failover (ISSUE 6 / ROADMAP direction 2).
+
+Outback's split design makes replication cheap to reason about: the
+compute-heavy locator lives on the CN, so replicating the store means
+replicating only the **memory-heavy MN half** — slot arrays + ``seeds_mn``,
+the KV heap, and the overflow cache (``OutbackShard.mn_state``).  The
+:class:`ReplicaSetAdapter` here wraps K identically-built engine adapters
+(same spec + rng seed ⇒ identical initial state; engine construction never
+meters, so the trace stays clean) behind the ordinary ``KVStore`` surface:
+
+* **Reads** go to the primary replica only (1 RT, unchanged profile).
+* **Writes** are CN-driven multicast: the CN posts the mutation to every
+  *live* replica (K wire ops — each replica's meter counts its copy, the
+  honest cost of K-safety).  A write is **acknowledged iff applied at
+  ≥ 1 live replica**, which with K ≥ 2 yields the zero-lost-acked-writes
+  guarantee the ``faults`` bench suite asserts: any single crash leaves a
+  live copy of every acked write.
+* **Crash windows** (``FaultPlane.crash_open``) make calls that need a
+  dead replica answer whole-call ``"backoff"`` — no wire traffic, no state
+  change — for the :class:`repro.api.stack.RetryLayer` above to absorb
+  (retry, jittered backoff, failover).  DINOMO's ownership-partitioned
+  replication is the reference design (PAPERS.md); FlexChain's BACKOFF
+  messages are the degraded-mode idiom (SNIPPETS.md).
+* **Restarts** are detected on the op clock: the first call after a
+  replica's crash window closes re-installs the full MN image from a live
+  replica (``install_mn_state``), charged as one one-sided bulk READ of
+  ``mn_state_bytes`` — ownership moves in O(state shipped), not O(ops
+  missed).
+* **Leases** gate every use of a replica: the CN renews per
+  ``FaultSchedule.lease_term_ops`` (one attached small RT, heartbeat
+  style), and failover first waits out the dead primary's lease
+  (``lease_wait_us``) so two CNs can never both believe they own writes.
+  The same guard object is installed as the engines' ``lease`` hook so a
+  Makeup-Get seed refresh — the one place a CN *learns* MN state —
+  revalidates at the transport boundary.
+
+Determinism: every decision comes from the :class:`repro.net.faults`
+oracle (op-clock windows + seeded draws); meter identity on the no-fault
+path is byte-for-byte because a dormant plane never fires and all new
+meter fields default to zero.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api.protocol import OpResult, status_result
+from repro.core.meter import CommMeter, MSG_BYTES
+from repro.net.faults import FaultPlane
+
+BACKOFF = "backoff"
+UNAVAILABLE = "unavailable"
+
+
+def backoff_result(n: int) -> OpResult:
+    """A whole-call BACKOFF answer: nothing found, nothing changed."""
+    return status_result((BACKOFF,) * int(n), np.zeros(int(n), bool))
+
+
+def is_backoff(res: OpResult) -> bool:
+    """True when a result is a retryable whole-call BACKOFF answer."""
+    return res.statuses is not None and len(res.statuses) > 0 \
+        and res.statuses[0] == BACKOFF
+
+
+class ShardLease:
+    """The engines' ``lease`` hook: revalidate before trusting MN state.
+
+    Installed on every Outback table of every replica; fires when a
+    Makeup-Get is about to refresh CN-cached seeds from MN memory.  If
+    the lease on that replica is due, one small two-sided RT is attached
+    to the op being served (heartbeat piggyback) and the grant recorded
+    — at most one renewal per op-clock tick, so the scalar and batched
+    makeup paths meter identically.
+    """
+
+    def __init__(self, plane: FaultPlane, mn: int):
+        self.plane = plane
+        self.mn = mn
+
+    def on_seed_refresh(self, shard) -> None:
+        if self.plane.lease_due(self.mn):
+            shard.meter.add(0, rts=1, req=MSG_BYTES, resp=MSG_BYTES,
+                            attach=True)
+            shard.meter.lease_renewals += 1
+            self.plane.lease_granted(self.mn)
+
+
+class ReplicaSetAdapter:
+    """K identically-built adapters behind one ``KVStore`` surface.
+
+    Sits where a single engine adapter would in the stack (below the
+    retry stage); ``.engine`` resolves to the current primary's engine so
+    benchmarks keep timing internals.  ``meter_totals`` merges the CN-side
+    ledger with every replica's meters (the ``ShardedAdapter`` precedent),
+    so multicast writes honestly report K× wire cost.
+    """
+
+    def __init__(self, replicas: list, spec, plane: FaultPlane,
+                 transport=None):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas = list(replicas)
+        self.spec = spec
+        self.plane = plane
+        self.transport = transport
+        self.primary = 0
+        self._meter = CommMeter()  # CN-side ledger (fault attribution)
+        self._needs_resync: set[int] = set()
+        self._install_leases()
+
+    # ----------------------------------------------------- uniform surface
+    @property
+    def kind(self):
+        return self.replicas[0].kind
+
+    @property
+    def verifies_keys(self):
+        return self.replicas[0].verifies_keys
+
+    @property
+    def cache_hit_savings(self):
+        return self.replicas[0].cache_hit_savings
+
+    @property
+    def cache_neg_savings(self):
+        return self.replicas[0].cache_neg_savings
+
+    @property
+    def engine(self):
+        return self.replicas[self.primary].engine
+
+    @property
+    def meter(self) -> CommMeter:
+        return self._meter
+
+    def meter_totals(self) -> CommMeter:
+        m = CommMeter()
+        m.merge(self._meter)
+        for r in self.replicas:
+            m.merge(r.meter_totals())
+        return m
+
+    def reset_meters(self) -> None:
+        self._meter.reset()
+        for r in self.replicas:
+            r.reset_meters()
+
+    def bind_cache(self, cache) -> None:
+        for r in self.replicas:
+            r.bind_cache(cache)
+
+    # ------------------------------------------------------- fault machinery
+    def _install_leases(self) -> None:
+        """Hang a ShardLease off every replica engine that supports it."""
+        if self.plane.schedule.lease_term_ops <= 0:
+            return
+        for i, r in enumerate(self.replicas):
+            guard = ShardLease(self.plane, i)
+            eng = r.engine
+            if hasattr(eng, "set_lease"):        # directory store
+                eng.set_lease(guard)
+            elif hasattr(eng, "lease"):          # single shard
+                eng.lease = guard
+
+    def _live(self) -> list[int]:
+        return [i for i in range(len(self.replicas))
+                if not self.plane.crash_open(i)]
+
+    def _pre_call(self, n: int) -> None:
+        """Per-protocol-call housekeeping on the op clock.
+
+        Advances the clock, announces newly-opened crash/NIC windows to
+        the trace (FaultMarks), applies open delay windows as a CN-side
+        wait, and resyncs any replica whose crash window just closed.
+        """
+        self.plane.tick(max(1, int(n)))
+        if self.transport is not None:
+            for ev in self.plane.new_marks():
+                self.transport.mark_fault(ev.kind, mn=ev.mn % len(self.replicas),
+                                          down_s=ev.down_s, factor=ev.factor)
+        for i in range(len(self.replicas)):
+            if self.plane.crash_open(i):
+                self._needs_resync.add(i)
+                self.plane.lease_revoked(i)  # a dead MN's lease lapses
+        d_us = self.plane.delay_us()
+        if d_us > 0:
+            self._charge_wait(d_us)
+        for i in sorted(self._needs_resync):
+            if not self.plane.crash_open(i):
+                self._resync(i)
+                self._needs_resync.discard(i)
+
+    def _charge_wait(self, wait_us: float) -> None:
+        self._meter.fault_wait_us += int(round(wait_us))
+        if self.transport is not None:
+            self.transport.add_wait(wait_us * 1e-6)
+
+    def _resync(self, i: int) -> None:
+        """Re-install replica ``i``'s MN half from a live replica.
+
+        Charged as one one-sided bulk READ of the state image (the
+        restarted MN pulls from a peer, DINOMO-style); the CN then treats
+        the replica as live again.  Raises nothing on engines without
+        ``mn_state`` — the registry only allows replication on kinds that
+        export it.
+        """
+        donors = [j for j in self._live() if j != i]
+        if not donors:
+            return  # nobody to copy from yet; retry on a later call
+        src = self.replicas[donors[0] if self.primary not in donors
+                            else self.primary].engine
+        dst = self.replicas[i].engine
+        dst.install_mn_state(src.mn_state())
+        if self.transport is not None:
+            self.transport.current_mn = i
+        self.replicas[i].meter.add(1, rts=1, req=16,
+                                   resp=int(src.mn_state_bytes()),
+                                   one_sided=True)
+        if self.transport is not None:
+            self.transport.current_mn = 0
+        self._meter.resyncs += 1
+
+    def _lease_check(self, i: int) -> None:
+        """Transport-boundary lease gate: renew before using replica ``i``."""
+        if self.plane.lease_due(i):
+            r = self.replicas[i]
+            r.meter.add(0, rts=1, req=MSG_BYTES, resp=MSG_BYTES, attach=True)
+            r.meter.lease_renewals += 1
+            self._meter.lease_renewals += 1
+            self.plane.lease_granted(i)
+
+    # ------------------------------------------------------------- failover
+    def can_failover(self) -> bool:
+        """Any live replica other than the current primary?"""
+        return any(i != self.primary for i in self._live())
+
+    def failover(self) -> bool:
+        """Switch reads to the next live replica (CN-driven).
+
+        Waits out the dead primary's lease first (``lease_wait_us`` —
+        conservative full drain so no two owners coexist), revokes it,
+        and moves the primary cursor.  The new primary's lease is granted
+        by the next call's :meth:`_lease_check`.  Returns False when no
+        live replica exists (the retry stage keeps backing off).
+        """
+        live = [i for i in self._live() if i != self.primary]
+        if not live:
+            return False
+        nxt = min(live)
+        if self.plane.schedule.lease_term_ops > 0:
+            self._charge_wait(self.plane.schedule.lease_wait_us)
+        self.plane.lease_revoked(self.primary)
+        self.primary = nxt
+        self._meter.failovers += 1
+        return True
+
+    # ------------------------------------------------------------ internals
+    def _serve_read(self, n: int, call) -> OpResult:
+        """Route a read to the primary; BACKOFF when it is dead/dropped."""
+        self._pre_call(n)
+        p = self.primary
+        if self.plane.crash_open(p):
+            self._meter.backoffs += n
+            return backoff_result(n)
+        if self.plane.drop_now():
+            self._meter.drops += n
+            self._meter.backoffs += n
+            return backoff_result(n)
+        self._lease_check(p)
+        if self.transport is not None:
+            self.transport.current_mn = p
+        try:
+            return call(self.replicas[p])
+        finally:
+            if self.transport is not None:
+                self.transport.current_mn = 0
+
+    def _serve_write(self, n: int, call) -> OpResult:
+        """Multicast a mutation to every live replica.
+
+        The answer comes from the lowest-indexed live replica (replicas
+        are deterministic twins, so any live copy answers identically);
+        dead replicas are marked for resync.  Acknowledged ⇔ applied at
+        ≥ 1 live replica.
+        """
+        self._pre_call(n)
+        live = self._live()
+        if not live:
+            self._meter.backoffs += n
+            return backoff_result(n)
+        if self.plane.drop_now():
+            self._meter.drops += n
+            self._meter.backoffs += n
+            return backoff_result(n)
+        self._lease_check(live[0])
+        res = None
+        try:
+            for i in live:
+                if self.transport is not None:
+                    self.transport.current_mn = i
+                r = call(self.replicas[i])
+                if i == live[0]:
+                    res = r
+        finally:
+            if self.transport is not None:
+                self.transport.current_mn = 0
+        return res
+
+    # ------------------------------------------------------------- protocol
+    def get(self, key: int) -> OpResult:
+        return self._serve_read(1, lambda r: r.get(key))
+
+    def get_batch(self, keys, xp=np, *,
+                  resolve_makeup: bool | None = None) -> OpResult:
+        return self._serve_read(
+            len(keys), lambda r: r.get_batch(keys, xp,
+                                             resolve_makeup=resolve_makeup))
+
+    def insert(self, key: int, value: int) -> OpResult:
+        return self._serve_write(1, lambda r: r.insert(key, value))
+
+    def update(self, key: int, value: int) -> OpResult:
+        return self._serve_write(1, lambda r: r.update(key, value))
+
+    def delete(self, key: int) -> OpResult:
+        return self._serve_write(1, lambda r: r.delete(key))
+
+    def insert_batch(self, keys, values) -> OpResult:
+        return self._serve_write(
+            len(keys), lambda r: r.insert_batch(keys, values))
+
+    def update_batch(self, keys, values) -> OpResult:
+        return self._serve_write(
+            len(keys), lambda r: r.update_batch(keys, values))
+
+    def delete_batch(self, keys) -> OpResult:
+        return self._serve_write(
+            len(keys), lambda r: r.delete_batch(keys))
+
+
+__all__ = ["BACKOFF", "UNAVAILABLE", "ReplicaSetAdapter", "ShardLease",
+           "backoff_result", "is_backoff"]

@@ -29,9 +29,16 @@ legacy path used (each adapter declares its own protocol's
 costs), and cache hits never reach the transport trace — exactly as
 before.
 
-Adding the next cross-cutting layer (admission control, replication,
-tiering) means writing one :class:`StoreLayer` subclass and inserting it
-in :meth:`CNStack.assemble` — not editing ten constructors.
+The failure plane (ISSUE 6) added the first such layer below the cache:
+:class:`RetryLayer` absorbs the ``"backoff"`` answers a
+``repro.api.replication.ReplicaSetAdapter`` emits while an MN replica is
+down — timeout + seeded jittered backoff, CN-driven failover after
+``failover_after`` dead-primary rounds, and a degraded ``"unavailable"``
+answer once the retry budget is spent (FlexChain's idiom: answer, never
+block).  The assembled order with every stage active reads
+``Pipeline → Meter → CNCache → Retry → ReplicaSet → adapters (→
+Transport)``, so in-flight ``OpHandle``s resolve *through* a failover and
+the CN cache only ever learns resolved truths.
 """
 
 from __future__ import annotations
@@ -54,6 +61,82 @@ class StoreLayer:
 
     def __getattr__(self, name):
         return getattr(self.inner, name)
+
+
+class RetryLayer(StoreLayer):
+    """BACKOFF/retry stage: the recovery protocol above a replica set.
+
+    Wraps every protocol op in a retry loop: a ``"backoff"`` answer (the
+    serving MN is crashed, or the request was dropped on the wire) costs
+    one completion timeout plus a seeded jittered backoff
+    (``FaultPlane.backoff_us`` — deterministic, replayable), charged to
+    the meter as ``fault_wait_us`` and to the trace as a posting stall on
+    the retried op.  After ``failover_after`` rounds against a *crashed*
+    primary the layer drives ``inner.failover()``; once ``max_retries``
+    rounds are spent it answers degraded — ``"unavailable"`` statuses,
+    ``found=False``, no exception, no state change — so callers (and
+    pipelined ``OpHandle``s) always resolve.  On the no-fault path the
+    wrap is a pure pass-through: no meter event, no trace event.
+    """
+
+    def __init__(self, inner, plane, transport=None):
+        super().__init__(inner)
+        self.plane = plane
+        self.transport = transport
+
+    def _with_retry(self, n: int, call) -> OpResult:
+        from repro.api.replication import UNAVAILABLE, is_backoff
+        res = call()
+        if not is_backoff(res):
+            return res
+        sched = self.plane.schedule
+        meter = self.inner.meter
+        for attempt in range(sched.max_retries):
+            wait_us = sched.timeout_us + self.plane.backoff_us(attempt)
+            meter.fault_wait_us += int(round(wait_us))
+            if self.transport is not None:
+                self.transport.add_wait(wait_us * 1e-6)
+            if (attempt + 1 >= sched.failover_after
+                    and self.plane.crash_open(self.inner.primary)
+                    and self.inner.can_failover()):
+                self.inner.failover()
+            meter.retries += n
+            res = call()
+            if not is_backoff(res):
+                return res
+        return OpResult(values=np.zeros(n, np.uint64),
+                        found=np.zeros(n, bool),
+                        statuses=(UNAVAILABLE,) * n)
+
+    def get(self, key: int) -> OpResult:
+        return self._with_retry(1, lambda: self.inner.get(key))
+
+    def get_batch(self, keys, xp=np, *,
+                  resolve_makeup: bool | None = None) -> OpResult:
+        return self._with_retry(
+            len(keys), lambda: self.inner.get_batch(
+                keys, xp, resolve_makeup=resolve_makeup))
+
+    def insert(self, key: int, value: int) -> OpResult:
+        return self._with_retry(1, lambda: self.inner.insert(key, value))
+
+    def update(self, key: int, value: int) -> OpResult:
+        return self._with_retry(1, lambda: self.inner.update(key, value))
+
+    def delete(self, key: int) -> OpResult:
+        return self._with_retry(1, lambda: self.inner.delete(key))
+
+    def insert_batch(self, keys, values) -> OpResult:
+        return self._with_retry(
+            len(keys), lambda: self.inner.insert_batch(keys, values))
+
+    def update_batch(self, keys, values) -> OpResult:
+        return self._with_retry(
+            len(keys), lambda: self.inner.update_batch(keys, values))
+
+    def delete_batch(self, keys) -> OpResult:
+        return self._with_retry(
+            len(keys), lambda: self.inner.delete_batch(keys))
 
 
 class CNCacheLayer(StoreLayer):
@@ -84,7 +167,8 @@ class CNCacheLayer(StoreLayer):
             return OpResult(values=np.zeros(1, np.uint64),
                             found=np.asarray([False]))
         res = self.inner.get(key)
-        self.cache.fill(int(key), res.value)
+        if res.statuses is None:  # degraded answers teach the cache nothing
+            self.cache.fill(int(key), res.value)
         return res
 
     def get_batch(self, keys, xp=np, *,
@@ -102,6 +186,7 @@ class CNCacheLayer(StoreLayer):
                   | np.asarray(c_vlo, np.uint64))
         found = hit.copy()
         miss = ~hit & ~neg
+        statuses = None
         if miss.any():
             # default: misses go down the stack with the full §4.3.1
             # resolution so the cache (and the caller) only ever learn
@@ -113,6 +198,24 @@ class CNCacheLayer(StoreLayer):
                                        resolve_makeup=resolve_makeup)
             values[miss] = sub.values
             found[miss] = sub.found
+            if sub.statuses is not None:
+                # degraded whole-call answer from the retry stage: those
+                # lanes resolved nothing — observing them would poison
+                # the cache with false negatives, so only the lanes the
+                # cache itself answered are (re)observed, and the lane
+                # statuses surface to the caller
+                mi = iter(sub.statuses)
+                statuses = tuple(next(mi) if m else "ok" for m in miss)
+                learned = hit | neg
+                if learned.any():
+                    self.cache.observe_batch(
+                        h_lo[learned], h_hi[learned],
+                        (values[learned] & np.uint64(0xFFFFFFFF)
+                         ).astype(np.uint32),
+                        (values[learned] >> np.uint64(32)).astype(np.uint32),
+                        found[learned], hit[learned], neg[learned])
+                return OpResult(values=values, found=found,
+                                statuses=statuses)
         self.cache.observe_batch(
             h_lo, h_hi, (values & np.uint64(0xFFFFFFFF)).astype(np.uint32),
             (values >> np.uint64(32)).astype(np.uint32), found, hit, neg)
@@ -121,7 +224,7 @@ class CNCacheLayer(StoreLayer):
     # ----------------------------------------------------------- mutations
     def insert(self, key: int, value: int) -> OpResult:
         res = self.inner.insert(key, value)
-        if res.status != "frozen":
+        if res.status not in ("frozen", "backoff", "unavailable"):
             self.cache.note_insert(int(key), int(value))
         return res
 
@@ -140,7 +243,7 @@ class CNCacheLayer(StoreLayer):
     def insert_batch(self, keys, values) -> OpResult:
         res = self.inner.insert_batch(keys, values)
         for k, v, case in zip(keys, values, res.statuses):
-            if case != "frozen":
+            if case not in ("frozen", "backoff", "unavailable"):
                 self.cache.note_insert(int(k), int(v))
         return res
 
@@ -174,6 +277,10 @@ class MeterLayer(StoreLayer):
         res.makeups = max(0, (after.ops - before.ops) - n)
         res.cache_hits = after.cache_hits - before.cache_hits
         res.cache_neg_hits = after.cache_neg_hits - before.cache_neg_hits
+        # failure-plane attribution (all-zero deltas on the no-fault path)
+        res.retries = after.retries - before.retries
+        res.backoffs = after.backoffs - before.backoffs
+        res.failovers = after.failovers - before.failovers
         return res
 
     def get(self, key: int) -> OpResult:
@@ -225,17 +332,24 @@ class CNStack:
 
     ``policy`` (a ``repro.api.pipeline.BatchPolicy``, or ``None`` for the
     synchronous ``BatchPolicy.sync()``) shapes the outermost pipeline
-    stage, so the assembled order reads
-    ``Pipeline → Meter → [CNCache →] adapter (→ Transport)``.
+    stage; ``retry`` (a ``repro.net.faults.FaultPlane``, set by the
+    registry whenever the spec carries a ``FaultSchedule`` or
+    ``replicas > 1``) inserts the recovery stage directly above the
+    (replica-set) adapter, so the fully-assembled order reads
+    ``Pipeline → Meter → [CNCache →] [Retry →] adapter (→ Transport)``.
     """
 
     cache: CNKeyCache | None = None
     transport_binding: TransportBinding = TransportBinding()
     policy: object | None = None  # BatchPolicy; None -> sync()
+    retry: object | None = None   # FaultPlane; None -> no retry stage
 
     def assemble(self, adapter):
         from repro.api.pipeline import PipelineLayer  # avoid import cycle
         store = adapter  # transport already bound below the engine
+        if self.retry is not None:
+            store = RetryLayer(store, self.retry,
+                               transport=self.transport_binding.transport)
         if self.cache is not None:
             store = CNCacheLayer(store, self.cache)
         store = MeterLayer(store)

@@ -46,6 +46,16 @@ class CommMeter:
     saved_round_trips: int = 0
     saved_req_bytes: int = 0
     saved_resp_bytes: int = 0
+    # failure-plane attribution (repro.net.faults / repro.api.replication):
+    # all stay 0 on the no-fault path, so snapshots/merges remain
+    # byte-identical for stores built without a FaultSchedule
+    retries: int = 0         # lanes re-issued after a BACKOFF answer
+    backoffs: int = 0        # lanes that received a BACKOFF answer
+    drops: int = 0           # lanes lost on the wire before MN application
+    failovers: int = 0       # CN-driven primary switches
+    lease_renewals: int = 0  # MN lease grants/renewals (1 small RT each)
+    resyncs: int = 0         # full MN-state re-installs after a restart
+    fault_wait_us: int = 0   # CN stall from timeouts/backoff/lease drains
     # Optional event sink — an explicit per-instance field, NOT a counter: a
     # ``repro.net.Transport`` plugged in here receives every ``add`` call and
     # turns the counter stream into a replayable timed-op trace.  Excluded

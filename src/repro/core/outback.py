@@ -126,6 +126,11 @@ class OutbackShard:
         self.meter.sink = transport
         self.frozen = False  # resize in progress: inserts/deletes rejected
         self.cn_cache = cn_cache  # optional CN-side hot-key cache
+        # optional lease guard (repro.api.replication.ShardLease): consulted
+        # before a Makeup-Get refreshes CN-cached seeds from MN state — the
+        # CN may only trust fresh MN state under a live lease.  None (the
+        # default) leaves every path byte-identical.
+        self.lease = None
 
         # Bulk-populate from the build assignment.
         vlo, vhi = split_u64(values)
@@ -220,7 +225,10 @@ class OutbackShard:
             a = int(f["addr_lo"])
             self.meter.add(0, mn_cmp=1, mn_reads=2, attach=True)
             if (int(self.heap_klo[a]), int(self.heap_khi[a])) == (lo, hi):
-                # Seed changed MN-side; CN refreshes its copy (paper §4.3.1).
+                # Seed changed MN-side; CN refreshes its copy (paper §4.3.1)
+                # — trusted only under a live MN lease (docs/FAILURE_MODEL.md).
+                if self.lease is not None:
+                    self.lease.on_seed_refresh(self)
                 self.cn.seeds[bucket] = self.seeds_mn[bucket]
                 val = (int(self.heap_vhi[a]) << 32) | int(self.heap_vlo[a])
                 return GetResult(val, 2, True)
@@ -664,6 +672,9 @@ class OutbackShard:
                     self.meter.add(0, mn_cmp=1, mn_reads=2, attach=True)
         if any_s.any():
             # seed changed MN-side; CN refreshes its copy (paper §4.3.1)
+            # — trusted only under a live MN lease (docs/FAILURE_MODEL.md)
+            if self.lease is not None:
+                self.lease.on_seed_refresh(self)
             bb = b[any_s]
             self.cn.seeds[bb] = self.seeds_mn[bb]
         hit_idx = idx[ok]
@@ -696,6 +707,85 @@ class OutbackShard:
                 v_hi[i] = (r.value >> 32) & 0xFFFFFFFF
                 match[i] = True
         return xp.asarray(v_lo), xp.asarray(v_hi), xp.asarray(match)
+
+    # ----------------------------------------------------------- replication
+    def mn_state(self) -> dict:
+        """Deep-copied image of the memory-heavy MN half.
+
+        Exactly the state a restarted replica must re-install to rejoin a
+        K-way replica set (``repro.api.replication``): slot arrays +
+        ``seeds_mn``, the KV heap, the overflow cache, and the key count.
+        The CN half (locator + CN-cached seeds) is *not* included — a
+        rejoining replica's stale CN seeds self-heal through the normal
+        Makeup-Get path, which is the paper's own staleness mechanism
+        (§4.3.1).  No meter events: state capture is host-side bookkeeping;
+        the transfer cost is charged by the caller (one one-sided bulk
+        READ of :meth:`mn_state_bytes`).
+        """
+        return {"slots_lo": self.slots_lo.copy(),
+                "slots_hi": self.slots_hi.copy(),
+                "seeds_mn": self.seeds_mn.copy(),
+                "heap_klo": self.heap_klo.copy(),
+                "heap_khi": self.heap_khi.copy(),
+                "heap_vlo": self.heap_vlo.copy(),
+                "heap_vhi": self.heap_vhi.copy(),
+                "heap_top": self.heap_top,
+                "overflow": self.overflow.state(),
+                "n_keys": self.n_keys,
+                "frozen": self.frozen}
+
+    def install_mn_state(self, state: dict) -> None:
+        """Overwrite this shard's MN half with another replica's
+        :meth:`mn_state` (crash-recovery resync).  Bucket counts must
+        match — replicas are always built from the same spec."""
+        if state["slots_lo"].shape != self.slots_lo.shape:
+            raise ValueError("bucket-count mismatch: replicas must be built "
+                             "from the same spec")
+        self.slots_lo = state["slots_lo"].copy()
+        self.slots_hi = state["slots_hi"].copy()
+        self.seeds_mn = state["seeds_mn"].copy()
+        self.heap_klo = state["heap_klo"].copy()
+        self.heap_khi = state["heap_khi"].copy()
+        self.heap_vlo = state["heap_vlo"].copy()
+        self.heap_vhi = state["heap_vhi"].copy()
+        self.heap_top = int(state["heap_top"])
+        self.overflow.install(state["overflow"])
+        self.n_keys = int(state["n_keys"])
+        self.frozen = bool(state["frozen"])
+
+    def mn_state_bytes(self) -> int:
+        """On-wire size of one replica resync (live heap prefix only)."""
+        return int(self.slots_lo.nbytes + self.slots_hi.nbytes
+                   + self.seeds_mn.nbytes + self.heap_top * 16
+                   + self.overflow.state_bytes())
+
+    @classmethod
+    def _from_state(cls, cn, mn_state: dict, *, load_factor: float,
+                    transport=None) -> "OutbackShard":
+        """Rebuild a shard from a locator copy + an MN image, without
+        running the constructor's build (and without metering) — used by
+        ``OutbackStore.install_mn_state`` when a restarted replica missed
+        a §4.4 split and must re-materialise whole tables."""
+        t = cls.__new__(cls)
+        t.load_factor = load_factor
+        t.cn = cn
+        t.slots_lo = mn_state["slots_lo"].copy()
+        t.slots_hi = mn_state["slots_hi"].copy()
+        t.seeds_mn = mn_state["seeds_mn"].copy()
+        t.heap_klo = mn_state["heap_klo"].copy()
+        t.heap_khi = mn_state["heap_khi"].copy()
+        t.heap_vlo = mn_state["heap_vlo"].copy()
+        t.heap_vhi = mn_state["heap_vhi"].copy()
+        t.heap_top = int(mn_state["heap_top"])
+        t.overflow = OverflowCache(int(mn_state["overflow"]["cap"]))
+        t.overflow.install(mn_state["overflow"])
+        t.meter = CommMeter()
+        t.meter.sink = transport
+        t.frozen = bool(mn_state["frozen"])
+        t.cn_cache = None
+        t.lease = None
+        t.n_keys = int(mn_state["n_keys"])
+        return t
 
     # ------------------------------------------------------------ accounting
     def cn_memory_bytes(self) -> int:

@@ -116,6 +116,29 @@ class OverflowCache:
         idx = np.nonzero(self.used)[0]
         return self.k_lo[idx], self.k_hi[idx], self.addr[idx]
 
+    # -- replication support (repro.api.replication) -------------------------
+    def state(self) -> dict:
+        """Deep-copied memory image, installable via :meth:`install`."""
+        return {"k_lo": self.k_lo.copy(), "k_hi": self.k_hi.copy(),
+                "addr": self.addr.copy(), "used": self.used.copy(),
+                "size": self.size, "cap": self.cap}
+
+    def install(self, state: dict) -> None:
+        """Overwrite this cache with another replica's :meth:`state`."""
+        if int(state["cap"]) != self.cap:
+            raise ValueError("overflow capacity mismatch: replicas must be "
+                             "built from the same spec")
+        self.k_lo[:] = state["k_lo"]
+        self.k_hi[:] = state["k_hi"]
+        self.addr[:] = state["addr"]
+        self.used[:] = state["used"]
+        self.size = int(state["size"])
+
+    def state_bytes(self) -> int:
+        """On-wire size of one replica image (resync-cost accounting)."""
+        return int(self.k_lo.nbytes + self.k_hi.nbytes + self.addr.nbytes
+                   + self.used.nbytes)
+
     @property
     def fill_ratio(self) -> float:
         return self.size / self.cap

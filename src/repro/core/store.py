@@ -21,6 +21,7 @@ throughput dip during resizing.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 
@@ -84,6 +85,7 @@ class OutbackStore:
         self.tables = tables
         self._buffer: list = []
         self._open_split = None
+        self._lease = None  # optional lease guard, pushed to every table
 
     # ------------------------------------------------------------- routing
     def _dir_hash(self, keys: np.ndarray) -> np.ndarray:
@@ -341,7 +343,8 @@ class OutbackStore:
         self.meter.add(self.num_compute_nodes, rts=3, req=16, resp=per_cn,
                        one_sided=True)
 
-        # Swap directory pointers.
+        # Swap directory pointers (successors inherit the lease guard).
+        h.t_lo.lease = h.t_hi.lease = self._lease
         self.tables.append(h.t_hi)
         hi_idx = len(self.tables) - 1
         self.tables[t_idx] = h.t_lo
@@ -385,6 +388,75 @@ class OutbackStore:
         for split-time invalidation, without routing any data path through
         it — the middleware owns probe/fill, the store owns the sync point."""
         self._coherence_caches.append(cache)
+
+    # --------------------------------------------------------- replication
+    def set_lease(self, lease) -> None:
+        """Install a lease guard on every table, present and future.
+
+        The guard's ``on_seed_refresh`` fires before any Makeup-Get seed
+        refresh (``repro.core.outback``); split successors inherit it in
+        ``_finish_split``.  ``None`` detaches."""
+        self._lease = lease
+        for t in self.tables:
+            t.lease = lease
+
+    def mn_state(self) -> dict:
+        """Deep-copied image of the whole directory store's MN half.
+
+        Per-table ``OutbackShard.mn_state`` images plus the extendible-
+        hashing directory, and a private locator copy per table so a
+        restarted replica that slept through a §4.4 split can
+        re-materialise the successor tables it never built.  Locator
+        copies are CN-side bookkeeping: after a real split every CN
+        refetches locators anyway (the one-sided fetch ``_finish_split``
+        meters), so the resync wire cost — :meth:`mn_state_bytes` —
+        charges only the memory-heavy MN half.
+        """
+        return {"global_depth": self.global_depth,
+                "local_depth": list(self.local_depth),
+                "directory": list(self.directory),
+                "tables": [{"cn": copy.deepcopy(t.cn),
+                            "mn": t.mn_state(),
+                            "load_factor": t.load_factor}
+                           for t in self.tables]}
+
+    def install_mn_state(self, state: dict) -> None:
+        """Overwrite this replica with another's :meth:`mn_state`.
+
+        Matching table layouts install in place (the common crash-without-
+        split case); a layout mismatch rebuilds the tables list from the
+        shipped images.  Coherence-cache registrations and the lease guard
+        survive either way."""
+        same_layout = (
+            len(state["tables"]) == len(self.tables)
+            and state["global_depth"] == self.global_depth
+            and all(st["mn"]["slots_lo"].shape == t.slots_lo.shape
+                    for st, t in zip(state["tables"], self.tables)))
+        if same_layout:
+            for st, t in zip(state["tables"], self.tables):
+                t.install_mn_state(st["mn"])
+        else:
+            self.tables = [
+                OutbackShard._from_state(copy.deepcopy(st["cn"]), st["mn"],
+                                         load_factor=st["load_factor"],
+                                         transport=self.transport)
+                for st in state["tables"]]
+            for t in self.tables:
+                t.lease = self._lease
+        self.global_depth = int(state["global_depth"])
+        self.local_depth = list(state["local_depth"])
+        self.directory = list(state["directory"])
+        self._open_split = None
+        self._buffer = []
+
+    def mn_state_bytes(self) -> int:
+        """On-wire size of one replica resync (MN half only)."""
+        seen, total = set(), 0
+        for t in self.tables:
+            if id(t) not in seen:
+                seen.add(id(t))
+                total += t.mn_state_bytes()
+        return total
 
     # --------------------------------------------------------- accounting
     @property

@@ -21,14 +21,24 @@ byte-for-byte on the plain metered path — the simulator is a pure
 observer.  Service-rate constants live in :mod:`repro.net.service`; the
 simulation itself (:mod:`repro.net.replay`) is deterministic — no wall
 clock, no RNG in any event path.
+
+The failure plane (:mod:`repro.net.faults`, ``docs/FAILURE_MODEL.md``)
+adds seeded fault scripts — MN crash/restart, dropped and delayed
+completions, NIC saturation — that the host plane decides
+(:class:`FaultPlane`) and the replay times (``simulate(replicas=K)``
+plus ``FaultMark`` windows).  Fault schedules ride inside
+``repro.api.StoreSpec`` so a recorded bench spec reproduces the exact
+same crash timeline.
 """
 
+from repro.net.faults import FaultEvent, FaultPlane, FaultSchedule
 from repro.net.replay import SimResult, simulate
 from repro.net.service import CX3, CX6, ServiceModel
 from repro.net.sim import Server, Simulator
-from repro.net.transport import (DoorbellMark, OpEvent, ResizeMark, Segment,
-                                 Transport)
+from repro.net.transport import (DoorbellMark, FaultMark, OpEvent,
+                                 ResizeMark, Segment, Transport)
 
-__all__ = ["CX3", "CX6", "DoorbellMark", "OpEvent", "ResizeMark", "Segment",
+__all__ = ["CX3", "CX6", "DoorbellMark", "FaultEvent", "FaultMark",
+           "FaultPlane", "FaultSchedule", "OpEvent", "ResizeMark", "Segment",
            "Server", "ServiceModel", "SimResult", "Simulator", "Transport",
            "simulate"]

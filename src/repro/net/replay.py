@@ -19,6 +19,18 @@ window: the MN CPU's service times stretch by ``resize_slow_factor`` for
 the simulated duration of rebuilding ``n_live`` keys (§4.4's
 CPU-share-during-resize effect), and the window is reported so callers can
 plot the throughput dip timeline.
+
+Failure plane (``repro.net.faults``): ``simulate(..., replicas=K)``
+instantiates K independent MN replica servers (CPU + NIC each) and routes
+every segment by its recorded ``Segment.mn``.  A
+:class:`repro.net.transport.FaultMark` pauses a crashed replica's servers
+for ``down_s`` (queued work survives and drains at restart) or stretches
+its NIC service by ``factor`` (saturation window); ``Segment.wait_s``
+stalls that op's posting — the CN-side cost of timeouts, jittered
+backoff, and lease drains decided on the host plane.  All fault windows
+are reported in :attr:`SimResult.fault_windows` and
+:meth:`SimResult.availability` turns the completion timeline into the
+bench suite's availability curve.
 """
 
 from __future__ import annotations
@@ -29,7 +41,8 @@ import numpy as np
 
 from repro.net.service import CX6, ServiceModel
 from repro.net.sim import Server, Simulator
-from repro.net.transport import DoorbellMark, OpEvent, ResizeMark
+from repro.net.transport import (DoorbellMark, FaultMark, OpEvent,
+                                 ResizeMark)
 
 
 @dataclasses.dataclass
@@ -41,6 +54,9 @@ class SimResult:
     resize_windows: list[tuple[float, float]]
     mn_cpu_busy_s: float
     mn_nic_busy_s: float
+    # (t0, t1, kind, replica) for every FaultMark window that opened
+    fault_windows: list[tuple[float, float, str, int]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def tput_mops(self) -> float:
@@ -65,11 +81,45 @@ class SimResult:
         n = int(((self.completions_s >= t0) & (self.completions_s < t1)).sum())
         return n / (t1 - t0) / 1e6
 
+    def tput_timeline(self, n_buckets: int = 40) -> tuple[np.ndarray,
+                                                          np.ndarray]:
+        """Bucketed completed-ops throughput over the makespan.
+
+        Returns ``(bucket_start_s, tput_mops)`` arrays of length
+        ``n_buckets`` — the raw series behind the availability curve.
+        """
+        n_buckets = max(1, int(n_buckets))
+        span = max(self.seconds, 1e-12)
+        edges = np.linspace(0.0, span, n_buckets + 1)
+        counts, _ = np.histogram(self.completions_s, bins=edges)
+        widths = np.diff(edges)
+        return edges[:-1], counts / np.maximum(widths, 1e-12) / 1e6
+
+    def availability(self, n_buckets: int = 40) -> dict:
+        """The bench suite's availability curve, as a versioned JSON dict.
+
+        Availability per bucket = bucket throughput normalised by the
+        *median* bucket throughput (robust to the dip itself), clipped
+        to [0, 1].  The dict schema (``outback-availability/v1``) is
+        what CI's faults-smoke lane validates.
+        """
+        t, mops = self.tput_timeline(n_buckets)
+        base = float(np.median(mops))
+        avail = np.clip(mops / base, 0.0, 1.0) if base > 0 \
+            else np.zeros_like(mops)
+        return {"schema": "outback-availability/v1",
+                "bucket_s": float(self.seconds / max(1, int(n_buckets))),
+                "t_s": [float(x) for x in t],
+                "tput_mops": [float(x) for x in mops],
+                "availability": [float(x) for x in avail],
+                "fault_windows": [[float(a), float(b), k, int(r)]
+                                  for a, b, k, r in self.fault_windows]}
+
 
 def simulate(trace, *, clients: int = 1, window: int | str = 1,
              mn_threads: int = 1, doorbell: bool = True,
              service: ServiceModel = CX6,
-             max_ops: int | None = None) -> SimResult:
+             max_ops: int | None = None, replicas: int = 1) -> SimResult:
     """Replay ``trace`` with ``clients`` closed-loop clients.
 
     ``window`` bounds each client QP's outstanding ops (>=1); posting more
@@ -79,7 +129,11 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
     pipeline flush of ``n`` ops replays with an ``n``-deep window (ops
     recorded before any mark replay synchronously), so the simulated
     latency/throughput reflects the store's ``BatchPolicy`` rather than a
-    sweep parameter.  There is no randomness anywhere: the same trace and
+    sweep parameter.  ``replicas=K`` gives each MN replica its own CPU
+    (``mn_threads`` workers) and NIC servers, with segments routed by
+    their recorded ``Segment.mn``; ``FaultMark`` crash windows pause the
+    marked replica's servers and NIC-saturation windows stretch its NIC
+    service.  There is no randomness anywhere: the same trace and
     parameters produce bit-identical percentiles on every run.
     """
     policy_window = window == "policy"
@@ -88,8 +142,11 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
     # revert to a synchronous window instead of inheriting the last mark
     cur_w = {"w": 1 if policy_window else max(1, int(window)), "left": 0}
     sim = Simulator()
-    mn_cpu = Server(sim, workers=max(1, mn_threads), name="mn_cpu")
-    mn_nic = Server(sim, workers=1, name="mn_nic")
+    n_rep = max(1, int(replicas))
+    mn_cpus = [Server(sim, workers=max(1, mn_threads), name=f"mn_cpu{r}")
+               for r in range(n_rep)]
+    mn_nics = [Server(sim, workers=1, name=f"mn_nic{r}")
+               for r in range(n_rep)]
     items = list(trace)
     if max_ops is not None:
         kept, n = [], 0
@@ -103,17 +160,52 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
 
     cursor = {"i": 0}
     slow_open = {"n": 0}  # rebuild windows currently stealing CPU share
+    crash_open = [0] * n_rep       # nested crash windows per replica
+    sat_open: list[list[float]] = [[] for _ in range(n_rep)]
     lat_us: list[float] = []
     done_t: list[float] = []
     windows: list[tuple[float, float]] = []
+    fwindows: list[tuple[float, float, str, int]] = []
+
+    def _open_fault_window(mark: FaultMark) -> None:
+        r = mark.mn % n_rep
+        t0 = sim.now
+        fwindows.append((t0, t0 + mark.down_s, mark.kind, r))
+        if mark.kind == "mn_crash":
+            crash_open[r] += 1
+            mn_cpus[r].pause()
+            mn_nics[r].pause()
+
+            def restart():
+                crash_open[r] -= 1
+                if crash_open[r] == 0:
+                    # restart drains the RNIC backlog FCFS
+                    mn_nics[r].resume()
+                    mn_cpus[r].resume()
+
+            sim.schedule(mark.down_s, restart)
+        elif mark.kind == "nic_saturation":
+            sat_open[r].append(mark.factor)
+            mn_nics[r].factor = max(sat_open[r])
+
+            def clear():
+                sat_open[r].remove(mark.factor)
+                mn_nics[r].factor = max(sat_open[r]) if sat_open[r] else 1.0
+
+            sim.schedule(mark.down_s, clear)
+        # other kinds (delay/drop) are host-plane only: their cost is
+        # already in Segment.wait_s / retried segments
 
     def next_item():
         while cursor["i"] < len(items):
             it = items[cursor["i"]]
             cursor["i"] += 1
             if isinstance(it, ResizeMark):
-                _open_resize_window(sim, mn_cpu, it, service, windows,
+                _open_resize_window(sim, mn_cpus, it, service, windows,
                                     slow_open)
+                continue
+            if isinstance(it, FaultMark):
+                _open_fault_window(it)
                 continue
             if isinstance(it, DoorbellMark):
                 if policy_window:  # numeric windows ignore recorded flushes
@@ -159,24 +251,31 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
                 self.pump()
                 return
             seg = op.segments[si]
+            r = seg.mn % n_rep
 
             def after_post():
                 sim.schedule(service.wire_s, arrive_mn)
 
             def arrive_mn():
-                mn_nic.request(service.mn_nic_s(seg), after_nic)
+                mn_nics[r].request(service.mn_nic_s(seg), after_nic)
 
             def after_nic():
                 if seg.one_sided:
                     respond()
                 else:
-                    mn_cpu.request(service.mn_cpu_s(seg), respond)
+                    mn_cpus[r].request(service.mn_cpu_s(seg), respond)
 
             def respond():
                 sim.schedule(service.wire_s + service.cn_recv_s(seg),
                              lambda: self._segment(op, si + 1, t0))
 
-            self.post.request(service.cn_post_s, after_post)
+            def start_post():
+                self.post.request(service.cn_post_s, after_post)
+
+            if seg.wait_s > 0:  # host-plane stall (backoff/lease/delay)
+                sim.schedule(seg.wait_s, start_post)
+            else:
+                start_post()
 
     cs = [Client(i) for i in range(max(1, clients))]
     for c in cs:
@@ -188,31 +287,37 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
         latencies_us=np.asarray(lat_us, dtype=np.float64),
         completions_s=np.asarray(done_t, dtype=np.float64),
         resize_windows=windows,
-        mn_cpu_busy_s=mn_cpu.busy_s, mn_nic_busy_s=mn_nic.busy_s)
+        mn_cpu_busy_s=sum(s.busy_s for s in mn_cpus),
+        mn_nic_busy_s=sum(s.busy_s for s in mn_nics),
+        fault_windows=fwindows)
 
 
-def _open_resize_window(sim: Simulator, mn_cpu: Server, mark: ResizeMark,
-                        service: ServiceModel,
+def _open_resize_window(sim: Simulator, mn_cpus: list[Server],
+                        mark: ResizeMark, service: ServiceModel,
                         windows: list[tuple[float, float]],
                         slow_open: dict) -> None:
     """Stretch MN CPU service while the rebuild's CPU share is stolen.
 
     Windows may overlap (back-to-back splits): the slowdown is held open
-    until the *last* one closes.
+    until the *last* one closes.  With replicas the rebuild runs on every
+    copy (lockstep replication re-splits each replica), so the slowdown
+    applies to all replica CPUs.
     """
     work = mark.n_live * service.rebuild_per_key_s
     f = service.resize_slow_factor
     # at CPU share 1/f the rebuild's `work` CPU-seconds take f/(f-1) x work
     # of wall time, spread across the MN's worker threads
-    duration = work * (f / max(f - 1.0, 1e-9)) / mn_cpu.workers
+    duration = work * (f / max(f - 1.0, 1e-9)) / mn_cpus[0].workers
     t0 = sim.now
     slow_open["n"] += 1
-    mn_cpu.factor = f
+    for cpu in mn_cpus:
+        cpu.factor = f
     windows.append((t0, t0 + duration))
 
     def close():
         slow_open["n"] -= 1
         if slow_open["n"] == 0:
-            mn_cpu.factor = 1.0
+            for cpu in mn_cpus:
+                cpu.factor = 1.0
 
     sim.schedule(duration, close)

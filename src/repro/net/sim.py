@@ -13,6 +13,12 @@ multi-worker ``Server`` resource with two extras the transport needs:
 * **a slowdown factor** — service times started while ``factor > 1`` are
   stretched by it (used to model the MN CPU share lost to an index rebuild
   during a §4.4 resize window).
+* **pause/resume** — a paused server stops starting new jobs (in-flight
+  service still completes: the wire already carried those requests) until
+  resumed; the failure plane uses this for MN crash windows
+  (``repro.net.faults``).  Queued jobs survive a pause and drain in FCFS
+  order at resume, which is exactly a crashed-then-restarted MN whose
+  RNIC backlog replays.
 """
 
 from __future__ import annotations
@@ -61,14 +67,24 @@ class Server:
         self.coalesce_extra_s = coalesce_extra_s
         self.factor = 1.0  # >1 while a background job steals CPU share
         self.busy_s = 0.0  # integrated service time (utilisation accounting)
+        self.paused = False
         self.name = name
 
     def request(self, service_s: float, done: Callable[[], None]) -> None:
         self.queue.append((service_s, done))
         self._drain()
 
+    def pause(self) -> None:
+        """Stop starting new jobs (crash window); queued work is kept."""
+        self.paused = True
+
+    def resume(self) -> None:
+        """Restart after a pause and drain any backlog FCFS."""
+        self.paused = False
+        self._drain()
+
     def _drain(self) -> None:
-        while self.free and self.queue:
+        while self.free and self.queue and not self.paused:
             self.free -= 1
             svc, done = self.queue.popleft()
             batch = [done]

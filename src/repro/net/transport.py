@@ -27,6 +27,16 @@ Meter-to-trace rules (mirroring how the KVS protocols call ``add``):
   matching §4.3.1.
 * ``mark_resize(n_live)`` drops a marker the replay engine turns into an
   MN-CPU slowdown window of ``n_live * rebuild_per_key_s`` work (§4.4).
+
+Failure-plane annotations (``repro.net.faults`` / ISSUE 6): segments
+carry the replica they were served by (``Segment.mn``, stamped from
+``Transport.current_mn`` — the replication adapter sets it around each
+replica call) and any CN-side stall accrued before posting
+(``Segment.wait_s``, accumulated via :meth:`Transport.add_wait` by the
+delay/backoff/lease paths).  ``mark_fault`` drops a :class:`FaultMark`
+the replay engine turns into a paused-replica or NIC-saturation window.
+All three default to inert values, so a store without faults or
+replication produces byte-identical traces to earlier revisions.
 """
 
 from __future__ import annotations
@@ -46,6 +56,8 @@ class Segment:
     mn_cmp: int = 0
     mn_reads: int = 0
     mn_writes: int = 0
+    mn: int = 0          # serving replica (replay routes by this index)
+    wait_s: float = 0.0  # CN-side stall (delay/backoff/lease) before posting
 
     def with_mn(self, *, mn_hash=0, mn_cmp=0, mn_reads=0, mn_writes=0):
         return dataclasses.replace(
@@ -68,6 +80,21 @@ class ResizeMark:
     """A §4.4 table split began here: ``n_live`` keys must be rebuilt."""
 
     n_live: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultMark:
+    """A host-plane fault window opened here (``repro.net.faults``).
+
+    ``kind`` is ``"mn_crash"`` (pause replica ``mn``'s CPU+NIC servers
+    for ``down_s`` of sim time) or ``"nic_saturation"`` (stretch that
+    replica's NIC service by ``factor`` for ``down_s``).  Replays that
+    predate the failure plane simply skip these marks."""
+
+    kind: str
+    mn: int = 0
+    down_s: float = 0.0
+    factor: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +122,11 @@ class Transport:
         # backwards through the latest batch so per-lane makeups spread out
         self._attach = -1
         self._cont_used = False
+        # failure-plane state: replica stamped into new segments, and a
+        # pending CN-side wait consumed by the next op opened (both stay
+        # at their inert defaults unless a ReplicaSetAdapter drives them)
+        self.current_mn = 0
+        self._pending_wait_s = 0.0
 
     # ------------------------------------------------------- sink protocol
     def on_meter_add(self, n: int, *, rts: int, req: int, resp: int,
@@ -127,6 +159,26 @@ class Transport:
         self._attach = -1
         self._cont_used = False
 
+    def mark_fault(self, kind: str, *, mn: int = 0, down_s: float = 0.0,
+                   factor: float = 1.0) -> None:
+        """Drop a :class:`FaultMark` at the current trace position.
+
+        Like :meth:`begin_doorbell` this does **not** move the
+        attachment cursor: fault windows open *around* ops and must not
+        break Makeup-Get continuation attachment."""
+        self.trace.append(FaultMark(kind, mn=mn, down_s=down_s,
+                                    factor=factor))
+
+    def add_wait(self, seconds: float) -> None:
+        """Accrue a CN-side stall charged to the next op recorded.
+
+        The delay/backoff/lease paths call this before re-issuing or
+        proceeding; the pending wait lands on the first segment of the
+        next op (or attachment) so the replay engine stalls that op's
+        posting by the same amount."""
+        if seconds > 0:
+            self._pending_wait_s += seconds
+
     def begin_doorbell(self) -> int:
         """Open a doorbell window (a pipeline flush boundary) whose op
         count is not yet known — lanes a CN cache absorbs never reach the
@@ -145,16 +197,17 @@ class Transport:
         self.trace[token] = DoorbellMark(n)
 
     # --------------------------------------------------------------- util
-    @staticmethod
-    def _make_segments(rts, req, resp, mn_hash, mn_cmp, mn_reads, mn_writes,
-                       one_sided) -> tuple[Segment, ...]:
+    def _make_segments(self, rts, req, resp, mn_hash, mn_cmp, mn_reads,
+                       mn_writes, one_sided) -> tuple[Segment, ...]:
         if rts <= 0:
             return ()
+        wait, self._pending_wait_s = self._pending_wait_s, 0.0
         segs = []
         for i in range(rts):
             seg = Segment(req_bytes=req // rts + (req % rts if i == 0 else 0),
                           resp_bytes=resp // rts + (resp % rts if i == 0 else 0),
-                          one_sided=one_sided)
+                          one_sided=one_sided, mn=self.current_mn,
+                          wait_s=wait if i == 0 else 0.0)
             if i == 0:
                 seg = seg.with_mn(mn_hash=mn_hash, mn_cmp=mn_cmp,
                                   mn_reads=mn_reads, mn_writes=mn_writes)
@@ -166,7 +219,8 @@ class Transport:
         """Fold an attachment (``n==0``) or a Makeup-Get continuation
         (``cont=True``) into the op at the attachment cursor."""
         i = self._attach
-        while i >= 0 and isinstance(self.trace[i], (ResizeMark, DoorbellMark)):
+        while i >= 0 and isinstance(self.trace[i],
+                                    (ResizeMark, DoorbellMark, FaultMark)):
             i -= 1
         self._attach = i
         if i < 0:  # nothing to attach to: record as a standalone op
@@ -206,3 +260,5 @@ class Transport:
         self.trace.clear()
         self._attach = -1
         self._cont_used = False
+        self.current_mn = 0
+        self._pending_wait_s = 0.0

@@ -1,0 +1,55 @@
+"""Docs integrity (ISSUE 6 satellite): every local link in README.md and
+docs/*.md resolves, and the documents the README promises exist.
+
+Runs in CI's ``faults-smoke`` lane alongside the crash-recovery bench, so
+a PR cannot move or delete a doc without updating its references.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+
+
+def _local_links(path: Path):
+    for target in _LINK.findall(path.read_text()):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+            continue
+        yield target
+
+
+def test_docs_exist():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    assert (ROOT / "docs" / "FAILURE_MODEL.md").is_file()
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_local_links_resolve(doc):
+    missing = []
+    for target in _local_links(doc):
+        resolved = (doc.parent / target).resolve()
+        if not resolved.is_relative_to(ROOT):
+            continue  # GitHub-side relative URL (e.g. the CI badge)
+        if not resolved.exists():
+            missing.append(target)
+    assert not missing, f"{doc.name} links to missing paths: {missing}"
+
+
+def test_readme_links_both_architecture_docs():
+    text = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in text
+    assert "docs/FAILURE_MODEL.md" in text
+
+
+def test_deprecation_policy_stated_exactly_once():
+    """The README states the deprecation policy in ONE place (ISSUE 6):
+    one bolded heading owns it; other sections may only reference it."""
+    text = (ROOT / "README.md").read_text()
+    owners = re.findall(r"\*\*Deprecation policy\*\*", text)
+    assert len(owners) == 1, (
+        "exactly one '**Deprecation policy**' owner paragraph expected")

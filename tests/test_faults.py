@@ -1,0 +1,331 @@
+"""Failure/recovery plane (ISSUE 6): deterministic fault injection,
+K-way replication with CN-driven failover, leases, and BACKOFF/retry.
+
+The contract under test, in order of importance:
+
+* determinism — same seed + same fault schedule ⇒ identical event trace,
+  identical meter snapshots, identical percentiles, identical final MN
+  state across two independent runs;
+* zero lost acknowledged writes at K=2 through a crash/restart window
+  (failover + resync actually happen);
+* the no-fault path stays byte-identical when the plane is dormant;
+* K=1 degrades to ``"unavailable"`` answers (never blocks, never raises)
+  and recovers after the window;
+* the replay engine honours replica routing, CN wait stalls and fault
+  windows.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (BatchPolicy, ReplicaSetAdapter, SpecError, StoreSpec,
+                       open_store)
+from repro.net import FaultEvent, FaultPlane, FaultSchedule, Transport
+from repro.net.replay import simulate
+
+N = 2048
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(5)
+    keys = np.unique(rng.integers(1, 1 << 62, 2 * N + 512, dtype=np.uint64))
+    assert len(keys) >= 2 * N
+    vals = np.arange(len(keys), dtype=np.uint64)
+    return keys[:N], vals[:N], keys[N:2 * N], vals[N:2 * N]
+
+
+def _crash_spec(**knobs):
+    sched = FaultSchedule.single_crash(at_op=64, duration_ops=256,
+                                       lease_term_ops=knobs.pop(
+                                           "lease_term_ops", 128),
+                                       **knobs)
+    return StoreSpec("outback", load_factor=0.85, replicas=2, faults=sched)
+
+
+def _state_sig(x):
+    """Canonical, comparable form of an mn_state tree (MN halves only —
+    the directory store's shipped CN locators are rebuilt, not compared)."""
+    if isinstance(x, dict):
+        return tuple(sorted((k, _state_sig(v)) for k, v in x.items()
+                            if k != "cn"))
+    if isinstance(x, np.ndarray):
+        return (x.dtype.str, x.shape, x.tobytes())
+    if isinstance(x, (list, tuple)):
+        return tuple(_state_sig(v) for v in x)
+    return x
+
+
+# ---------------------------------------------------------------- schedules
+
+
+def test_schedule_json_roundtrip():
+    s = FaultSchedule.generate(7, 4000, replicas=3)
+    rt = FaultSchedule.from_json(s.to_json())
+    assert rt == s and len(rt.events) > 0
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent("meteor", 1, 2).validate()
+    with pytest.raises(ValueError):
+        FaultSchedule(events=(FaultEvent("mn_crash", -1, 5),)).validate()
+    with pytest.raises(ValueError, match="unknown"):
+        FaultEvent.from_json_dict({"kind": "mn_crash", "at_op": 1,
+                                   "duration_ops": 2, "spice": 9})
+
+
+def test_spec_rejects_bad_fault_configs():
+    with pytest.raises(SpecError, match="mn_state"):
+        StoreSpec("race", replicas=2).validate()
+    with pytest.raises(SpecError, match="replicas"):
+        StoreSpec("outback", replicas=0).validate()
+    with pytest.raises(SpecError, match="targets MN"):
+        StoreSpec("outback", replicas=2,
+                  faults=FaultSchedule.single_crash(1, 2, mn=3)).validate()
+
+
+def test_plane_is_deterministic():
+    sched = FaultSchedule.generate(21, 3000)
+    a, b = FaultPlane(sched), FaultPlane(sched)
+    seq_a, seq_b = [], []
+    for plane, seq in ((a, seq_a), (b, seq_b)):
+        for _ in range(3000):
+            plane.tick(1)
+            seq.append((plane.crash_open(0), plane.crash_open(1),
+                        plane.drop_now(), round(plane.delay_us(), 6),
+                        round(plane.backoff_us(2), 6)))
+    assert seq_a == seq_b
+
+
+# ------------------------------------------------------------- determinism
+
+
+def _run_once(data):
+    build_k, build_v, w_k, w_v = data
+    tr = Transport()
+    st = open_store(_crash_spec(), build_k, build_v, transport=tr)
+    for i in range(12):
+        st.get_batch(build_k[i * 32:(i + 1) * 32])
+        st.insert_batch(w_k[i * 8:(i + 1) * 8], w_v[i * 8:(i + 1) * 8])
+    for i in range(12):  # ride past the window so resync happens in-run
+        st.get_batch(build_k[i * 32:(i + 1) * 32])
+    res = simulate(tr.trace, clients=2, replicas=2)
+    return (tr.trace, st.meter_totals().snapshot(), res.percentiles(),
+            _state_sig(st.engine.mn_state()))
+
+
+def test_same_seed_same_schedule_is_bit_identical(data):
+    trace_a, snap_a, pct_a, state_a = _run_once(data)
+    trace_b, snap_b, pct_b, state_b = _run_once(data)
+    assert trace_a == trace_b
+    assert snap_a == snap_b
+    assert pct_a == pct_b
+    assert state_a == state_b
+
+
+# ------------------------------------------------- crash recovery (K = 2)
+
+
+def test_zero_lost_acked_writes_at_k2(data):
+    build_k, build_v, w_k, w_v = data
+    st = open_store(_crash_spec(), build_k, build_v)
+    acked = []
+    for i in range(24):
+        r = st.insert_batch(w_k[i * 8:(i + 1) * 8], w_v[i * 8:(i + 1) * 8])
+        stats = r.statuses or ("ok",) * 8
+        for k, v, ok, case in zip(w_k[i * 8:], w_v[i * 8:], r.found, stats):
+            if ok and case not in ("backoff", "unavailable"):
+                acked.append((int(k), int(v)))
+        st.get_batch(build_k[:16])
+    for _ in range(12):  # let the window close and the resync land
+        st.get_batch(build_k[:32])
+    m = st.meter_totals()
+    assert m.failovers >= 1, "crash never drove a failover"
+    assert m.resyncs >= 1, "restart never shipped a state image"
+    assert m.retries >= 1 and m.backoffs >= 1
+    ak = np.asarray([k for k, _ in acked], np.uint64)
+    av = np.asarray([v for _, v in acked], np.uint64)
+    g = st.get_batch(ak)
+    assert bool(g.found.all()), "acked write unreadable after recovery"
+    assert np.array_equal(g.values, av)
+    # both replicas converge to the same MN image after resync
+    adapter = st
+    while not isinstance(adapter, ReplicaSetAdapter):
+        adapter = adapter.inner
+    sigs = {_state_sig(r.engine.mn_state()) for r in adapter.replicas}
+    assert len(sigs) == 1, "replicas diverged after crash recovery"
+
+
+def test_failover_attribution_lands_on_the_opresult(data):
+    build_k, build_v, _, _ = data
+    st = open_store(_crash_spec(), build_k, build_v)
+    saw = None
+    for i in range(40):
+        r = st.get_batch(build_k[i * 16:(i + 1) * 16])
+        if r.failovers:
+            saw = r
+            break
+    assert saw is not None, "no call carried the failover delta"
+    assert saw.retries >= 1 and saw.backoffs >= 1
+
+
+def test_lease_renewals_follow_the_op_clock(data):
+    build_k, build_v, _, _ = data
+    spec = StoreSpec("outback", load_factor=0.85, replicas=2,
+                     faults=FaultSchedule(lease_term_ops=64))
+    st = open_store(spec, build_k, build_v)
+    st.get_batch(build_k[:32])
+    first = st.meter_totals().lease_renewals
+    assert first >= 1  # granted on first use
+    for i in range(8):
+        st.get_batch(build_k[i * 32:(i + 1) * 32])
+    assert st.meter_totals().lease_renewals > first
+
+
+# --------------------------------------------------------- K = 1 degraded
+
+
+def test_k1_degrades_to_unavailable_then_recovers(data):
+    build_k, build_v, _, _ = data
+    sched = FaultSchedule.single_crash(at_op=8, duration_ops=128,
+                                       max_retries=1, lease_term_ops=0)
+    st = open_store(StoreSpec("outback", load_factor=0.85, faults=sched),
+                    build_k, build_v)
+    degraded = 0
+    for i in range(24):
+        r = st.get_batch(build_k[i * 16:(i + 1) * 16])
+        if r.statuses is not None:
+            degraded += r.statuses.count("unavailable")
+            assert not r.found.any()  # degraded lanes answer found=False
+    assert degraded > 0
+    post = st.get_batch(build_k[:64])
+    assert post.statuses is None and bool(post.found.all())
+
+
+def test_degraded_answers_do_not_poison_the_cn_cache(data):
+    build_k, build_v, _, _ = data
+    sched = FaultSchedule.single_crash(at_op=4, duration_ops=48,
+                                       max_retries=0, lease_term_ops=0)
+    st = open_store(StoreSpec("outback", load_factor=0.85, faults=sched,
+                              cache_budget_bytes=1 << 15),
+                    build_k, build_v)
+    for _ in range(8):
+        st.get_batch(build_k[:8])
+    r = st.get_batch(build_k[:8])
+    assert r.statuses is None and bool(r.found.all())
+    assert st.meter_totals().cache_neg_hits == 0
+
+
+# ------------------------------------------------------- dormant identity
+
+
+def test_dormant_plane_meters_byte_identically(data):
+    build_k, build_v, w_k, w_v = data
+    snaps, traces = [], []
+    for spec in (StoreSpec("outback", load_factor=0.85),
+                 StoreSpec("outback", load_factor=0.85,
+                           faults=FaultSchedule(lease_term_ops=0))):
+        tr = Transport()
+        st = open_store(spec, build_k, build_v, transport=tr)
+        st.get_batch(build_k[:256])
+        st.insert_batch(w_k[:32], w_v[:32])
+        st.update_batch(build_k[:32], build_v[:32])
+        st.delete_batch(w_k[:16])
+        snaps.append(st.meter_totals().snapshot())
+        traces.append(tr.trace)
+    assert snaps[0] == snaps[1]
+    assert traces[0] == traces[1]
+
+
+# ---------------------------------------------------------------- pipeline
+
+
+def test_pipelined_handles_resolve_through_a_failover(data):
+    build_k, build_v, _, _ = data
+    sched = FaultSchedule.single_crash(at_op=70, duration_ops=300,
+                                       lease_term_ops=0)
+    st = open_store(StoreSpec("outback", load_factor=0.85, replicas=2,
+                              faults=sched,
+                              batch=BatchPolicy(window=64, order="relaxed")),
+                    build_k, build_v)
+    handles = [st.submit("get", build_k[i * 32:(i + 1) * 32])
+               for i in range(12)]
+    st.flush()
+    assert all(h.done for h in handles)
+    assert sum(int(h.result().found.sum()) for h in handles) == 12 * 32
+    assert st.meter_totals().failovers >= 1
+    assert st.stats.unavailable_lanes == 0
+
+
+# ------------------------------------------------------------------ drops
+
+
+def test_drop_windows_cost_a_retry_not_an_answer(data):
+    build_k, build_v, _, _ = data
+    sched = FaultSchedule(events=(FaultEvent("drop", 8, 64, drop_rate=1.0),),
+                          lease_term_ops=0, seed=3)
+    st = open_store(StoreSpec("outback", load_factor=0.85, faults=sched),
+                    build_k, build_v)
+    for i in range(16):
+        r = st.get_batch(build_k[i * 16:(i + 1) * 16])
+        assert r.statuses is None or "unavailable" not in r.statuses
+        assert bool(r.found.all())
+    m = st.meter_totals()
+    assert m.drops >= 1 and m.retries >= 1
+
+
+# ------------------------------------------------------------------ replay
+
+
+def test_replay_routes_replicas_and_applies_fault_windows(data):
+    build_k, build_v, w_k, w_v = data
+    tr = Transport()
+    st = open_store(_crash_spec(down_s=100e-6), build_k, build_v,
+                    transport=tr)
+    for i in range(12):
+        st.get_batch(build_k[i * 32:(i + 1) * 32])
+        st.insert_batch(w_k[i * 8:(i + 1) * 8], w_v[i * 8:(i + 1) * 8])
+    for i in range(12):
+        st.get_batch(build_k[i * 32:(i + 1) * 32])
+    segs = [s for ev in tr.trace if hasattr(ev, "segments")
+            for s in ev.segments]
+    assert {s.mn for s in segs} == {0, 1}, "multicast never reached MN 1"
+    assert any(s.wait_s > 0 for s in segs), "no CN stall reached the trace"
+    res = simulate(tr.trace, clients=2, replicas=2)
+    assert res.fault_windows and res.fault_windows[0][2] == "mn_crash"
+    av = res.availability()
+    assert av["schema"] == "outback-availability/v1"
+    assert len(av["availability"]) == len(av["t_s"]) == 40
+    assert av["fault_windows"]
+    # two runs of the same trace are bit-identical
+    res2 = simulate(tr.trace, clients=2, replicas=2)
+    assert np.array_equal(res.latencies_us, res2.latencies_us)
+
+
+def test_directory_store_replicates_through_a_split(data):
+    """outback-dir at K=2: a crash over a store that *split* during the
+    window still resyncs (the restarted replica rebuilds its table list
+    from the donor's shipped CN locators)."""
+    build_k, build_v, w_k, w_v = data
+    sched = FaultSchedule.single_crash(at_op=48, duration_ops=192,
+                                       lease_term_ops=0)
+    spec = StoreSpec("outback-dir", load_factor=0.85, replicas=2,
+                     faults=sched, params={"initial_depth": 1})
+    st = open_store(spec, build_k, build_v)
+    for i in range(24):  # inserts force splits inside the crash window
+        st.insert_batch(w_k[i * 32:(i + 1) * 32], w_v[i * 32:(i + 1) * 32])
+        st.get_batch(build_k[:16])
+    for _ in range(8):
+        st.get_batch(build_k[:32])
+    m = st.meter_totals()
+    assert m.resyncs >= 1
+    g = st.get_batch(w_k[:24 * 32])
+    ok = g.found
+    assert bool(ok.all())
+    assert np.array_equal(g.values[ok], w_v[:24 * 32][ok])
+    adapter = st
+    while not isinstance(adapter, ReplicaSetAdapter):
+        adapter = adapter.inner
+    sigs = {_state_sig(r.engine.mn_state()) for r in adapter.replicas}
+    assert len(sigs) == 1, "directory replicas diverged through the split"
