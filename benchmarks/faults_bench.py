@@ -16,7 +16,11 @@ Rows (CSV contract ``name,us_per_call,derived`` + JSON extras):
   ops that stall on retry/backoff/failover land in the tail).
 * ``faults/availability``      — the ``outback-availability/v1`` curve
   (bucketed throughput normalised by the median bucket) with the fault
-  windows annotated; CI's faults-smoke lane validates the schema.
+  windows annotated.  Since PR 7 the curve travels inside a validated
+  ``outback-telemetry/v1`` JSONL series (``telemetry_jsonl`` extras:
+  hub snapshots + spans from the crash run's TelemetryHub, the replayed
+  sim row embedding the curve and latency histogram, and the pipeline
+  stats row); CI's faults-smoke lane validates both schemas.
 * ``faults/lost_acked_writes`` — MUST be 0 at K=2: every write the store
   acknowledged before/during/after the crash is readable after recovery.
   A non-zero count raises (→ an ERROR row, non-zero exit under
@@ -40,6 +44,8 @@ from benchmarks import common as C
 from repro.api import StoreSpec, open_store
 from repro.net import FaultSchedule, Transport
 from repro.net.replay import simulate
+from repro.obs import (TelemetryConfig, pipeline_row, sim_rows,
+                       telemetry_rows, validate_telemetry_rows)
 
 # Fault windows are placed on the op clock (lanes), far larger than any
 # single protocol call, so the window cannot be jumped by one batch tick
@@ -101,7 +107,11 @@ def _crash_recovery_rows(quick: bool):
     sched = FaultSchedule.single_crash(at_op=_CRASH_AT,
                                       duration_ops=_CRASH_OPS,
                                       down_s=200e-6, lease_term_ops=256)
-    spec = StoreSpec("outback", load_factor=0.85, replicas=2, faults=sched)
+    # the crash run carries the telemetry plane (PR 7): the hub observes
+    # the whole drive — failovers, resyncs, backoff rounds land on spans
+    # and per-replica counters — without perturbing any asserted artifact
+    spec = StoreSpec("outback", load_factor=0.85, replicas=2, faults=sched,
+                     telemetry=TelemetryConfig(window_ops=256))
     tr = Transport()
     st = open_store(spec, build_k, build_v, transport=tr)
     acked = _drive_through_crash(st, build_k, write_k, write_v)
@@ -122,7 +132,17 @@ def _crash_recovery_rows(quick: bool):
 
     res = simulate(tr.trace, clients=4, replicas=2)
     pct = res.percentiles()
-    avail = res.availability()
+    # the availability curve and crash-window percentiles now travel
+    # through the obs exporters: one validated outback-telemetry/v1 JSONL
+    # series (hub snapshots/spans + the replayed sim + pipeline stats)
+    # rides the availability row's extras; CI's faults-smoke lane reads
+    # the curve out of the series' sim row.
+    series = (telemetry_rows(st.telemetry)
+              + sim_rows(res, name="faults_crash")
+              + [pipeline_row(st.stats)])
+    validate_telemetry_rows(series)
+    sim_row = next(r for r in series if r["row"] == "sim")
+    avail = sim_row["availability"]
     sp = spec.to_json_dict()
     return [
         ("faults/p999_through_crash", round(pct["p999_us"], 4),
@@ -133,7 +153,7 @@ def _crash_recovery_rows(quick: bool):
                             in res.fault_windows], "spec": sp}),
         ("faults/availability", round(avail["bucket_s"] * 1e6, 4),
          f"min={min(avail['availability']):.3f}",
-         {"availability": avail, "spec": sp}),
+         {"telemetry_jsonl": series, "spec": sp}),
         ("faults/lost_acked_writes", 0.0, lost,
          {"acked": len(acked), "lost": lost, "replicas": 2, "spec": sp}),
         ("faults/recovery", float(m.fault_wait_us),

@@ -1,0 +1,235 @@
+"""The ``obs`` suite: the telemetry plane's cost, contract, and exporters.
+
+PR 7's acceptance rows (ISSUE 7).  The telemetry plane is useful only if
+it is (a) nearly free when on, (b) exactly free when off, and (c) its
+exports machine-checkable — so each row is one of those claims:
+
+* ``obs/overhead/ycsb_c``    — pipelined YCSB-C (pure zipf Gets, the
+  paper's headline mix) driven through identical stores, telemetry off
+  vs on; derived is the relative wall-clock overhead, budgeted < 5%.
+  The off/on timed stretches interleave (shared-runner drift hits both
+  arms), GC stays outside the clock, and the workload is never shrunk
+  by ``--quick`` — short stretches read pure scheduler noise.
+* ``obs/dormant_identity``   — the dormant-plane contract: a hub-carrying
+  store's meters, recorded transport trace, and final MN state image are
+  byte-identical to a plain store's after the same driven mix.  Raises on
+  any drift (→ an ERROR row, non-zero exit under ``--strict``).
+* ``obs/spans``              — the span plane saw the run: flush spans
+  with queue-wait/coalescing annotations, per-op-kind counters, snapshot
+  cadence on the op clock.
+* ``obs/export/jsonl``       — ``telemetry_rows`` + ``sim_rows`` +
+  ``pipeline_row`` round-trip through ``write_jsonl``/``read_jsonl`` and
+  pass ``validate_telemetry_rows`` (the ``outback-telemetry/v1`` schema
+  CI's obs-smoke lane checks).
+* ``obs/export/trace``       — the recorded transport trace renders to a
+  Chrome-tracing/Perfetto JSON (``chrome_trace``); when the
+  ``OBS_ARTIFACT_DIR`` env var is set (CI), the trace and the JSONL
+  series are written there for artifact upload.
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import pickle
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.api import BatchPolicy, StoreSpec, open_store
+from repro.net import Transport
+from repro.net.replay import simulate
+from repro.obs import (TELEMETRY_SCHEMA, TelemetryConfig, chrome_trace,
+                       pipeline_row, read_jsonl, sim_rows, telemetry_rows,
+                       validate_telemetry_rows, write_jsonl)
+
+_WINDOW = 1024  # the ycsb suite's default doorbell window
+_REPS = 5       # min-of-reps on both sides of the overhead comparison
+
+
+def obs_suite(quick: bool = False):
+    """All ``obs/*`` rows (the run.py suite entry)."""
+    rows = [_overhead_row(quick)]
+    rows.append(_dormant_identity_row(quick))
+    rows.extend(_span_and_export_rows(quick))
+    return rows
+
+
+def _datasets(quick: bool):
+    n = 20_000 if quick else 60_000
+    keys = C.fb_like_keys(n)
+    return keys, C.values_for(keys)
+
+
+def _spec(telemetry: TelemetryConfig | None) -> StoreSpec:
+    """The ycsb-C store (relaxed 1024-window pipeline) ± telemetry."""
+    return StoreSpec("outback", load_factor=0.85,
+                     batch=BatchPolicy(window=_WINDOW, order="relaxed"),
+                     telemetry=telemetry)
+
+
+def _drive_gets(st, keys, idx) -> None:
+    """Pipelined pure-Get stream (YCSB-C): one submit per op."""
+    submit = st.submit
+    for i in idx:
+        submit("get", keys[i])
+    st.flush()
+
+
+# ---------------------------------------------------------------- overhead
+def _overhead_row(quick: bool):
+    # the workload is fixed (never shrunk by --quick), like the build
+    # microbench: shorter timed stretches read pure scheduler noise, so
+    # a quick CI run must measure the same thing the baseline recorded
+    del quick
+    keys, vals = _datasets(quick=False)
+    n_ops = 20_000
+    idx = C.zipf_indices(len(keys), n_ops, seed=41)
+
+    # one store per arm (a Get stream never mutates store state), timed
+    # stretches tightly interleaved: CPU-steal / frequency drift on a
+    # shared runner then hits both arms of every pair, min-of-reps takes
+    # the cleanest stretch of each, and GC pauses stay outside the clock
+    st_off = open_store(_spec(None), keys, vals)
+    st_on = open_store(_spec(TelemetryConfig(window_ops=4096)), keys, vals)
+
+    def timed(st):
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            _drive_gets(st, keys, idx)
+            return time.perf_counter() - t0
+        finally:
+            gc.enable()
+
+    timed(st_off), timed(st_on)  # warm-up rep each (allocator, caches)
+    t_off = t_on = float("inf")
+    for rep in range(_REPS):
+        first, second = (st_off, st_on) if rep % 2 == 0 else (st_on, st_off)
+        a, b = timed(first), timed(second)  # alternate order: no
+        if first is st_off:                 # which-arm-runs-first bias
+            t_off, t_on = min(t_off, a), min(t_on, b)
+        else:
+            t_off, t_on = min(t_off, b), min(t_on, a)
+    overhead = (t_on - t_off) / max(t_off, 1e-9)
+    hub = st_on.telemetry
+    got = hub.counters.get("ops{op=get}", 0)
+    if got != n_ops * (_REPS + 1):
+        raise RuntimeError(
+            f"telemetry miscounted the run: ops{{op=get}}={got}, "
+            f"drove {n_ops} x {_REPS + 1} reps")
+    return ("obs/overhead/ycsb_c", round(t_on / n_ops * 1e6, 4),
+            f"{overhead * 100:+.1f}%",
+            {"wall_off_s": round(t_off, 4), "wall_on_s": round(t_on, 4),
+             "overhead_frac": round(overhead, 4), "criterion": "< 0.05",
+             "ops": n_ops, "reps": _REPS,
+             "spec": _spec(TelemetryConfig(window_ops=4096)).to_json_dict()})
+
+
+# -------------------------------------------------------- dormant identity
+def _state_bytes(obj) -> bytes:
+    """Deterministic fingerprint of an MN state image (dict of arrays)."""
+    return pickle.dumps(obj)
+
+
+def _dormant_identity_row(quick: bool):
+    """Hub-on vs hub-absent: meters, trace, and MN state byte-identical.
+
+    The hub is a pure observer — every annotation site is a guarded
+    no-op on the dormant path and a read-only tap on the active one, so
+    the two stores must agree on every artifact the repo treats as
+    ground truth."""
+    keys, vals = _datasets(quick)
+    half = len(keys) // 2
+    idx = C.zipf_indices(half, 1_024, seed=43)
+    snaps, traces, states = [], [], []
+    for telemetry in (None, TelemetryConfig(window_ops=256)):
+        tr = Transport()
+        st = open_store(_spec(telemetry), keys[:half], vals[:half],
+                        transport=tr)
+        _drive_gets(st, keys[:half], idx)
+        st.insert_batch(keys[half:half + 64], vals[half:half + 64])
+        st.update_batch(keys[:64], vals[:64])
+        st.delete_batch(keys[64:96])
+        st.flush()
+        snaps.append(st.meter_totals().snapshot())
+        traces.append(tr.trace)
+        states.append(_state_bytes(_engine(st).mn_state()))
+    if snaps[0] != snaps[1]:
+        diff = {k: (snaps[0][k], snaps[1][k]) for k in snaps[0]
+                if snaps[0][k] != snaps[1][k]}
+        raise RuntimeError(f"telemetry perturbed the meters: {diff}")
+    if traces[0] != traces[1]:
+        raise RuntimeError("telemetry perturbed the recorded trace")
+    if states[0] != states[1]:
+        raise RuntimeError("telemetry perturbed the final MN state")
+    return ("obs/dormant_identity", 0.0, "identical",
+            {"ops": int(snaps[0]["ops"]),
+             "round_trips": int(snaps[0]["round_trips"]),
+             "trace_items": len(traces[0]),
+             "spec": _spec(TelemetryConfig(window_ops=256)).to_json_dict()})
+
+
+def _engine(st):
+    """The stack's engine (StoreLayer.__getattr__ delegates down)."""
+    return st.engine
+
+
+# -------------------------------------------------------- spans + exports
+def _span_and_export_rows(quick: bool):
+    keys, vals = _datasets(quick)
+    n_ops = 2_000 if quick else 8_000
+    idx = C.zipf_indices(len(keys), n_ops, seed=47)
+    tr = Transport()
+    st = open_store(_spec(TelemetryConfig(window_ops=512)), keys, vals,
+                    transport=tr)
+    _drive_gets(st, keys, idx)
+    st.insert(int(keys[0]) ^ 0xABCD, 7)  # one scalar write → a direct span
+    hub = st.telemetry
+
+    spans = list(hub.spans)
+    flushes = [s for s in spans if s.kind == "flush"]
+    if not flushes:
+        raise RuntimeError("the pipelined run opened no flush spans")
+    if not all("queue_wait_ops" in s.ann for s in flushes):
+        raise RuntimeError("flush spans missing queue-wait annotations")
+    if len(hub.snapshots) != hub.clock // 512:
+        raise RuntimeError(
+            f"snapshot cadence broke: {len(hub.snapshots)} snapshots at "
+            f"clock {hub.clock} (window 512)")
+
+    # ---- JSONL series: hub + simulated replay + pipeline stats --------
+    res = simulate(tr.trace, clients=4)
+    rows = telemetry_rows(hub) + sim_rows(res) + [pipeline_row(st.stats)]
+    validate_telemetry_rows(rows)
+    art_dir = os.environ.get("OBS_ARTIFACT_DIR")
+    trace_json = chrome_trace(tr.trace, clients=4)
+    if art_dir:
+        os.makedirs(art_dir, exist_ok=True)
+        write_jsonl(rows, os.path.join(art_dir, "telemetry.jsonl"))
+        back = read_jsonl(os.path.join(art_dir, "telemetry.jsonl"))
+        with open(os.path.join(art_dir, "perfetto_trace.json"), "w") as f:
+            json.dump(trace_json, f)
+    else:
+        back = [json.loads(json.dumps(r, sort_keys=True)) for r in rows]
+    if back != rows:
+        raise RuntimeError("JSONL round trip drifted")
+
+    ev = trace_json["traceEvents"]
+    n_slices = sum(1 for e in ev if e.get("ph") == "X")
+    sp = _spec(TelemetryConfig(window_ops=512)).to_json_dict()
+    return [
+        ("obs/spans", 0.0,
+         f"spans={hub.spans_opened};flushes={len(flushes)}",
+         {"spans_opened": hub.spans_opened, "flush_spans": len(flushes),
+          "snapshots": len(hub.snapshots), "clock": hub.clock,
+          "schema": TELEMETRY_SCHEMA, "spec": sp}),
+        ("obs/export/jsonl", 0.0, f"rows={len(rows)}",
+         {"rows": len(rows), "schema": TELEMETRY_SCHEMA,
+          "artifact_dir": art_dir or "", "spec": sp}),
+        ("obs/export/trace", 0.0, f"events={len(ev)}",
+         {"trace_events": len(ev), "x_slices": n_slices, "spec": sp}),
+    ]

@@ -43,6 +43,10 @@ def main() -> None:
                          "faults (K=2 crash/failover: p999 through a "
                          "seeded MN crash, availability curve, zero lost "
                          "acked writes, dormant-plane meter identity), "
+                         "obs (telemetry plane: ycsb-C overhead with the "
+                         "hub on vs off, dormant byte-identity, span/"
+                         "snapshot cadence, outback-telemetry/v1 JSONL + "
+                         "Perfetto exports), "
                          "kernel_paged, kernel_lookup, kernel_pagetable")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero if any suite produced an ERROR row")
@@ -55,7 +59,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (faults_bench, kernel_bench, net_bench,
-                            paper_figs, ycsb_bench)
+                            obs_bench, paper_figs, ycsb_bench)
     from benchmarks.common import emit
 
     n = 100_000 if args.quick else 300_000
@@ -78,6 +82,7 @@ def main() -> None:
         ("ycsb", lambda: ycsb_bench.ycsb_suite(args.quick,
                                                window=args.ycsb_window)),
         ("faults", lambda: faults_bench.faults_suite(args.quick)),
+        ("obs", lambda: obs_bench.obs_suite(args.quick)),
         ("kernel_paged", kernel_bench.paged_attention_traffic),
         ("kernel_lookup", kernel_bench.ludo_lookup_throughput),
         ("kernel_pagetable", kernel_bench.page_table_memory),

@@ -21,6 +21,13 @@ The seam between Outback's engines and everything that drives them:
   :class:`repro.api.stack.RetryLayer` (BACKOFF/retry with jittered
   backoff) above it.  See ``docs/FAILURE_MODEL.md``.
 
+A spec may also carry a :class:`repro.obs.TelemetryConfig`
+(``StoreSpec(kind, telemetry=...)``): ``open_store`` then assembles the
+same stack around a :class:`repro.obs.TelemetryHub` — op-clock counters,
+log-bucketed histograms, layer-annotated spans, JSONL/Perfetto exporters
+— as a pure observer (meters, traces and engine state stay byte-identical
+to the dormant plane).  See ``docs/OBSERVABILITY.md``.
+
 The benchmarks (``benchmarks/``), the serving session store
 (``repro.serve.session_store``), and CI's api-surface lane all construct
 stores exclusively through :func:`open_store`; the engines' legacy
@@ -43,6 +50,7 @@ from repro.api.registry import (SpecError, StoreSpec, open_store,
 from repro.api.replication import ReplicaSetAdapter, ShardLease
 from repro.api.stack import (CNCacheLayer, CNStack, MeterLayer, RetryLayer,
                              StoreLayer, TransportBinding)
+from repro.obs import TelemetryConfig, TelemetryHub
 
 __all__ = [
     "BatchPolicy",
@@ -63,6 +71,8 @@ __all__ = [
     "StoreAdapter",
     "StoreLayer",
     "StoreSpec",
+    "TelemetryConfig",
+    "TelemetryHub",
     "TransportBinding",
     "UnsupportedOperation",
     "open_store",

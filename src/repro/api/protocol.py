@@ -164,6 +164,10 @@ class PipelinedKVStore(KVStore, typing.Protocol):
     drains.  See ``repro.api.pipeline`` for the ordering semantics.
     """
 
+    # the store's TelemetryHub when the spec carried a TelemetryConfig,
+    # else None (the dormant plane) — see repro.obs and docs/OBSERVABILITY.md
+    telemetry: typing.Any
+
     def submit(self, op: str, keys, values=None) -> "OpHandle": ...  # noqa: F821
 
     def poll(self) -> list: ...

@@ -46,6 +46,7 @@ from repro.core.outback import OutbackShard
 from repro.core.sharded_kvs import build_sharded
 from repro.core.store import OutbackStore
 from repro.net.faults import FaultPlane, FaultSchedule
+from repro.obs import TelemetryConfig, TelemetryHub
 
 
 class SpecError(ValueError):
@@ -77,6 +78,11 @@ class StoreSpec:
     # no-fault meter totals stay byte-identical
     replicas: int = 1
     faults: FaultSchedule | None = None
+    # telemetry plane (repro.obs): a TelemetryConfig (or its JSON dict)
+    # makes open_store assemble an instrumented stack with a TelemetryHub;
+    # None (the default) keeps the plane dormant — contractually
+    # byte-identical meters, traces, and final store state
+    telemetry: TelemetryConfig | None = None
 
     def __post_init__(self):
         if isinstance(self.batch, dict):  # JSON round-trip normalisation
@@ -91,6 +97,13 @@ class StoreSpec:
                                    FaultSchedule.from_json_dict(self.faults))
             except ValueError as e:
                 raise SpecError(str(e)) from e
+        if isinstance(self.telemetry, dict):
+            try:
+                object.__setattr__(
+                    self, "telemetry",
+                    TelemetryConfig.from_json_dict(self.telemetry))
+            except ValueError as e:
+                raise SpecError(str(e)) from e
 
     # ------------------------------------------------------------- json
     def to_json_dict(self) -> dict:
@@ -102,7 +115,9 @@ class StoreSpec:
                 "params": dict(self.params),
                 "replicas": self.replicas,
                 "faults": (None if self.faults is None
-                           else self.faults.to_json_dict())}
+                           else self.faults.to_json_dict()),
+                "telemetry": (None if self.telemetry is None
+                              else self.telemetry.to_json_dict())}
 
     def to_json(self) -> str:
         return json.dumps(self.to_json_dict(), sort_keys=True)
@@ -169,6 +184,15 @@ class StoreSpec:
                     raise SpecError(
                         f"fault event targets MN {ev.mn} but the spec "
                         f"deploys {self.replicas} replica(s)")
+        if self.telemetry is not None:
+            if not isinstance(self.telemetry, TelemetryConfig):
+                raise SpecError(f"telemetry must be a TelemetryConfig (or "
+                                f"its JSON dict), got "
+                                f"{type(self.telemetry).__name__}")
+            try:
+                self.telemetry.validate()
+            except ValueError as e:
+                raise SpecError(str(e)) from e
         return reg
 
     def merged_params(self) -> dict:
@@ -235,6 +259,13 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
     :class:`repro.api.stack.RetryLayer` above it.  A replicas-only spec
     (no schedule) gets a dormant plane with leasing off, so its meter
     totals match the unreplicated store byte-for-byte.
+
+    When the spec carries a ``telemetry`` config, a
+    :class:`repro.obs.TelemetryHub` is built and threaded through every
+    stack layer (reachable as the returned store's ``telemetry``
+    attribute), with dim-tagged wire sinks fanned out to each replica's
+    and each shard's meter.  The hub is a pure observer: meters, traces,
+    and final store state stay byte-identical to a telemetry-off build.
     """
     reg = spec.validate()
     keys = np.asarray(keys, dtype=np.uint64)
@@ -251,13 +282,49 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
                            else FaultSchedule(lease_term_ops=0))
         adapter = ReplicaSetAdapter(group, spec, plane, transport=transport)
         retry = plane
+    hub = None
+    if spec.telemetry is not None:
+        hub = TelemetryHub(spec.telemetry)
+        _bind_hub_sinks(adapter, hub)
     cache = (CNKeyCache(spec.cache_budget_bytes)
              if spec.cache_budget_bytes else None)
     stack = CNStack(cache=cache,
                     transport_binding=TransportBinding(transport),
                     policy=spec.batch,
-                    retry=retry)
+                    retry=retry,
+                    hub=hub)
     return stack.assemble(adapter)
+
+
+def _bind_hub_sinks(adapter, hub) -> None:
+    """Fan dim-tagged hub wire sinks out to every meter under ``adapter``.
+
+    Replica sets get an ``mn=<i>`` dim per replica (plus a CN-ledger
+    sink for failover/lease wire); sharded hosts get ``shard=<i>`` per
+    shard; directory stores get ``shard=dir`` for the directory meter and
+    a per-table factory that survives §4.4 splits and resyncs."""
+    if isinstance(adapter, ReplicaSetAdapter):
+        adapter._meter.add_sink(hub.wire_sink(mn="cn"))
+        for i, rep in enumerate(adapter.replicas):
+            _bind_engine_sinks(rep, hub, {"mn": i})
+        return
+    _bind_engine_sinks(adapter, hub, {})
+
+
+def _bind_engine_sinks(adp, hub, dims: dict) -> None:
+    shards = getattr(adp, "shards", None)
+    if shards is not None:  # sharded host adapter: per-shard dims
+        adp._meter.add_sink(hub.wire_sink(**dims, shard="host"))
+        for i, sh in enumerate(shards):
+            sh.meter.add_sink(hub.wire_sink(**dims, shard=i))
+        return
+    eng = adp.engine
+    if hasattr(eng, "bind_table_sinks"):  # outback-dir: per-table dims
+        eng.meter.add_sink(hub.wire_sink(**dims, shard="dir"))
+        eng.bind_table_sinks(
+            lambda i, d=dict(dims): hub.wire_sink(**d, shard=i))
+        return
+    eng.meter.add_sink(hub.wire_sink(**dims))
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,9 @@ class ReplicaSetAdapter:
         self.primary = 0
         self._meter = CommMeter()  # CN-side ledger (fault attribution)
         self._needs_resync: set[int] = set()
+        # telemetry hub (pure observer); CNStack.assemble assigns it when
+        # the spec carries a TelemetryConfig — every use below is guarded.
+        self.hub = None
         self._install_leases()
 
     # ----------------------------------------------------- uniform surface
@@ -196,6 +199,9 @@ class ReplicaSetAdapter:
         self._meter.fault_wait_us += int(round(wait_us))
         if self.transport is not None:
             self.transport.add_wait(wait_us * 1e-6)
+        if self.hub is not None:
+            self.hub.hist("replica.fault_wait_us").record(wait_us)
+            self.hub.annotate(fault_wait_us=wait_us)
 
     def _resync(self, i: int) -> None:
         """Re-install replica ``i``'s MN half from a live replica.
@@ -221,6 +227,11 @@ class ReplicaSetAdapter:
         if self.transport is not None:
             self.transport.current_mn = 0
         self._meter.resyncs += 1
+        if self.hub is not None:
+            state_bytes = int(src.mn_state_bytes())
+            self.hub.count("replica.resyncs", mn=i)
+            self.hub.count("replica.resync_bytes", state_bytes, mn=i)
+            self.hub.annotate(resyncs=1, resync_bytes=state_bytes)
 
     def _lease_check(self, i: int) -> None:
         """Transport-boundary lease gate: renew before using replica ``i``."""
@@ -254,6 +265,9 @@ class ReplicaSetAdapter:
         self.plane.lease_revoked(self.primary)
         self.primary = nxt
         self._meter.failovers += 1
+        if self.hub is not None:
+            self.hub.count("replica.failovers")
+            self.hub.annotate(failovers=1, failover_to=f"mn{nxt}")
         return True
 
     # ------------------------------------------------------------ internals
@@ -295,6 +309,10 @@ class ReplicaSetAdapter:
             self._meter.backoffs += n
             return backoff_result(n)
         self._lease_check(live[0])
+        if self.hub is not None:
+            for i in live:
+                self.hub.count("replica.write_lanes", n, mn=i)
+            self.hub.annotate(write_replicas=len(live))
         res = None
         try:
             for i in live:

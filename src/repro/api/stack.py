@@ -79,10 +79,11 @@ class RetryLayer(StoreLayer):
     wrap is a pure pass-through: no meter event, no trace event.
     """
 
-    def __init__(self, inner, plane, transport=None):
+    def __init__(self, inner, plane, transport=None, hub=None):
         super().__init__(inner)
         self.plane = plane
         self.transport = transport
+        self.hub = hub
 
     def _with_retry(self, n: int, call) -> OpResult:
         from repro.api.replication import UNAVAILABLE, is_backoff
@@ -91,11 +92,17 @@ class RetryLayer(StoreLayer):
             return res
         sched = self.plane.schedule
         meter = self.inner.meter
+        hub = self.hub
         for attempt in range(sched.max_retries):
             wait_us = sched.timeout_us + self.plane.backoff_us(attempt)
             meter.fault_wait_us += int(round(wait_us))
             if self.transport is not None:
                 self.transport.add_wait(wait_us * 1e-6)
+            if hub is not None:
+                hub.count("retry.backoff_rounds")
+                hub.hist("retry.backoff_wait_us").record(int(round(wait_us)))
+                hub.annotate(backoff_rounds=1,
+                             backoff_wait_us=int(round(wait_us)))
             if (attempt + 1 >= sched.failover_after
                     and self.plane.crash_open(self.inner.primary)
                     and self.inner.can_failover()):
@@ -104,6 +111,9 @@ class RetryLayer(StoreLayer):
             res = call()
             if not is_backoff(res):
                 return res
+        if hub is not None:
+            hub.count("retry.unavailable_lanes", n)
+            hub.annotate(unavailable_lanes=n)
         return OpResult(values=np.zeros(n, np.uint64),
                         found=np.zeros(n, bool),
                         statuses=(UNAVAILABLE,) * n)
@@ -149,9 +159,10 @@ class CNCacheLayer(StoreLayer):
     counters it offsets.
     """
 
-    def __init__(self, inner, cache: CNKeyCache):
+    def __init__(self, inner, cache: CNKeyCache, hub=None):
         super().__init__(inner)
         self.cache = cache
+        self.hub = hub
         inner.bind_cache(cache)  # engine-side sync points (resize)
 
     # ---------------------------------------------------------------- gets
@@ -160,12 +171,20 @@ class CNCacheLayer(StoreLayer):
         state, val = self.cache.lookup(int(key))
         if state == "hit":
             meter.add_cache_hit(1, **self.inner.cache_hit_savings)
+            if self.hub is not None:
+                self.hub.on_cache(1, 0, 0)
+                self.hub.annotate(cache_hits=1)
             return OpResult(values=np.asarray([val], np.uint64),
                             found=np.asarray([True]))
         if state == "neg":
             meter.add_cache_hit(1, neg=True, **self.inner.cache_neg_savings)
+            if self.hub is not None:
+                self.hub.on_cache(0, 1, 0)
+                self.hub.annotate(cache_neg_hits=1)
             return OpResult(values=np.zeros(1, np.uint64),
                             found=np.asarray([False]))
+        if self.hub is not None:
+            self.hub.on_cache(0, 0, 1)
         res = self.inner.get(key)
         if res.statuses is None:  # degraded answers teach the cache nothing
             self.cache.fill(int(key), res.value)
@@ -182,6 +201,12 @@ class CNCacheLayer(StoreLayer):
         meter.add_cache_hit(int(hit.sum()), **self.inner.cache_hit_savings)
         meter.add_cache_hit(int(neg.sum()), neg=True,
                             **self.inner.cache_neg_savings)
+        if self.hub is not None:
+            n_hit, n_neg = int(hit.sum()), int(neg.sum())
+            n_miss = len(keys) - n_hit - n_neg
+            self.hub.on_cache(n_hit, n_neg, n_miss)
+            self.hub.annotate(cache_hits=n_hit, cache_neg_hits=n_neg,
+                              cache_misses=n_miss)
         values = ((np.asarray(c_vhi, np.uint64) << np.uint64(32))
                   | np.asarray(c_vlo, np.uint64))
         found = hit.copy()
@@ -263,9 +288,19 @@ class CNCacheLayer(StoreLayer):
 
 
 class MeterLayer(StoreLayer):
-    """Outermost stage: stamps per-call meter deltas onto each OpResult."""
+    """Outermost stage: stamps per-call meter deltas onto each OpResult.
 
-    def _attributed(self, n: int, call) -> OpResult:
+    With a telemetry hub attached it also forwards each call's
+    attribution to ``hub.on_op`` under its op kind (the per-op-kind
+    counters/histograms of the ``obs`` plane) and annotates the active
+    span — reading only the deltas it already computed, so metered
+    results are byte-identical with the hub on or off."""
+
+    def __init__(self, inner, hub=None):
+        super().__init__(inner)
+        self.hub = hub
+
+    def _attributed(self, n: int, call, op: str = "get") -> OpResult:
         before = self.inner.meter_totals()
         res = call()
         after = self.inner.meter_totals()
@@ -281,37 +316,50 @@ class MeterLayer(StoreLayer):
         res.retries = after.retries - before.retries
         res.backoffs = after.backoffs - before.backoffs
         res.failovers = after.failovers - before.failovers
+        hub = self.hub
+        if hub is not None:
+            hub.on_op(op, n, round_trips=res.round_trips,
+                      req_bytes=res.req_bytes, resp_bytes=res.resp_bytes,
+                      makeups=res.makeups, retries=res.retries,
+                      backoffs=res.backoffs, failovers=res.failovers)
+            hub.annotate(round_trips=res.round_trips,
+                         req_bytes=res.req_bytes, resp_bytes=res.resp_bytes,
+                         makeups=res.makeups)
         return res
 
     def get(self, key: int) -> OpResult:
-        return self._attributed(1, lambda: self.inner.get(key))
+        return self._attributed(1, lambda: self.inner.get(key), "get")
 
     def get_batch(self, keys, xp=np, *,
                   resolve_makeup: bool | None = None) -> OpResult:
         return self._attributed(
             len(keys), lambda: self.inner.get_batch(
-                keys, xp, resolve_makeup=resolve_makeup))
+                keys, xp, resolve_makeup=resolve_makeup), "get")
 
     def insert(self, key: int, value: int) -> OpResult:
-        return self._attributed(1, lambda: self.inner.insert(key, value))
+        return self._attributed(1, lambda: self.inner.insert(key, value),
+                                "insert")
 
     def update(self, key: int, value: int) -> OpResult:
-        return self._attributed(1, lambda: self.inner.update(key, value))
+        return self._attributed(1, lambda: self.inner.update(key, value),
+                                "update")
 
     def delete(self, key: int) -> OpResult:
-        return self._attributed(1, lambda: self.inner.delete(key))
+        return self._attributed(1, lambda: self.inner.delete(key), "delete")
 
     def insert_batch(self, keys, values) -> OpResult:
         return self._attributed(
-            len(keys), lambda: self.inner.insert_batch(keys, values))
+            len(keys), lambda: self.inner.insert_batch(keys, values),
+            "insert")
 
     def update_batch(self, keys, values) -> OpResult:
         return self._attributed(
-            len(keys), lambda: self.inner.update_batch(keys, values))
+            len(keys), lambda: self.inner.update_batch(keys, values),
+            "update")
 
     def delete_batch(self, keys) -> OpResult:
         return self._attributed(
-            len(keys), lambda: self.inner.delete_batch(keys))
+            len(keys), lambda: self.inner.delete_batch(keys), "delete")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -343,15 +391,20 @@ class CNStack:
     transport_binding: TransportBinding = TransportBinding()
     policy: object | None = None  # BatchPolicy; None -> sync()
     retry: object | None = None   # FaultPlane; None -> no retry stage
+    hub: object | None = None     # repro.obs.TelemetryHub; None -> dormant
 
     def assemble(self, adapter):
         from repro.api.pipeline import PipelineLayer  # avoid import cycle
         store = adapter  # transport already bound below the engine
+        if self.hub is not None and hasattr(adapter, "hub"):
+            adapter.hub = self.hub  # ReplicaSetAdapter annotations
         if self.retry is not None:
             store = RetryLayer(store, self.retry,
-                               transport=self.transport_binding.transport)
+                               transport=self.transport_binding.transport,
+                               hub=self.hub)
         if self.cache is not None:
-            store = CNCacheLayer(store, self.cache)
-        store = MeterLayer(store)
+            store = CNCacheLayer(store, self.cache, hub=self.hub)
+        store = MeterLayer(store, hub=self.hub)
         return PipelineLayer(store, policy=self.policy,
-                             transport=self.transport_binding.transport)
+                             transport=self.transport_binding.transport,
+                             hub=self.hub)

@@ -56,16 +56,40 @@ class CommMeter:
     lease_renewals: int = 0  # MN lease grants/renewals (1 small RT each)
     resyncs: int = 0         # full MN-state re-installs after a restart
     fault_wait_us: int = 0   # CN stall from timeouts/backoff/lease drains
-    # Optional event sink — an explicit per-instance field, NOT a counter: a
-    # ``repro.net.Transport`` plugged in here receives every ``add`` call and
-    # turns the counter stream into a replayable timed-op trace.  Excluded
-    # from ``merge``/``reset``/``per_op``/``snapshot`` (see ``_counters``);
-    # ``repro.api.open_store`` wires it as the stack's transport stage.
-    sink: object | None = dataclasses.field(default=None, repr=False,
-                                            compare=False)
+    # Optional event sinks — an explicit per-instance field, NOT a counter:
+    # every object here receives each ``add`` call (``on_meter_add``), in
+    # attachment order.  A ``repro.net.Transport`` plugged in turns the
+    # counter stream into a replayable timed-op trace; a telemetry hub's
+    # wire sink (``repro.obs``) feeds per-shard/per-replica wire stats.
+    # Excluded from ``merge``/``reset``/``per_op``/``snapshot`` (see
+    # ``_counters``) so accounting identity is untouched by observers.
+    # The legacy single-slot ``sink`` attribute survives as a property.
+    sinks: list = dataclasses.field(default_factory=list, repr=False,
+                                    compare=False)
 
     def _counters(self):
-        return [f.name for f in dataclasses.fields(self) if f.name != "sink"]
+        return [f.name for f in dataclasses.fields(self)
+                if f.name != "sinks"]
+
+    @property
+    def sink(self):
+        """The primary event sink (first of ``sinks``), or ``None``.
+
+        Backward-compatible single-slot view: ``meter.sink = transport``
+        still works exactly as before (it *replaces* the whole fan-out
+        list with that one sink — engines assign it at construction, on
+        a fresh meter).  Use :meth:`add_sink` to fan out to additional
+        observers without disturbing the transport."""
+        return self.sinks[0] if self.sinks else None
+
+    @sink.setter
+    def sink(self, value) -> None:
+        self.sinks = [] if value is None else [value]
+
+    def add_sink(self, sink) -> None:
+        """Append an additional event sink (idempotent per object)."""
+        if sink is not None and all(s is not sink for s in self.sinks):
+            self.sinks.append(sink)
 
     def add(self, n: int = 1, *, rts: int = 0, req: int = 0, resp: int = 0,
             mn_hash: int = 0, mn_cmp: int = 0, mn_reads: int = 0,
@@ -104,8 +128,8 @@ class CommMeter:
         self.mn_mem_writes += m * mn_writes
         self.cn_hash_ops += m * cn_hash
         self.cn_cmp_ops += m * cn_cmp
-        if self.sink is not None:
-            self.sink.on_meter_add(
+        for s in self.sinks:
+            s.on_meter_add(
                 n, rts=rts, req=req_b, resp=resp_b, mn_hash=mn_hash,
                 mn_cmp=mn_cmp, mn_reads=mn_reads, mn_writes=mn_writes,
                 cn_hash=cn_hash, cn_cmp=cn_cmp, one_sided=one_sided,

@@ -86,6 +86,10 @@ class OutbackStore:
         self._buffer: list = []
         self._open_split = None
         self._lease = None  # optional lease guard, pushed to every table
+        # optional telemetry wire-sink factory (repro.obs): index -> sink,
+        # re-applied to split successors and resynced tables so per-table
+        # wire stats survive §4.4 splits and replica re-installs
+        self._sink_factory = None
 
     # ------------------------------------------------------------- routing
     def _dir_hash(self, keys: np.ndarray) -> np.ndarray:
@@ -343,11 +347,16 @@ class OutbackStore:
         self.meter.add(self.num_compute_nodes, rts=3, req=16, resp=per_cn,
                        one_sided=True)
 
-        # Swap directory pointers (successors inherit the lease guard).
+        # Swap directory pointers (successors inherit the lease guard
+        # and, when telemetry is on, per-table wire sinks at their new
+        # directory indices).
         h.t_lo.lease = h.t_hi.lease = self._lease
         self.tables.append(h.t_hi)
         hi_idx = len(self.tables) - 1
         self.tables[t_idx] = h.t_lo
+        if self._sink_factory is not None:
+            h.t_lo.meter.add_sink(self._sink_factory(t_idx))
+            h.t_hi.meter.add_sink(self._sink_factory(hi_idx))
         self.local_depth[t_idx] = depth + 1
         self.local_depth.append(depth + 1)
         for e in range(len(self.directory)):
@@ -400,6 +409,26 @@ class OutbackStore:
         for t in self.tables:
             t.lease = lease
 
+    # ----------------------------------------------------------- telemetry
+    def bind_table_sinks(self, factory) -> None:
+        """Attach a per-table telemetry wire sink, present and future.
+
+        ``factory(table_index)`` must return an object implementing the
+        meter-sink protocol (``on_meter_add``); it is applied to every
+        current table's meter and — like :meth:`set_lease` — re-applied
+        to §4.4 split successors (at the directory index they take) and
+        to tables rebuilt by a replica resync.  Sinks are observers: the
+        meters' accounting and the transport trace are byte-identical
+        with or without them."""
+        self._sink_factory = factory
+        if factory is None:
+            return
+        seen = set()
+        for i, t in enumerate(self.tables):
+            if id(t) not in seen:  # a table may sit at several indices
+                seen.add(id(t))
+                t.meter.add_sink(factory(i))
+
     def mn_state(self) -> dict:
         """Deep-copied image of the whole directory store's MN half.
 
@@ -441,8 +470,10 @@ class OutbackStore:
                                          load_factor=st["load_factor"],
                                          transport=self.transport)
                 for st in state["tables"]]
-            for t in self.tables:
+            for i, t in enumerate(self.tables):
                 t.lease = self._lease
+                if self._sink_factory is not None:
+                    t.meter.add_sink(self._sink_factory(i))
         self.global_depth = int(state["global_depth"])
         self.local_depth = list(state["local_depth"])
         self.directory = list(state["directory"])

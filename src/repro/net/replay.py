@@ -57,6 +57,16 @@ class SimResult:
     # (t0, t1, kind, replica) for every FaultMark window that opened
     fault_windows: list[tuple[float, float, str, int]] = \
         dataclasses.field(default_factory=list)
+    # populated only under simulate(record_spans=True):
+    # op_spans: per-op dicts {cid, t0_s, t1_s, cn_hash, cn_cmp, segs:
+    #   [{t0_s, t1_s, mn, one_sided, wait_s}, ...]} in completion order;
+    # server_spans: (start_s, service_s, server_name) per started batch;
+    # doorbell_ts: (sim_time_s, n_ops) per consumed DoorbellMark
+    op_spans: list[dict] = dataclasses.field(default_factory=list)
+    server_spans: list[tuple[float, float, str]] = \
+        dataclasses.field(default_factory=list)
+    doorbell_ts: list[tuple[float, int]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def tput_mops(self) -> float:
@@ -119,7 +129,8 @@ class SimResult:
 def simulate(trace, *, clients: int = 1, window: int | str = 1,
              mn_threads: int = 1, doorbell: bool = True,
              service: ServiceModel = CX6,
-             max_ops: int | None = None, replicas: int = 1) -> SimResult:
+             max_ops: int | None = None, replicas: int = 1,
+             record_spans: bool = False) -> SimResult:
     """Replay ``trace`` with ``clients`` closed-loop clients.
 
     ``window`` bounds each client QP's outstanding ops (>=1); posting more
@@ -135,6 +146,13 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
     marked replica's servers and NIC-saturation windows stretch its NIC
     service.  There is no randomness anywhere: the same trace and
     parameters produce bit-identical percentiles on every run.
+
+    ``record_spans=True`` additionally captures per-op spans (client id,
+    post/complete times, per-segment wire intervals), per-server busy
+    intervals, and doorbell instants into the result — the raw material
+    for :func:`repro.obs.export.chrome_trace`.  Recording is pure
+    observation: schedules, latencies and percentiles are bit-identical
+    with it on or off.
     """
     policy_window = window == "policy"
     # "left" counts the current doorbell group down so ops recorded
@@ -166,6 +184,12 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
     done_t: list[float] = []
     windows: list[tuple[float, float]] = []
     fwindows: list[tuple[float, float, str, int]] = []
+    op_spans: list[dict] = []
+    server_spans: list[tuple[float, float, str]] = []
+    doorbell_ts: list[tuple[float, int]] = []
+    if record_spans:
+        for srv in mn_cpus + mn_nics:
+            srv.log = server_spans
 
     def _open_fault_window(mark: FaultMark) -> None:
         r = mark.mn % n_rep
@@ -208,6 +232,8 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
                 _open_fault_window(it)
                 continue
             if isinstance(it, DoorbellMark):
+                if record_spans:
+                    doorbell_ts.append((sim.now, it.n_ops))
                 if policy_window:  # numeric windows ignore recorded flushes
                     cur_w["w"] = max(1, it.n_ops)
                     cur_w["left"] = it.n_ops
@@ -221,7 +247,7 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
         return None
 
     class Client:
-        __slots__ = ("post", "inflight")
+        __slots__ = ("post", "inflight", "cid")
 
         def __init__(self, cid: int) -> None:
             # one RC QP per client: posts serialise here, and queued WQEs
@@ -232,6 +258,7 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
                 coalesce_extra_s=service.cn_post_batched_s,
                 name=f"qp{cid}")
             self.inflight = 0
+            self.cid = cid
 
         def pump(self) -> None:
             while self.inflight < cur_w["w"]:
@@ -240,18 +267,34 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
                     return
                 self.inflight += 1
                 t0 = sim.now
+                rec = None
+                if record_spans:
+                    rec = {"cid": self.cid, "t0_s": t0, "t1_s": 0.0,
+                           "cn_hash": op.cn_hash, "cn_cmp": op.cn_cmp,
+                           "segs": []}
                 sim.schedule(service.cn_compute_s(op.cn_hash, op.cn_cmp),
-                             lambda op=op, t0=t0: self._segment(op, 0, t0))
+                             lambda op=op, t0=t0, rec=rec:
+                             self._segment(op, 0, t0, rec))
 
-        def _segment(self, op: OpEvent, si: int, t0: float) -> None:
+        def _segment(self, op: OpEvent, si: int, t0: float,
+                     rec: dict | None = None) -> None:
+            if rec is not None and rec["segs"]:
+                rec["segs"][-1]["t1_s"] = sim.now  # previous segment done
             if si >= len(op.segments):
                 lat_us.append((sim.now - t0) * 1e6)
                 done_t.append(sim.now)
+                if rec is not None:
+                    rec["t1_s"] = sim.now
+                    op_spans.append(rec)
                 self.inflight -= 1
                 self.pump()
                 return
             seg = op.segments[si]
             r = seg.mn % n_rep
+            if rec is not None:
+                rec["segs"].append({"t0_s": sim.now, "t1_s": sim.now,
+                                    "mn": r, "one_sided": seg.one_sided,
+                                    "wait_s": seg.wait_s})
 
             def after_post():
                 sim.schedule(service.wire_s, arrive_mn)
@@ -267,7 +310,7 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
 
             def respond():
                 sim.schedule(service.wire_s + service.cn_recv_s(seg),
-                             lambda: self._segment(op, si + 1, t0))
+                             lambda: self._segment(op, si + 1, t0, rec))
 
             def start_post():
                 self.post.request(service.cn_post_s, after_post)
@@ -289,7 +332,9 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
         resize_windows=windows,
         mn_cpu_busy_s=sum(s.busy_s for s in mn_cpus),
         mn_nic_busy_s=sum(s.busy_s for s in mn_nics),
-        fault_windows=fwindows)
+        fault_windows=fwindows,
+        op_spans=op_spans, server_spans=server_spans,
+        doorbell_ts=doorbell_ts)
 
 
 def _open_resize_window(sim: Simulator, mn_cpus: list[Server],

@@ -69,6 +69,11 @@ class Server:
         self.busy_s = 0.0  # integrated service time (utilisation accounting)
         self.paused = False
         self.name = name
+        # optional service log: (start_s, service_s, name) per started
+        # batch, appended in schedule order (deterministic).  The replay
+        # engine attaches a shared list here under record_spans=True so
+        # MN busy intervals can be exported as trace slices.
+        self.log: list | None = None
 
     def request(self, service_s: float, done: Callable[[], None]) -> None:
         self.queue.append((service_s, done))
@@ -94,6 +99,8 @@ class Server:
                 batch.append(extra_done)
             svc *= self.factor
             self.busy_s += svc
+            if self.log is not None:
+                self.log.append((self.sim.now, svc, self.name))
             self.sim.schedule(svc, lambda batch=batch: self._complete(batch))
 
     def _complete(self, batch: list[Callable[[], None]]) -> None:

@@ -256,6 +256,26 @@ class Transport:
     def __len__(self) -> int:
         return sum(1 for e in self.trace if isinstance(e, OpEvent))
 
+    def event_counts(self) -> dict[str, int]:
+        """Per-kind tally of the trace (ops/segments + each mark kind).
+
+        A cheap deterministic summary for telemetry exports: counting
+        never touches the trace, so it is safe under the dormant-plane
+        contract."""
+        ops = segs = resize = fault = doorbell = 0
+        for e in self.trace:
+            if isinstance(e, OpEvent):
+                ops += 1
+                segs += len(e.segments)
+            elif isinstance(e, ResizeMark):
+                resize += 1
+            elif isinstance(e, FaultMark):
+                fault += 1
+            elif isinstance(e, DoorbellMark):
+                doorbell += 1
+        return {"ops": ops, "segments": segs, "resize_marks": resize,
+                "fault_marks": fault, "doorbell_marks": doorbell}
+
     def reset(self) -> None:
         self.trace.clear()
         self._attach = -1

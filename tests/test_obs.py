@@ -1,0 +1,381 @@
+"""Telemetry-plane contracts (ISSUE 7): deterministic histograms, the
+op-clock hub, span annotations, exporters, and — load-bearing — the
+dormant-plane byte-identity guarantee: a store assembled with telemetry
+must leave meters, recorded traces, and final MN state exactly as a
+store assembled without it.
+"""
+
+import json
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.api import (BatchPolicy, StoreSpec, TelemetryConfig, open_store)
+from repro.core.hashing import splitmix64
+from repro.core.meter import CommMeter
+from repro.core.store import make_uniform_keys
+from repro.net import FaultSchedule, Transport
+from repro.obs import (HIST_SPEC, LogHistogram, SPAN_KINDS, TELEMETRY_SCHEMA,
+                       TelemetryHub, chrome_trace, telemetry_rows,
+                       validate_telemetry_rows)
+from repro.obs.hist import (N_BUCKETS, bucket_hi, bucket_index,
+                            bucket_indices, bucket_lo)
+
+
+def _dataset(n=2048, seed=5):
+    keys = make_uniform_keys(n, seed)
+    return keys, splitmix64(keys)
+
+
+def _spec(telemetry=None, **kw):
+    return StoreSpec("outback", load_factor=0.85, telemetry=telemetry, **kw)
+
+
+# ------------------------------------------------------------- histograms
+def test_bucket_edges_contain_their_values():
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([rng.uniform(0, 3, 200),
+                           rng.uniform(1, 2**40, 200),
+                           [0.0, 0.5, 1.0, 2.0, 2.0**44, 2.0**50]])
+    for v in vals:
+        i = bucket_index(float(v))
+        assert 0 <= i < N_BUCKETS
+        if i < N_BUCKETS - 1:  # overflow bucket clamps
+            assert bucket_lo(i) <= v < bucket_hi(i)
+    # the vectorised path is exactly the scalar path
+    assert np.array_equal(bucket_indices(vals),
+                          [bucket_index(float(v)) for v in vals])
+
+
+def test_histogram_merge_is_associative_and_weighted_record_matches():
+    rng = np.random.default_rng(1)
+    parts = [rng.integers(0, 10_000, 300) for _ in range(3)]
+    hs = []
+    for p in parts:
+        h = LogHistogram()
+        h.record_many(p)
+        hs.append(h)
+    left = hs[0].copy().merge(hs[1]).merge(hs[2])
+    right = hs[0].copy().merge(hs[1].copy().merge(hs[2]))
+    assert left == right and left.n == 900
+    # weighted vectorised recording == scalar repeated recording
+    a, b = LogHistogram(), LogHistogram()
+    vals = rng.integers(0, 5000, 200)
+    w = rng.integers(0, 4, 200)
+    for v, k in zip(vals, w):
+        a.record(int(v), int(k))
+    b.record_many(vals, weights=w)
+    assert a == b
+
+
+def test_record_range_matches_elementwise_recording():
+    # the flush path's dense-run shortcut must be bit-identical to
+    # recording every integer of the range individually
+    rng = np.random.default_rng(3)
+    cases = [(0, 1), (0, 5), (-3, 2), (-5, -1), (5, 5), (1023, 2048),
+             (2**44 - 5, 2**44 + 5)]
+    cases += [tuple(sorted(rng.integers(-10, 200_000, 2)))
+              for _ in range(50)]
+    acc_a, acc_b = LogHistogram(), LogHistogram()
+    for a, b in cases:
+        h1, h2 = LogHistogram(), LogHistogram()
+        h1.record_range(a, b)
+        h2.record_many(np.arange(a, b))
+        assert h1 == h2, (a, b)
+        assert h1.total() == h1.n
+        acc_a.record_range(a, b)          # and accumulation on one
+        acc_b.record_many(np.arange(a, b))  # histogram stays identical
+    assert acc_a == acc_b
+
+
+def test_histogram_json_round_trip_and_spec_guard():
+    h = LogHistogram()
+    h.record_many(np.random.default_rng(2).integers(0, 10**6, 500))
+    d = json.loads(json.dumps(h.to_json_dict(), sort_keys=True))
+    assert LogHistogram.from_json_dict(d) == h
+    bad = dict(d, spec={"scheme": "other"})
+    with pytest.raises(ValueError, match="spec mismatch"):
+        LogHistogram.from_json_dict(bad)
+
+
+def test_percentile_stays_in_observed_range():
+    h = LogHistogram()
+    h.record_many([100.0] * 50)
+    assert h.percentile(50) == 100.0  # min/max bound the bucket midpoint
+    h.record_many(np.linspace(10, 1000, 100))
+    for q in (1, 50, 99, 99.9):
+        assert 10 <= h.percentile(q) <= 1000
+
+
+# ------------------------------------------------------- config and spec
+def test_telemetry_config_round_trip_and_validation():
+    cfg = TelemetryConfig(window_ops=128, spans_max=16)
+    assert TelemetryConfig.from_json_dict(cfg.to_json_dict()) == cfg
+    with pytest.raises(ValueError, match="window_ops"):
+        TelemetryConfig(window_ops=0).validate()
+    with pytest.raises(ValueError, match="unknown"):
+        TelemetryConfig.from_json_dict({"window_ops": 4, "bogus": 1})
+
+
+def test_store_spec_carries_telemetry_through_json():
+    spec = _spec(TelemetryConfig(window_ops=64))
+    d = json.loads(json.dumps(spec.to_json_dict()))
+    back = StoreSpec.from_json_dict(d)
+    assert back.telemetry == TelemetryConfig(window_ops=64)
+    assert StoreSpec.from_json_dict(_spec().to_json_dict()).telemetry is None
+
+
+# ------------------------------------------------------- dormant identity
+def test_dormant_plane_is_byte_identical():
+    """Meters, recorded trace, and final MN state must not notice the hub."""
+    keys, vals = _dataset()
+    q = keys[np.random.default_rng(7).integers(0, 1024, 512)]
+    snaps, traces, states = [], [], []
+    for telemetry in (None, TelemetryConfig(window_ops=64)):
+        tr = Transport()
+        st = open_store(_spec(telemetry,
+                              batch=BatchPolicy(window=128,
+                                                order="relaxed")),
+                        keys[:1024], vals[:1024], transport=tr)
+        for i in range(0, 512, 128):
+            st.get_batch(q[i:i + 128])
+        st.insert_batch(keys[1024:1088], vals[1024:1088])
+        st.update_batch(keys[:32], vals[:32])
+        st.delete_batch(keys[32:48])
+        st.flush()
+        snaps.append(st.meter_totals().snapshot())
+        traces.append(tr.trace)
+        states.append(pickle.dumps(st.engine.mn_state()))
+    assert snaps[0] == snaps[1]
+    assert traces[0] == traces[1]
+    assert states[0] == states[1], "telemetry perturbed the final MN state"
+
+
+def test_seeded_rerun_is_bit_identical():
+    """Same spec + same op stream → byte-identical JSONL and trace JSON."""
+    outs = []
+    for _ in range(2):
+        keys, vals = _dataset()
+        tr = Transport()
+        st = open_store(_spec(TelemetryConfig(window_ops=64),
+                              batch=BatchPolicy(window=64,
+                                                order="relaxed")),
+                        keys[:1024], vals[:1024], transport=tr)
+        for i in range(0, 1024, 64):
+            st.get_batch(keys[i:i + 64])
+        st.insert_batch(keys[1024:1056], vals[1024:1056])
+        st.flush()
+        rows = telemetry_rows(st.telemetry)
+        validate_telemetry_rows(rows)
+        outs.append((
+            "\n".join(json.dumps(r, sort_keys=True) for r in rows),
+            json.dumps(chrome_trace(tr.trace, clients=2), sort_keys=True)))
+    assert outs[0][0] == outs[1][0]
+    assert outs[0][1] == outs[1][1]
+
+
+# --------------------------------------------------------- clock and spans
+def test_snapshot_cadence_follows_the_op_clock():
+    keys, vals = _dataset()
+    st = open_store(_spec(TelemetryConfig(window_ops=100),
+                          batch=BatchPolicy(window=64, order="relaxed")),
+                    keys[:1024], vals[:1024])
+    for i in range(0, 640, 64):
+        st.get_batch(keys[i:i + 64])
+    hub = st.telemetry
+    assert hub.clock == 640
+    assert [s["clock"] for s in hub.snapshots] == [100, 200, 300, 400,
+                                                   500, 600]
+    # snapshots are cumulative: counters never decrease window to window
+    for a, b in zip(hub.snapshots, hub.snapshots[1:]):
+        for k, v in a["counters"].items():
+            assert b["counters"].get(k, 0) >= v
+
+
+def test_flush_spans_carry_layer_annotations():
+    keys, vals = _dataset()
+    st = open_store(_spec(TelemetryConfig(),
+                          batch=BatchPolicy(window=32, order="relaxed")),
+                    keys[:1024], vals[:1024])
+    for i in range(64):
+        st.submit("get", int(keys[i]))
+    st.flush()
+    st.insert(int(keys[0]) ^ 0x5A5A, 9)  # scalar convenience → its own span
+    hub = st.telemetry
+    spans = list(hub.spans)
+    assert all(s.kind in SPAN_KINDS for s in spans)
+    flushes = [s for s in spans if s.kind == "flush"]
+    assert len(flushes) >= 2
+    for s in flushes:
+        assert s.op == "get" and s.trigger in ("window", "explicit")
+        assert s.ann["coalesced"] >= 1
+        assert "queue_wait_ops" in s.ann
+        # MeterLayer annotated the wire cost of the flush it ran under
+        assert s.ann["round_trips"] >= 1
+        assert s.ann["req_bytes"] > 0
+    assert any(s.kind == "scalar" for s in spans)
+    assert hub.counters["ops{op=get}"] == 64
+    assert hub.counters["ops{op=insert}"] == 1
+    assert hub.counters["pipe.flushes{trigger=window}"] == 2
+
+
+def test_span_deque_is_bounded_and_numbered():
+    hub = TelemetryHub(TelemetryConfig(spans_max=4))
+    for i in range(10):
+        hub.begin_span("flush", "get", 1, "window")
+    assert hub.spans_opened == 10
+    assert len(hub.spans) == 4
+    assert [s.span_id for s in hub.spans] == [6, 7, 8, 9]
+
+
+# -------------------------------------------- failure-plane instrumentation
+def test_crash_run_lands_on_replica_dims_and_retry_counters():
+    keys, vals = _dataset(4096)
+    sched = FaultSchedule.single_crash(at_op=256, duration_ops=256,
+                                      down_s=100e-6, lease_term_ops=128)
+    st = open_store(_spec(TelemetryConfig(window_ops=128),
+                          replicas=2, faults=sched),
+                    keys[:2048], vals[:2048])
+    for i in range(0, 2048, 64):
+        st.get_batch(keys[i:i + 64])
+    st.insert_batch(keys[2048:2112], vals[2048:2112])
+    hub = st.telemetry
+    c = hub.counters
+    assert c.get("replica.failovers", 0) >= 1
+    assert c.get("retry.backoff_rounds", 0) >= 1
+    assert any(k.startswith("replica.resyncs{mn=") for k in c)
+    # per-replica wire dims (the CN ledger only counts attribute-style
+    # fault bookkeeping, so its mn=cn sink stays silent here)
+    assert "wire.events{mn=0}" in c and "wire.events{mn=1}" in c
+    assert "replica.write_lanes{mn=0}" in c
+    rows = telemetry_rows(hub)
+    validate_telemetry_rows(rows)
+
+
+def test_sharded_and_directory_stores_tag_shard_dims():
+    keys, vals = _dataset(4096)
+    st = open_store(StoreSpec("sharded", telemetry=TelemetryConfig(),
+                              params={"num_shards": 2}),
+                    keys[:2048], vals[:2048])
+    st.get_batch(keys[:256])
+    c = st.telemetry.counters
+    # per-shard sinks fire on the wire path (the host-side ledger meter
+    # only aggregates, so its shard=host sink stays silent on pure gets)
+    assert "wire.events{shard=0}" in c and "wire.events{shard=1}" in c
+
+    st = open_store(StoreSpec("outback-dir", load_factor=0.85,
+                              telemetry=TelemetryConfig()),
+                    keys[:1024], vals[:1024])
+    st.get_batch(keys[:256])
+    st.insert_batch(keys[1024:3072], vals[1024:3072])  # pressure → splits
+    c = st.telemetry.counters
+    assert "wire.events{shard=dir}" in c
+    shard_keys = [k for k in c if k.startswith("wire.events{shard=")
+                  and "dir" not in k and "host" not in k]
+    assert shard_keys, "per-table sinks never fired"
+    if st.engine.resize_events:  # split successors inherit sinks
+        assert len(shard_keys) >= 2
+
+
+# --------------------------------------------------------------- exporters
+def test_validator_rejects_malformed_exports():
+    keys, vals = _dataset()
+    st = open_store(_spec(TelemetryConfig(window_ops=64)),
+                    keys[:1024], vals[:1024])
+    st.get_batch(keys[:256])
+    rows = telemetry_rows(st.telemetry)
+    validate_telemetry_rows(rows)
+    with pytest.raises(ValueError, match="schema"):
+        validate_telemetry_rows([dict(rows[0], schema="nope")] + rows[1:])
+    with pytest.raises(ValueError, match="meta"):
+        validate_telemetry_rows(rows[1:] + rows[:1])
+    snap = next(i for i, r in enumerate(rows) if r["row"] == "snapshot")
+    bad = [dict(r) for r in rows]
+    bad[snap]["clock"] = 7  # not a window multiple
+    with pytest.raises(ValueError, match="multiple"):
+        validate_telemetry_rows(bad)
+    with pytest.raises(ValueError, match="total"):
+        validate_telemetry_rows([r for r in rows if r["row"] != "total"])
+
+
+def test_chrome_trace_is_perfetto_shaped():
+    keys, vals = _dataset()
+    tr = Transport()
+    st = open_store(_spec(batch=BatchPolicy(window=64, order="relaxed")),
+                    keys[:1024], vals[:1024], transport=tr)
+    for i in range(0, 512, 64):
+        st.get_batch(keys[i:i + 64])
+    doc = chrome_trace(tr.trace, clients=2)
+    ev = doc["traceEvents"]
+    assert {e["name"] for e in ev if e.get("ph") == "M"} >= {
+        "process_name", "thread_name"}
+    ops = [e for e in ev if e["ph"] == "X" and e["name"] == "op"]
+    rts = [e for e in ev if e["ph"] == "X" and e["name"].startswith("rt")]
+    assert len(ops) == 512 and len(rts) >= len(ops)
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in ops)
+    assert any(e["ph"] == "i" and e["name"] == "doorbell" for e in ev)
+    busy = [e for e in ev if e.get("pid") == 2 and e["ph"] == "X"]
+    assert busy, "MN busy slices missing"
+    json.dumps(doc)  # must be directly serialisable
+
+
+def test_record_spans_is_a_pure_observation():
+    from repro.net.replay import simulate
+    keys, vals = _dataset()
+    tr = Transport()
+    st = open_store(_spec(batch=BatchPolicy(window=64, order="relaxed")),
+                    keys[:1024], vals[:1024], transport=tr)
+    st.get_batch(keys[:256])
+    plain = simulate(tr.trace, clients=2)
+    spanned = simulate(tr.trace, clients=2, record_spans=True)
+    assert plain.percentiles() == spanned.percentiles()
+    assert plain.n_ops == spanned.n_ops and plain.seconds == spanned.seconds
+    assert spanned.op_spans and spanned.server_spans
+    assert not plain.op_spans  # recording off → nothing retained
+
+
+# ------------------------------------------------------------- meter sinks
+def test_comm_meter_sink_fan_out_and_back_compat():
+    class Tap:
+        def __init__(self):
+            self.events = []
+
+        def on_meter_add(self, n, **kw):
+            self.events.append((n, kw.get("rts", 0)))
+
+    m = CommMeter()
+    a, b = Tap(), Tap()
+    m.sink = a                      # v1 single-sink property still works
+    assert m.sink is a and m.sinks == [a]
+    m.add_sink(b)
+    m.add_sink(b)                   # idempotent by identity
+    assert m.sinks == [a, b]
+    m.add(4, rts=2, req=64, resp=64)
+    assert a.events == [(4, 2)] and b.events == [(4, 2)]
+    m.sink = None                   # property setter replaces the list
+    assert m.sinks == []
+    # sinks never leak into accounting identity
+    m2 = CommMeter()
+    m2.add(4, rts=2, req=64, resp=64)
+    assert m.snapshot() == m2.snapshot()
+
+
+def test_hub_merge_folds_counters_and_hists_exactly():
+    h1, h2 = TelemetryHub(), TelemetryHub()
+    h1.count("x", 3, op="get")
+    h2.count("x", 4, op="get")
+    h1.hist("lat").record_many([1, 10, 100])
+    h2.hist("lat").record_many([5, 50])
+    h1.merge(h2)
+    assert h1.counters["x{op=get}"] == 7
+    assert h1.hists["lat"].n == 5
+    ref = LogHistogram()
+    ref.record_many([1, 10, 100, 5, 50])
+    assert h1.hists["lat"] == ref
+
+
+def test_schema_tag_is_stable():
+    # the CI lane greps for this exact tag; changing it is a schema bump
+    assert TELEMETRY_SCHEMA == "outback-telemetry/v1"
+    assert HIST_SPEC["n_buckets"] == 353
