@@ -20,9 +20,81 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only lat,scale]
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import sys
 import time
+
+
+def _mod(name: str):
+    """Deferred import of one benchmarks submodule (keeps ``--help`` and
+    filtered runs from importing every suite's dependencies)."""
+    return importlib.import_module(f"benchmarks.{name}")
+
+
+# The single source of truth for the suite registry: every entry derives
+# BOTH the execution loop and the ``--only`` help text, so a new suite
+# cannot be runnable-but-undocumented (or vice versa).  Each builder takes
+# (args, n) — n is the ``--quick``-scaled key count — and returns rows.
+SUITES = (
+    ("fig3", "",
+     lambda a, n: _mod("paper_figs").fig3_motivation(min(n, 200_000))),
+    ("fig9", "",
+     lambda a, n: _mod("paper_figs").fig9_10_ycsb(n)),
+    ("fig11", "",
+     lambda a, n: _mod("paper_figs").fig11_sosd(n)),
+    ("fig12", "",
+     lambda a, n: _mod("paper_figs").fig12_mn_threads(n)),
+    ("fig14", "",
+     lambda a, n: _mod("paper_figs").fig14_load_factor(min(n, 200_000))),
+    ("fig15", "",
+     lambda a, n: _mod("paper_figs").fig15_num_pairs(
+         (50_000, 100_000, 200_000) if a.quick
+         else (200_000, 500_000, 800_000))),
+    ("fig16", "",
+     lambda a, n: _mod("paper_figs").fig16_cn_memory(
+         (100_000, 200_000) if a.quick
+         else (200_000, 1_000_000, 2_000_000))),
+    ("fig17", "",
+     lambda a, n: _mod("paper_figs").fig17_resize(min(n, 150_000))),
+    ("zipf", "CN hot-key cache on/off across skew",
+     lambda a, n: _mod("paper_figs").zipf_cache(min(n, 200_000))),
+    ("lat", "simulated Get latency percentiles",
+     lambda a, n: _mod("net_bench").lat_suite(a.quick)),
+    ("scale", "simulated closed-loop throughput vs clients + resize dip",
+     lambda a, n: _mod("net_bench").scale_suite(a.quick)),
+    ("ycsb", "pipelined vs hand-batched vs scalar write mixes, "
+             "BatchPolicy window sweep + Ludo build/resize-rebuild "
+             "microbench",
+     lambda a, n: _mod("ycsb_bench").ycsb_suite(a.quick,
+                                                window=a.ycsb_window)),
+    ("faults", "K=2 crash/failover: p999 through a seeded MN crash, "
+               "availability curve, zero lost acked writes, dormant-plane "
+               "meter identity",
+     lambda a, n: _mod("faults_bench").faults_suite(a.quick)),
+    ("obs", "telemetry plane: ycsb-C overhead with the hub on vs off, "
+            "dormant byte-identity, span/snapshot cadence, "
+            "outback-telemetry/v1 JSONL + Perfetto exports",
+     lambda a, n: _mod("obs_bench").obs_suite(a.quick)),
+    ("cluster", "multi-CN plane: aggregate Mops scaling across CNs at "
+                "zipf(0.9), join/leave handoff O(shards moved), "
+                "reconfiguration dip, zero lost acked writes through a "
+                "leave, dormant single-CN byte-identity",
+     lambda a, n: _mod("cluster_bench").cluster_suite(a.quick)),
+    ("kernel_paged", "",
+     lambda a, n: _mod("kernel_bench").paged_attention_traffic()),
+    ("kernel_lookup", "",
+     lambda a, n: _mod("kernel_bench").ludo_lookup_throughput()),
+    ("kernel_pagetable", "",
+     lambda a, n: _mod("kernel_bench").page_table_memory()),
+)
+
+
+def _only_help() -> str:
+    parts = [f"{name} ({blurb})" if blurb else name
+             for name, blurb, _fn in SUITES]
+    return ("comma-separated substring filters over suite names: "
+            + ", ".join(parts))
 
 
 def main() -> None:
@@ -30,24 +102,7 @@ def main() -> None:
         description="Outback paper-figure reproductions + extensions.")
     ap.add_argument("--quick", action="store_true",
                     help="smaller key sets (CI-speed)")
-    ap.add_argument("--only", default=None,
-                    help="comma-separated substring filters over suite "
-                         "names: fig3, fig9, fig11, fig12, fig14, fig15, "
-                         "fig16, fig17, zipf (CN hot-key cache on/off "
-                         "across skew), lat (simulated Get latency "
-                         "percentiles), scale (simulated closed-loop "
-                         "throughput vs clients + resize dip), "
-                         "ycsb (pipelined vs hand-batched vs scalar write "
-                         "mixes, BatchPolicy window sweep + Ludo "
-                         "build/resize-rebuild microbench), "
-                         "faults (K=2 crash/failover: p999 through a "
-                         "seeded MN crash, availability curve, zero lost "
-                         "acked writes, dormant-plane meter identity), "
-                         "obs (telemetry plane: ycsb-C overhead with the "
-                         "hub on vs off, dormant byte-identity, span/"
-                         "snapshot cadence, outback-telemetry/v1 JSONL + "
-                         "Perfetto exports), "
-                         "kernel_paged, kernel_lookup, kernel_pagetable")
+    ap.add_argument("--only", default=None, help=_only_help())
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero if any suite produced an ERROR row")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -58,35 +113,10 @@ def main() -> None:
                          "window (default: the store policy's 1024)")
     args = ap.parse_args()
 
-    from benchmarks import (faults_bench, kernel_bench, net_bench,
-                            obs_bench, paper_figs, ycsb_bench)
     from benchmarks.common import emit
 
     n = 100_000 if args.quick else 300_000
-    suites = [
-        ("fig3", lambda: paper_figs.fig3_motivation(min(n, 200_000))),
-        ("fig9", lambda: paper_figs.fig9_10_ycsb(n)),
-        ("fig11", lambda: paper_figs.fig11_sosd(n)),
-        ("fig12", lambda: paper_figs.fig12_mn_threads(n)),
-        ("fig14", lambda: paper_figs.fig14_load_factor(min(n, 200_000))),
-        ("fig15", lambda: paper_figs.fig15_num_pairs(
-            (50_000, 100_000, 200_000) if args.quick
-            else (200_000, 500_000, 800_000))),
-        ("fig16", lambda: paper_figs.fig16_cn_memory(
-            (100_000, 200_000) if args.quick
-            else (200_000, 1_000_000, 2_000_000))),
-        ("fig17", lambda: paper_figs.fig17_resize(min(n, 150_000))),
-        ("zipf", lambda: paper_figs.zipf_cache(min(n, 200_000))),
-        ("lat", lambda: net_bench.lat_suite(args.quick)),
-        ("scale", lambda: net_bench.scale_suite(args.quick)),
-        ("ycsb", lambda: ycsb_bench.ycsb_suite(args.quick,
-                                               window=args.ycsb_window)),
-        ("faults", lambda: faults_bench.faults_suite(args.quick)),
-        ("obs", lambda: obs_bench.obs_suite(args.quick)),
-        ("kernel_paged", kernel_bench.paged_attention_traffic),
-        ("kernel_lookup", kernel_bench.ludo_lookup_throughput),
-        ("kernel_pagetable", kernel_bench.page_table_memory),
-    ]
+    suites = [(name, lambda fn=fn: fn(args, n)) for name, _b, fn in SUITES]
     only = [t.strip() for t in args.only.split(",")] if args.only else None
     rows = []
     suite_seconds: dict[str, float] = {}

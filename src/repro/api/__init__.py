@@ -44,9 +44,9 @@ from repro.api.pipeline import (BatchPolicy, OpHandle, PipelineLayer,
 from repro.api.protocol import (OP_KINDS, KVStore, OpResult,
                                 PipelinedKVStore, UnsupportedOperation,
                                 pack_result)
-from repro.api.registry import (SpecError, StoreSpec, open_store,
-                                register_store, registered_kinds,
-                                registry_docs)
+from repro.api.registry import (SpecError, StoreSpec, build_adapter,
+                                open_store, register_store,
+                                registered_kinds, registry_docs)
 from repro.api.replication import ReplicaSetAdapter, ShardLease
 from repro.api.stack import (CNCacheLayer, CNStack, MeterLayer, RetryLayer,
                              StoreLayer, TransportBinding)
@@ -75,6 +75,7 @@ __all__ = [
     "TelemetryHub",
     "TransportBinding",
     "UnsupportedOperation",
+    "build_adapter",
     "open_store",
     "pack_result",
     "register_store",

@@ -83,9 +83,14 @@ class BatchPolicy:
                       hazard tracking — the hand-batched bench grouping).
     ``combine_reads`` strict mode only: serve a read of a pending-write
                       key from the write-combining buffer instead of
-                      flushing.  The forwarded value is optimistic — if
-                      the pending write later fails (update of an absent
-                      key, frozen insert) the read was speculative.
+                      flushing.  The forwarded value is optimistic; the
+                      flush that executes the buffered write *reconciles*
+                      it — if the write failed (update of an absent key,
+                      frozen insert/delete) the combined lanes are
+                      re-read for real (one metered ``get_batch``,
+                      ``stats.reconciled_reads``) and the handle's
+                      result is patched before the flush returns, so
+                      polled answers match a ``combine_reads=False`` run.
     """
 
     window: int = 1024
@@ -144,6 +149,8 @@ class PipelineStats:
     window_flushes: int = 0   # ... triggered by the window filling
     hazard_flushes: int = 0   # ... triggered by a cross-kind key hazard
     combined_reads: int = 0   # read lanes served from the write buffer
+    reconciled_reads: int = 0  # combined lanes re-read because their
+    #   buffered write failed at flush time (the speculative-forward fixup)
     batch_calls: int = 0      # engine *_batch calls issued by flushes
     dropped_completions: int = 0  # handles aged out of the poll() backlog
     unavailable_lanes: int = 0  # lanes answered degraded ("unavailable")
@@ -297,6 +304,12 @@ class PipelineLayer(StoreLayer):
         self._n_pending = 0
         # strict-order hazard state: key -> (pending write kind, value)
         self._writes: dict[int, tuple[str, int | None]] = {}
+        # write-combining reconciliation state (combine_reads only):
+        # combined-lane records awaiting their buffered write's outcome,
+        # the keys they forwarded, and each key's observed write success
+        self._wc_records: list[tuple[OpHandle, np.ndarray, np.ndarray]] = []
+        self._wc_keys: set[int] = set()
+        self._wc_outcome: dict[int, bool] = {}
         self._done: collections.deque[OpHandle] = collections.deque()
 
     @property
@@ -424,6 +437,11 @@ class PipelineLayer(StoreLayer):
             meter.add_wc_hit(n_hit - n_found, **self.inner.cache_neg_savings)
         self.stats.combined_reads += n_hit
         pos = np.nonzero(hit)[0]
+        # remember the forwarded lanes: if the buffered write fails when
+        # its flush runs, these answers were speculative and get re-read
+        hit_keys = np.asarray(keys[hit], dtype=np.uint64).copy()
+        self._wc_records.append((handle, pos, hit_keys))
+        self._wc_keys.update(int(k) for k in hit_keys)
         if n_hit == n:
             handle._combine_only(pos, vals, found)
             return keys[:0], 0
@@ -500,6 +518,8 @@ class PipelineLayer(StoreLayer):
                 self._q[kind] = []
                 self._run_group(kind, entries, trigger)
             self._n_pending = 0
+            if self._wc_records:
+                self._reconcile_combined()
         except BaseException:
             self._n_pending = sum(e.n for q in self._q.values() for e in q)
             if self.policy.order == "strict":
@@ -508,6 +528,48 @@ class PipelineLayer(StoreLayer):
         finally:
             if doorbell is not None:
                 self._transport.close_doorbell(doorbell)
+
+    def _reconcile_combined(self) -> None:
+        """Fix up combined reads whose buffered write failed (satellite of
+        the write-combining contract: polled answers must equal a
+        ``combine_reads=False`` run's).
+
+        A forwarded Update answered ``found=True`` with the new value,
+        but the Update of an absent key missed; a forwarded Delete
+        answered ``found=False``, but a frozen Delete left the key live.
+        Any combined lane whose write reported failure is re-read for
+        real — one metered ``get_batch`` inside the same flush (and
+        doorbell window), patched into the handle's already-delivered
+        result arrays.  Runs after every group (writes execute last), so
+        the re-read observes the flush's final state.
+
+        If the flush aborted mid-way the records persist: the failed
+        groups stay queued, their outcomes arrive at the next flush, and
+        reconciliation happens then.
+        """
+        records, self._wc_records = self._wc_records, []
+        outcome, self._wc_outcome = self._wc_outcome, {}
+        self._wc_keys.clear()
+        fixups = []
+        for handle, pos, keys in records:
+            if handle._result is None:
+                continue  # lost to an aborted flush; nothing to patch
+            bad = np.fromiter((not outcome.get(int(k), True) for k in keys),
+                              dtype=bool, count=len(keys))
+            if bad.any():
+                fixups.append((handle, pos[bad], keys[bad]))
+        if not fixups:
+            return
+        keys_all = np.concatenate([ks for _h, _p, ks in fixups])
+        res = self.inner.get_batch(keys_all)
+        self.stats.reconciled_reads += int(len(keys_all))
+        off = 0
+        for handle, pos, ks in fixups:
+            n = len(ks)
+            r = handle._result
+            r.values[pos] = res.values[off:off + n]
+            r.found[pos] = res.found[off:off + n]
+            off += n
 
     def _rebuild_hazard_state(self) -> None:
         """Re-derive the pending-write map from what is still queued
@@ -589,6 +651,15 @@ class PipelineLayer(StoreLayer):
             res = self.inner.delete_batch(keys)
         if res.statuses is not None:
             self.stats.unavailable_lanes += res.statuses.count("unavailable")
+        if kind in _WRITES and self._wc_keys:
+            # a combined read forwarded some of these writes' values:
+            # record per-key success so reconciliation can spot the
+            # speculative answers (later lanes overwrite earlier ones,
+            # matching the write buffer's last-write-wins forwarding)
+            for k, f in zip(keys, res.found):
+                ki = int(k)
+                if ki in self._wc_keys:
+                    self._wc_outcome[ki] = bool(f)
         return res
 
     def _traced_direct(self, op: str, n: int, call, kind: str = "scalar"):

@@ -180,7 +180,10 @@ class StoreSpec:
             except ValueError as e:
                 raise SpecError(str(e)) from e
             for ev in self.faults.events:
-                if ev.mn >= self.replicas:
+                # cn_crash targets a compute node, not an MN replica; the
+                # CN count is a cluster-level property the StoreSpec
+                # doesn't know, so repro.cluster validates it instead.
+                if ev.kind != "cn_crash" and ev.mn >= self.replicas:
                     raise SpecError(
                         f"fault event targets MN {ev.mn} but the spec "
                         f"deploys {self.replicas} replica(s)")
@@ -267,6 +270,31 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
     and each shard's meter.  The hub is a pure observer: meters, traces,
     and final store state stay byte-identical to a telemetry-off build.
     """
+    adapter, retry = build_adapter(spec, keys, values, transport=transport)
+    hub = None
+    if spec.telemetry is not None:
+        hub = TelemetryHub(spec.telemetry)
+        _bind_hub_sinks(adapter, hub)
+    cache = (CNKeyCache(spec.cache_budget_bytes)
+             if spec.cache_budget_bytes else None)
+    stack = CNStack(cache=cache,
+                    transport_binding=TransportBinding(transport),
+                    policy=spec.batch,
+                    retry=retry,
+                    hub=hub)
+    return stack.assemble(adapter)
+
+
+def build_adapter(spec: StoreSpec, keys, values, *, transport=None):
+    """Build the spec's engine adapter without the CN stack around it.
+
+    Returns ``(adapter, retry_plane)`` — the engine adapter (wrapped in a
+    :class:`ReplicaSetAdapter` when the spec carries replication or a
+    fault schedule) plus the :class:`FaultPlane` the stack's RetryLayer
+    must consult (``None`` when no plane is installed).  ``open_store``
+    composes this with :class:`repro.api.stack.CNStack`; ``repro.cluster``
+    shares one such adapter (the MN pool) across N per-CN stacks.
+    """
     reg = spec.validate()
     keys = np.asarray(keys, dtype=np.uint64)
     values = np.asarray(values, dtype=np.uint64)
@@ -282,18 +310,7 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
                            else FaultSchedule(lease_term_ops=0))
         adapter = ReplicaSetAdapter(group, spec, plane, transport=transport)
         retry = plane
-    hub = None
-    if spec.telemetry is not None:
-        hub = TelemetryHub(spec.telemetry)
-        _bind_hub_sinks(adapter, hub)
-    cache = (CNKeyCache(spec.cache_budget_bytes)
-             if spec.cache_budget_bytes else None)
-    stack = CNStack(cache=cache,
-                    transport_binding=TransportBinding(transport),
-                    policy=spec.batch,
-                    retry=retry,
-                    hub=hub)
-    return stack.assemble(adapter)
+    return adapter, retry
 
 
 def _bind_hub_sinks(adapter, hub) -> None:

@@ -1,0 +1,46 @@
+"""``repro.cluster`` — the multi-CN plane over one shared MN pool.
+
+Outback's evaluation runs one compute node; this package scales the
+reproduction out: N per-CN stacks (own transport, meter ledger, CN
+cache, pipeline, telemetry dims ``cn=i``) share one MN-resident engine,
+with three cluster-only mechanisms layered on top:
+
+* **elastic membership** (:mod:`repro.cluster.membership`) — a seeded,
+  op-clock join/leave/crash script, deterministic like
+  ``repro.net.faults``;
+* **shard-ownership handoff** (:mod:`repro.cluster.ownership`) —
+  rendezvous-hashed directory-shard -> CN placement whose rebalance
+  moves only affected shards' CN half (DMPH seeds + othello arrays),
+  lease-gated like a PR 6 failover: O(shards moved), never O(keys);
+* **cross-CN cache coherence** (:mod:`repro.cluster.coherence`) —
+  per-shard invalidation epochs multicast on writes' existing round
+  trips; non-owners serve cached reads only after the epoch check and
+  forward writes to the owner.
+
+The plane is **dormant** by construction (contract #3, tested +
+bench-asserted): ``Cluster`` with one CN and an empty schedule is
+byte-identical to ``repro.api.open_store`` — same CommMeter totals, same
+trace, same final MN state.  See ``docs/CLUSTER.md``.
+"""
+
+from repro.cluster.cluster import (CNRouter, Cluster, ClusterSpec,
+                                   ClusterStats, EpochGate, HandoffEvent,
+                                   SwitchingTransport, cluster_of)
+from repro.cluster.coherence import ShardEpochs
+from repro.cluster.membership import MembershipEvent, MembershipSchedule
+from repro.cluster.ownership import OwnershipTable
+
+__all__ = [
+    "CNRouter",
+    "Cluster",
+    "ClusterSpec",
+    "ClusterStats",
+    "EpochGate",
+    "HandoffEvent",
+    "MembershipEvent",
+    "MembershipSchedule",
+    "OwnershipTable",
+    "ShardEpochs",
+    "SwitchingTransport",
+    "cluster_of",
+]

@@ -1,0 +1,801 @@
+"""``repro.cluster.cluster`` — N per-CN stacks over one shared MN pool.
+
+The runtime composes three pieces this package adds — a
+:class:`~repro.cluster.membership.MembershipSchedule` (op-clock
+join/leave/crash script), an
+:class:`~repro.cluster.ownership.OwnershipTable` (rendezvous-hashed
+shard -> owning CN, O(shards moved) rebalance) and
+:class:`~repro.cluster.coherence.ShardEpochs` (per-shard invalidation
+epochs) — around the *existing* single-CN machinery:
+
+* one shared engine adapter (the MN pool: ``repro.api.registry.
+  build_adapter`` — replica-wrapped when the spec carries faults), fed
+  by a :class:`SwitchingTransport` so every wire event lands on the
+  calling CN's own trace;
+* per CN ``i``: a full ``Pipeline -> Meter -> EpochGate -> CNCache ->
+  [Retry ->] CNRouter`` stack with its own ``CommMeter`` ledger,
+  ``CNKeyCache``, ``Transport``, and (if the spec asks) ``TelemetryHub``
+  carrying ``cn=i`` dims.
+
+**Dormant-plane contract #3** (tested + bench-asserted): a Cluster of
+N=1 with an empty membership schedule is byte-identical to the
+``open_store`` path — same CommMeter totals, same recorded trace, same
+final MN state.  Every cluster-only mechanism (epoch gate, ownership,
+forwarding, handoff) is either pure host-plane bookkeeping or fires only
+when a second CN exists.
+
+Routing rules (the coherence contract, ``docs/CLUSTER.md``):
+
+* reads: any CN may serve any shard from its cache *after* the epoch
+  check; misses go to the MN pool directly (one-sided — the MN doesn't
+  care who reads).  A non-owner's miss additionally pays one batched
+  CN->CN forward RPC to the owner (location + admission), recorded on
+  the requester's trace with ``Segment.cn_dst`` so the replay queues it
+  on the owner's RPC thread.
+* writes: non-owners forward to the owner the same way; the owning CN
+  multicasts an invalidation **epoch bump** piggybacked on the write's
+  existing round trips (zero extra wire), and every other CN drops its
+  cached entries for the shard at its next epoch check.
+* membership change: the ownership table rebalances; each destination
+  CN bulk-reads only the moved shards' CN half (DMPH seeds + othello
+  arrays — the §4.4 locator-fetch shape) and waits out the old owner's
+  lease (the PR 6 drain) before serving — O(shards moved), never
+  O(keys).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.api.pipeline import PipelineLayer
+from repro.api.protocol import OpResult
+from repro.api.registry import SpecError, StoreSpec, build_adapter
+from repro.api.replication import UNAVAILABLE
+from repro.api.stack import CNCacheLayer, MeterLayer, RetryLayer, StoreLayer
+from repro.cluster.coherence import ShardEpochs
+from repro.cluster.membership import MembershipSchedule
+from repro.cluster.ownership import OwnershipTable
+from repro.core.cn_cache import CNKeyCache
+from repro.core.hashing import hash64_32
+from repro.core.meter import CommMeter, MSG_BYTES
+from repro.core.store import _DIR_SEED
+from repro.net.transport import Transport
+
+# CN->CN forward RPC shape: one padded request/response pair per batched
+# forward, plus per-lane key/value payload riding inside it.
+_FWD_KEY_BYTES = 8
+_FWD_LANE_RESP_BYTES = 16
+
+
+class SwitchingTransport:
+    """One transport facade multiplexing the shared engine's wire events
+    onto per-CN traces.
+
+    The engine meters hold exactly one sink; in a cluster that sink is
+    this switch, and the active :class:`CNRouter` points ``current`` at
+    its CN around every engine call — so each wire event, resize mark,
+    fault mark, and CN-side wait lands on the trace of the CN that
+    issued it.  With one CN everything delegates to ``transports[0]``
+    unconditionally, which is what keeps the dormant plane byte-exact.
+
+    ``hub_sinks`` (optional, one per CN) fans the same events into each
+    CN's TelemetryHub wire sink under its ``cn=i`` dims.
+    """
+
+    def __init__(self, transports, hub_sinks=None) -> None:
+        self.transports = list(transports)
+        self.current = 0
+        self.hub_sinks = hub_sinks
+
+    @property
+    def _t(self):
+        return self.transports[self.current]
+
+    # ------------------------------------------------- Transport surface
+    def on_meter_add(self, n, **kw) -> None:
+        self._t.on_meter_add(n, **kw)
+        if self.hub_sinks is not None:
+            self.hub_sinks[self.current].on_meter_add(n, **kw)
+
+    def mark_resize(self, n_live) -> None:
+        self._t.mark_resize(n_live)
+
+    def mark_fault(self, kind, **kw) -> None:
+        self._t.mark_fault(kind, **kw)
+
+    def add_wait(self, seconds) -> None:
+        self._t.add_wait(seconds)
+
+    def begin_doorbell(self):
+        return self._t.begin_doorbell()
+
+    def close_doorbell(self, token) -> None:
+        self._t.close_doorbell(token)
+
+    @property
+    def current_mn(self):
+        return self._t.current_mn
+
+    @current_mn.setter
+    def current_mn(self, value) -> None:
+        self._t.current_mn = value
+
+    @property
+    def current_cn_dst(self):
+        return self._t.current_cn_dst
+
+    @current_cn_dst.setter
+    def current_cn_dst(self, value) -> None:
+        self._t.current_cn_dst = value
+
+    def reset(self) -> None:
+        for t in self.transports:
+            t.reset()
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Frozen, JSON-round-trippable description of a cluster deployment.
+
+    ``store`` is the per-CN :class:`StoreSpec` (must be the directory
+    kind — ownership is a per-directory-shard property); ``n_cns`` the
+    compute-node count; ``n_mns`` the width of the shared MN pool
+    (shard's home MN = ``shard % n_mns`` — pure striping, only legal
+    without MN replication); ``membership`` the elastic script;
+    ``lease_wait_us`` the cutover drain charged per handoff destination
+    (the PR 6 lease-drain idiom).
+    """
+
+    store: StoreSpec
+    n_cns: int = 1
+    n_mns: int = 1
+    membership: MembershipSchedule | None = None
+    lease_wait_us: float = 50.0
+
+    def __post_init__(self):
+        if isinstance(self.store, dict):
+            object.__setattr__(self, "store",
+                               StoreSpec.from_json_dict(self.store))
+        if isinstance(self.membership, dict):
+            object.__setattr__(
+                self, "membership",
+                MembershipSchedule.from_json_dict(self.membership))
+
+    def validate(self) -> None:
+        self.store.validate()
+        if getattr(self.store, "kind", None) != "outback-dir":
+            raise SpecError(
+                f"cluster needs the directory kind ('outback-dir') so "
+                f"ownership maps to directory shards; got "
+                f"{self.store.kind!r}")
+        if not isinstance(self.n_cns, int) or self.n_cns < 1:
+            raise SpecError(f"n_cns must be an int >= 1, got {self.n_cns!r}")
+        if not isinstance(self.n_mns, int) or self.n_mns < 1:
+            raise SpecError(f"n_mns must be an int >= 1, got {self.n_mns!r}")
+        if self.n_mns > 1 and (self.store.replicas > 1
+                               or self.store.faults is not None):
+            raise SpecError("n_mns > 1 stripes shards over the MN pool and "
+                            "cannot compose with MN replication/faults "
+                            "(replica routing owns Segment.mn)")
+        if self.lease_wait_us < 0:
+            raise SpecError("lease_wait_us must be >= 0")
+        if self.membership is not None:
+            if not isinstance(self.membership, MembershipSchedule):
+                raise SpecError(
+                    f"membership must be a MembershipSchedule (or its JSON "
+                    f"dict), got {type(self.membership).__name__}")
+            try:
+                self.membership.validate(self.n_cns)
+            except ValueError as e:
+                raise SpecError(str(e)) from e
+        if self.store.faults is not None:
+            for ev in self.store.faults.events:
+                if ev.kind == "cn_crash" and ev.cn >= self.n_cns:
+                    raise SpecError(f"cn_crash targets CN {ev.cn} but the "
+                                    f"cluster deploys {self.n_cns} CN(s)")
+
+    # ------------------------------------------------------------- JSON
+    def to_json_dict(self) -> dict:
+        return {"store": self.store.to_json_dict(),
+                "n_cns": self.n_cns, "n_mns": self.n_mns,
+                "membership": (None if self.membership is None
+                               else self.membership.to_json_dict()),
+                "lease_wait_us": self.lease_wait_us}
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "ClusterSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise SpecError(f"unknown ClusterSpec fields: {sorted(extra)}")
+        spec = cls(**d)
+        spec.validate()
+        return spec
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_json_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ClusterSpec":
+        return cls.from_json_dict(json.loads(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class HandoffEvent:
+    """One completed ownership reconfiguration (for tests/benches)."""
+
+    at_op: int
+    reason: str        # "join" | "leave" | "cn_crash" | "cn_restart"
+    cn: int            # the node that joined/left/crashed/restarted
+    moved: tuple       # ((shard, old_owner, new_owner), ...)
+    bytes_moved: int   # summed CN-half bytes bulk-read by destinations
+
+    def to_json_dict(self) -> dict:
+        return {"at_op": self.at_op, "reason": self.reason, "cn": self.cn,
+                "moved": [list(m) for m in self.moved],
+                "bytes_moved": self.bytes_moved}
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    """Always-on host-plane counters (no meter/trace footprint)."""
+
+    forwarded_read_lanes: int = 0
+    forwarded_write_lanes: int = 0
+    forward_rpcs: int = 0
+    rejected_lanes: int = 0      # lanes answered "unavailable" (dead CN)
+    handoffs: int = 0
+    shards_moved: int = 0
+    handoff_bytes: int = 0
+    epoch_invalidations: int = 0  # cache entries dropped by epoch checks
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class EpochGate(StoreLayer):
+    """Per-CN membership + coherence gate (sits above the CN cache).
+
+    Every protocol call first ticks the cluster op clock (driving
+    membership events), then rejects dead-CN calls with degraded
+    ``"unavailable"`` answers (no wire, no cache probe — a dead CN
+    serves nothing), then runs the epoch check: stale shards' cached
+    entries are dropped *before* the cache layer below may serve them.
+    With one CN no epoch is ever foreign and the gate is pure
+    pass-through.
+    """
+
+    def __init__(self, inner, cluster: "Cluster", cn: int) -> None:
+        super().__init__(inner)
+        self.cluster = cluster
+        self.cn = cn
+
+    def _gate(self, keys: np.ndarray, n: int):
+        cl = self.cluster
+        cl.on_op(self.cn, n)
+        if not cl.cn_active(self.cn):
+            cl.stats.rejected_lanes += n
+            return OpResult(values=np.zeros(n, np.uint64),
+                            found=np.zeros(n, bool),
+                            statuses=(UNAVAILABLE,) * n)
+        cl.epoch_sync(self.cn, keys)
+        return None
+
+    # ------------------------------------------------------------- reads
+    def get(self, key: int) -> OpResult:
+        r = self._gate(np.asarray([key], np.uint64), 1)
+        return r if r is not None else self.inner.get(key)
+
+    def get_batch(self, keys, xp=np, *,
+                  resolve_makeup: bool | None = None) -> OpResult:
+        keys = np.asarray(keys, dtype=np.uint64)
+        r = self._gate(keys, len(keys))
+        if r is not None:
+            return r
+        return self.inner.get_batch(keys, xp, resolve_makeup=resolve_makeup)
+
+    # ---------------------------------------------------------- mutations
+    def insert(self, key: int, value: int) -> OpResult:
+        r = self._gate(np.asarray([key], np.uint64), 1)
+        return r if r is not None else self.inner.insert(key, value)
+
+    def update(self, key: int, value: int) -> OpResult:
+        r = self._gate(np.asarray([key], np.uint64), 1)
+        return r if r is not None else self.inner.update(key, value)
+
+    def delete(self, key: int) -> OpResult:
+        r = self._gate(np.asarray([key], np.uint64), 1)
+        return r if r is not None else self.inner.delete(key)
+
+    def insert_batch(self, keys, values) -> OpResult:
+        keys = np.asarray(keys, dtype=np.uint64)
+        r = self._gate(keys, len(keys))
+        return r if r is not None else self.inner.insert_batch(keys, values)
+
+    def update_batch(self, keys, values) -> OpResult:
+        keys = np.asarray(keys, dtype=np.uint64)
+        r = self._gate(keys, len(keys))
+        return r if r is not None else self.inner.update_batch(keys, values)
+
+    def delete_batch(self, keys) -> OpResult:
+        keys = np.asarray(keys, dtype=np.uint64)
+        r = self._gate(keys, len(keys))
+        return r if r is not None else self.inner.delete_batch(keys)
+
+
+class CNRouter(StoreLayer):
+    """CN ``i``'s routing stage over the shared MN adapter.
+
+    Owns the per-CN ledger meter (forwards, handoff bulk reads, cache
+    savings land here; its sink is the CN's own transport) and, around
+    every delegated engine call, points the cluster's
+    :class:`SwitchingTransport` at this CN so the shared engine's wire
+    events record on the right trace.  Lanes owned by another live CN
+    pay one batched CN->CN forward RPC per destination; with ``n_mns >
+    1`` lanes are grouped by their shard's home MN and the group's
+    replica index is stamped into the segments (``Segment.mn``) for the
+    replay's MN-pool routing.
+    """
+
+    def __init__(self, cluster: "Cluster", cn: int) -> None:
+        super().__init__(cluster.shared)
+        self.cluster = cluster
+        self.cn = cn
+        self.ledger = cluster.ledgers[cn]
+
+    # ------------------------------------------------- adapter surface
+    @property
+    def meter(self) -> CommMeter:
+        return self.ledger
+
+    def meter_totals(self) -> CommMeter:
+        return self.cluster.meter_totals()
+
+    def reset_meters(self) -> None:
+        self.cluster.reset_meters()
+
+    def bind_cache(self, cache) -> None:
+        self.cluster.shared.bind_cache(cache)
+
+    # ------------------------------------------------------ forwarding
+    def _charge_forwards(self, owners: np.ndarray, write: bool) -> None:
+        cl = self.cluster
+        foreign = owners != self.cn
+        if not foreign.any():
+            return
+        t = cl.transports[self.cn]
+        for dst in np.unique(owners[foreign]):
+            nj = int((owners == dst).sum())
+            t.current_cn_dst = int(dst)
+            self.ledger.add(1, rts=1, req=MSG_BYTES + _FWD_KEY_BYTES * nj,
+                            resp=MSG_BYTES + _FWD_LANE_RESP_BYTES * nj)
+            t.current_cn_dst = -1
+            cl.stats.forward_rpcs += 1
+        n_fwd = int(foreign.sum())
+        if write:
+            cl.stats.forwarded_write_lanes += n_fwd
+        else:
+            cl.stats.forwarded_read_lanes += n_fwd
+
+    def _dispatch(self, op: str, keys, values, xp, resolve_makeup,
+                  scalar: bool) -> OpResult:
+        inner = self.inner
+        if scalar:
+            k = int(keys[0])
+            if op == "get":
+                return inner.get(k)
+            if op == "insert":
+                return inner.insert(k, int(values[0]))
+            if op == "update":
+                return inner.update(k, int(values[0]))
+            return inner.delete(k)
+        if op == "get":
+            return inner.get_batch(keys, xp, resolve_makeup=resolve_makeup)
+        if op == "insert":
+            return inner.insert_batch(keys, values)
+        if op == "update":
+            return inner.update_batch(keys, values)
+        return inner.delete_batch(keys)
+
+    def _route(self, op: str, keys, values=None, xp=np, resolve_makeup=None,
+               scalar: bool = False) -> OpResult:
+        cl = self.cluster
+        keys = np.asarray(keys, dtype=np.uint64)
+        shards = cl.shards_of(keys)
+        write = op != "get"
+        if cl.n_live > 1:
+            self._charge_forwards(cl.ownership.owners_for(shards), write)
+        cl.switch.current = self.cn
+        if cl.n_mns <= 1:
+            res = self._dispatch(op, keys, values, xp, resolve_makeup,
+                                 scalar)
+        else:
+            res = self._dispatch_pooled(op, keys, values, shards, xp,
+                                        resolve_makeup, scalar)
+        cl.after_engine_call()
+        if write:
+            cl.epoch_bump(self.cn, shards)
+        return res
+
+    def _dispatch_pooled(self, op, keys, values, shards, xp, resolve_makeup,
+                         scalar) -> OpResult:
+        """Group lanes by their shard's home MN (``shard % n_mns``) and
+        stamp each group's replica index into its segments."""
+        cl = self.cluster
+        t = cl.transports[self.cn]
+        homes = np.asarray(shards, dtype=np.int64) % cl.n_mns
+        uniq = np.unique(homes)
+        if len(uniq) == 1:
+            t.current_mn = int(uniq[0])
+            try:
+                return self._dispatch(op, keys, values, xp, resolve_makeup,
+                                      scalar)
+            finally:
+                t.current_mn = 0
+        n = len(keys)
+        out_v = np.zeros(n, np.uint64)
+        out_f = np.zeros(n, bool)
+        statuses: list | None = None
+        for mn in uniq:
+            m = homes == mn
+            t.current_mn = int(mn)
+            try:
+                sub = self._dispatch(op, keys[m],
+                                     None if values is None
+                                     else np.asarray(values)[m],
+                                     xp, resolve_makeup, False)
+            finally:
+                t.current_mn = 0
+            out_v[m] = sub.values
+            out_f[m] = sub.found
+            if sub.statuses is not None:
+                if statuses is None:
+                    statuses = ["ok"] * n
+                for pos, st in zip(np.flatnonzero(m), sub.statuses):
+                    statuses[pos] = st
+        return OpResult(values=out_v, found=out_f,
+                        statuses=None if statuses is None
+                        else tuple(statuses))
+
+    # --------------------------------------------------------- protocol
+    def get(self, key: int) -> OpResult:
+        return self._route("get", np.asarray([key], np.uint64), scalar=True)
+
+    def get_batch(self, keys, xp=np, *,
+                  resolve_makeup: bool | None = None) -> OpResult:
+        return self._route("get", keys, xp=xp, resolve_makeup=resolve_makeup)
+
+    def insert(self, key: int, value: int) -> OpResult:
+        return self._route("insert", np.asarray([key], np.uint64),
+                           np.asarray([value], np.uint64), scalar=True)
+
+    def update(self, key: int, value: int) -> OpResult:
+        return self._route("update", np.asarray([key], np.uint64),
+                           np.asarray([value], np.uint64), scalar=True)
+
+    def delete(self, key: int) -> OpResult:
+        return self._route("delete", np.asarray([key], np.uint64),
+                           scalar=True)
+
+    def insert_batch(self, keys, values) -> OpResult:
+        return self._route("insert", keys, values)
+
+    def update_batch(self, keys, values) -> OpResult:
+        return self._route("update", keys, values)
+
+    def delete_batch(self, keys) -> OpResult:
+        return self._route("delete", keys)
+
+
+class Cluster:
+    """The multi-CN runtime: N per-CN stacks over one shared MN pool.
+
+    ``cluster.cns[i]`` is CN ``i``'s assembled
+    :class:`~repro.api.protocol.PipelinedKVStore` — the same surface
+    ``open_store`` returns, so benches and the session store drive a
+    cluster exactly like a single store.  ``cluster.transports[i]`` /
+    ``cluster.ledgers[i]`` / ``cluster.caches[i]`` / ``cluster.hubs[i]``
+    expose the per-CN planes; :meth:`meter_totals` merges the pool +
+    every ledger into the cluster-wide accounting.
+    """
+
+    def __init__(self, spec: ClusterSpec, keys, values) -> None:
+        spec.validate()
+        self.spec = spec
+        sspec = spec.store
+        n = spec.n_cns
+        self.n_mns = spec.n_mns
+        self.stats = ClusterStats()
+        self.handoffs: list[HandoffEvent] = []
+        self.clock = 0
+
+        self.transports = [Transport() for _ in range(n)]
+        if sspec.telemetry is not None:
+            from repro.obs import TelemetryHub
+            self.hubs = [TelemetryHub(sspec.telemetry) for _ in range(n)]
+            hub_sinks = [h.wire_sink(cn=i) for i, h in enumerate(self.hubs)]
+        else:
+            self.hubs = [None] * n
+            hub_sinks = None
+        self.switch = SwitchingTransport(self.transports, hub_sinks)
+        self.shared, self.retry_plane = build_adapter(
+            sspec, keys, values, transport=self.switch)
+
+        # ledgers first: CNRouter construction reads them
+        self.ledgers = []
+        for i in range(n):
+            led = CommMeter()
+            led.sink = self.transports[i]
+            if self.hubs[i] is not None:
+                led.add_sink(self.hubs[i].wire_sink(cn=i, src="cn"))
+            self.ledgers.append(led)
+
+        # membership: schedule events + any cn_crash windows riding the
+        # store spec's fault schedule (the CN-side fault-injection seam)
+        sched = spec.membership or MembershipSchedule()
+        events = list(sched.events)
+        if sspec.faults is not None:
+            events.extend(MembershipSchedule.from_faults(sspec.faults).events)
+        self._events = sorted(events, key=lambda ev: (ev.at_op, ev.cn))
+        self._next_ev = 0
+        initial = sched.initial if sched.initial is not None else range(n)
+        self.live: set[int] = set(int(c) for c in initial)
+        self.crashed: dict[int, int] = {}  # cn -> clock of its restart
+
+        eng = self.engine
+        self.ownership = OwnershipTable(len(eng.tables), self.live,
+                                        seed=sched.seed)
+        self.epochs = ShardEpochs(len(eng.tables), n)
+        self._n_tables = len(eng.tables)
+        self._last_dir = list(eng.directory)
+
+        self.caches = []
+        self.routers = []
+        self.cns = []
+        for i in range(n):
+            router = CNRouter(self, i)
+            self.routers.append(router)
+            inner = router
+            if self.retry_plane is not None:
+                inner = RetryLayer(inner, self.retry_plane,
+                                   transport=self.transports[i],
+                                   hub=self.hubs[i])
+            cache = (CNKeyCache(sspec.cache_budget_bytes)
+                     if sspec.cache_budget_bytes else None)
+            self.caches.append(cache)
+            if cache is not None:
+                inner = CNCacheLayer(inner, cache, hub=self.hubs[i])
+            inner = EpochGate(inner, self, i)
+            inner = MeterLayer(inner, hub=self.hubs[i])
+            self.cns.append(PipelineLayer(inner, policy=sspec.batch,
+                                          transport=self.transports[i],
+                                          hub=self.hubs[i]))
+
+    # --------------------------------------------------------- topology
+    @property
+    def n_cns(self) -> int:
+        return len(self.cns)
+
+    @property
+    def n_live(self) -> int:
+        return len(self.live)
+
+    @property
+    def engine(self):
+        return self.shared.engine
+
+    def cn_active(self, cn: int) -> bool:
+        return cn in self.live
+
+    def owner_of(self, shard: int) -> int:
+        return self.ownership.owner(shard)
+
+    def shards_of(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorised key -> directory-shard routing (the engine's own
+        extendible-hashing map, read without metering)."""
+        eng = self.engine
+        e = (eng._dir_hash(keys)
+             & np.uint64((1 << eng.global_depth) - 1)).astype(np.int64)
+        return np.asarray(eng.directory, dtype=np.int64)[e]
+
+    def cn_half_bytes(self, shard: int) -> int:
+        """On-wire size of one shard's CN half: (num_buckets, seed-array
+        length, othello length) header + DMPH seeds + both othello word
+        arrays — the same payload §4.4's locator refetch meters."""
+        t = self.engine.tables[shard]
+        oth = t.cn.othello
+        return (8 + 8 + 8 + t.cn.seeds.nbytes
+                + oth.words_a.nbytes + oth.words_b.nbytes)
+
+    # ------------------------------------------------------- accounting
+    def meter_totals(self) -> CommMeter:
+        m = self.shared.meter_totals()
+        for led in self.ledgers:
+            m.merge(led)
+        return m
+
+    def reset_meters(self) -> None:
+        self.shared.reset_meters()
+        for led in self.ledgers:
+            led.reset()
+
+    def mn_state(self) -> dict:
+        return self.engine.mn_state()
+
+    # -------------------------------------------------------- op clock
+    def on_op(self, cn: int, n: int) -> None:
+        """Advance the cluster op clock by ``n`` lanes and fire any due
+        membership events (called by every CN's gate, pre-serve)."""
+        self.clock += int(n)
+        self._process_events()
+
+    def _process_events(self) -> None:
+        # crash windows that just closed: the node restarts and rejoins
+        for cn in [c for c, until in self.crashed.items()
+                   if self.clock >= until]:
+            del self.crashed[cn]
+            self.live.add(cn)
+            self._reconfigure("cn_restart", cn)
+        while (self._next_ev < len(self._events)
+               and self._events[self._next_ev].at_op <= self.clock):
+            ev = self._events[self._next_ev]
+            self._next_ev += 1
+            self._apply_event(ev)
+
+    def _apply_event(self, ev) -> None:
+        if ev.kind == "join":
+            if ev.cn in self.live:
+                return
+            self.live.add(ev.cn)
+            self._reconfigure("join", ev.cn)
+        elif ev.kind == "leave":
+            if ev.cn not in self.live:
+                return
+            self.live.discard(ev.cn)
+            self._reconfigure("leave", ev.cn)
+        else:  # cn_crash
+            if ev.cn not in self.live:
+                return
+            self.live.discard(ev.cn)
+            self.crashed[ev.cn] = ev.at_op + ev.duration_ops
+            self.transports[ev.cn].mark_fault("cn_crash", mn=ev.cn,
+                                              down_s=ev.down_s)
+            self._reconfigure("cn_crash", ev.cn)
+
+    # ---------------------------------------------------------- handoff
+    def _reconfigure(self, reason: str, cn: int) -> None:
+        """DINOMO-style ownership handoff after a membership change.
+
+        Rebalances the table over the new live set; each destination CN
+        bulk-reads the CN half of just the shards it gained (one
+        one-sided §4.4-shaped fetch: poll + bulk READ + FAA) and waits
+        out the previous owner's lease before serving — the same drain
+        ``ReplicaSetAdapter.failover`` charges.  Cost is O(shards
+        moved); the key count never appears.
+        """
+        if not self.live:
+            self.handoffs.append(HandoffEvent(self.clock, reason, cn, (), 0))
+            return
+        moved = self.ownership.rebalance(self.live)
+        by_dst: dict[int, list] = {}
+        for s, _old, new in moved:
+            by_dst.setdefault(new, []).append(s)
+        total = 0
+        for dst in sorted(by_dst):
+            shards = by_dst[dst]
+            b = sum(self.cn_half_bytes(s) for s in shards)
+            total += b
+            led = self.ledgers[dst]
+            led.add(1, rts=3, req=16, resp=b, one_sided=True)
+            wait_us = self.spec.lease_wait_us
+            if wait_us > 0:
+                led.fault_wait_us += int(round(wait_us))
+                self.transports[dst].add_wait(wait_us * 1e-6)
+            hub = self.hubs[dst]
+            if hub is not None:
+                span = hub.begin_span("handoff", reason, len(shards),
+                                      trigger=reason)
+                span.annotate(shards=len(shards), bytes_moved=b,
+                              from_event_cn=cn)
+        self.stats.handoffs += 1
+        self.stats.shards_moved += len(moved)
+        self.stats.handoff_bytes += total
+        self.handoffs.append(
+            HandoffEvent(self.clock, reason, cn, tuple(moved), total))
+
+    # -------------------------------------------------------- coherence
+    def epoch_sync(self, cn: int, keys: np.ndarray) -> None:
+        """Drop CN ``cn``'s cached entries for any shard it is behind on
+        (runs above the cache layer, so a stale entry can never be
+        served), then catch its seen-epochs up."""
+        shards = self.shards_of(keys)
+        stale = self.epochs.stale_shards(cn, shards)
+        if stale.size == 0:
+            return
+        cache = self.caches[cn]
+        if cache is not None:
+            eng = self.engine
+            stale_tbl = np.zeros(len(eng.tables), dtype=bool)
+            stale_tbl[stale] = True
+            dir_mask = np.uint32((1 << eng.global_depth) - 1)
+            directory = np.asarray(eng.directory, dtype=np.int64)
+
+            def routed_to_stale(k_lo, k_hi):
+                e = hash64_32(k_lo, k_hi, _DIR_SEED) & dir_mask
+                return stale_tbl[directory[e.astype(np.int64)]]
+
+            self.stats.epoch_invalidations += \
+                cache.invalidate_where(routed_to_stale)
+        self.epochs.sync(cn, stale)
+
+    def epoch_bump(self, cn: int, shards: np.ndarray) -> None:
+        """CN ``cn`` completed a write touching ``shards``: multicast the
+        invalidation epoch (piggybacked on the write's round trips —
+        zero extra wire; other CNs apply it at their next epoch
+        check)."""
+        self.epochs.bump(cn, np.unique(np.asarray(shards, dtype=np.int64)))
+
+    # ------------------------------------------------------ split sync
+    def after_engine_call(self) -> None:
+        """Extend ownership/epochs after §4.4 splits grew the directory.
+
+        Successors inherit the parent's owner (the split rebuilt both
+        halves at the owning CN), and start at epoch 0 with every CN
+        current — the split's own sync point already invalidated every
+        bound CN cache.
+        """
+        eng = self.engine
+        n_new = len(eng.tables)
+        if n_new == self._n_tables:
+            return
+        directory = list(eng.directory)
+        old_dir = self._last_dir
+        old_mask = len(old_dir) - 1
+        for idx in range(self._n_tables, n_new):
+            parent = None
+            for e, tv in enumerate(directory):
+                if tv == idx:
+                    parent = old_dir[e & old_mask]
+                    break
+            if parent is None or parent >= len(self.ownership.owners):
+                parent = 0  # unreachable table: park it on CN 0's owner
+            self.ownership.extend_for_split(int(parent))
+        self.epochs.grow(n_new)
+        self._n_tables = n_new
+        self._last_dir = directory
+
+
+def cluster_of(spec, keys, values, *, n_cns: int | None = None,
+               n_mns: int | None = None,
+               membership: MembershipSchedule | None = None,
+               lease_wait_us: float | None = None) -> Cluster:
+    """Open a cluster from a :class:`ClusterSpec` or a plain
+    :class:`StoreSpec` plus overrides (the registry-companion entry
+    point: ``cluster_of(spec, keys, values, n_cns=8)``)."""
+    if isinstance(spec, ClusterSpec):
+        cspec = spec
+        if any(v is not None for v in (n_cns, n_mns, membership,
+                                       lease_wait_us)):
+            cspec = dataclasses.replace(
+                cspec,
+                n_cns=n_cns if n_cns is not None else cspec.n_cns,
+                n_mns=n_mns if n_mns is not None else cspec.n_mns,
+                membership=(membership if membership is not None
+                            else cspec.membership),
+                lease_wait_us=(lease_wait_us if lease_wait_us is not None
+                               else cspec.lease_wait_us))
+    else:
+        cspec = ClusterSpec(
+            store=spec, n_cns=n_cns if n_cns is not None else 1,
+            n_mns=n_mns if n_mns is not None else 1,
+            membership=membership,
+            lease_wait_us=(lease_wait_us if lease_wait_us is not None
+                           else 50.0))
+    return Cluster(cspec, keys, values)
+
+
+__all__ = ["CNRouter", "Cluster", "ClusterSpec", "ClusterStats", "EpochGate",
+           "HandoffEvent", "SwitchingTransport", "cluster_of"]

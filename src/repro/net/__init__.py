@@ -32,7 +32,7 @@ same crash timeline.
 """
 
 from repro.net.faults import FaultEvent, FaultPlane, FaultSchedule
-from repro.net.replay import SimResult, simulate
+from repro.net.replay import SimResult, simulate, simulate_cluster
 from repro.net.service import CX3, CX6, ServiceModel
 from repro.net.sim import Server, Simulator
 from repro.net.transport import (DoorbellMark, FaultMark, OpEvent,
@@ -41,4 +41,4 @@ from repro.net.transport import (DoorbellMark, FaultMark, OpEvent,
 __all__ = ["CX3", "CX6", "DoorbellMark", "FaultEvent", "FaultMark",
            "FaultPlane", "FaultSchedule", "OpEvent", "ResizeMark", "Segment",
            "Server", "ServiceModel", "SimResult", "Simulator", "Transport",
-           "simulate"]
+           "simulate", "simulate_cluster"]

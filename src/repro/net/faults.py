@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import json
 
-_FAULT_KINDS = ("mn_crash", "delay", "drop", "nic_saturation")
+_FAULT_KINDS = ("mn_crash", "delay", "drop", "nic_saturation", "cn_crash")
 _MASK = (1 << 64) - 1
 
 
@@ -76,6 +76,11 @@ class FaultEvent:
       retry is always state-safe: no store mutation happened.
     * ``"nic_saturation"`` — replica ``mn``'s NIC service times stretch
       by ``factor`` for ``down_s`` of sim time (incast window).
+    * ``"cn_crash"`` — compute node ``cn`` is dead for the window.  The
+      node is the *client* side, so no MN server pauses: the cluster
+      plane (``repro.cluster``) answers its calls ``"unavailable"``
+      locally and hands its shards to the survivors (ownership
+      failover); the mark is recorded for sim-plane reporting only.
     """
 
     kind: str
@@ -86,6 +91,7 @@ class FaultEvent:
     factor: float = 1.0
     extra_us: float = 0.0
     drop_rate: float = 0.0
+    cn: int = 0
 
     def validate(self) -> None:
         """Raise ``ValueError`` on an inexpressible window."""
@@ -97,8 +103,14 @@ class FaultEvent:
                              "duration_ops >= 1")
         if self.mn < 0:
             raise ValueError("mn replica index must be >= 0")
-        if self.kind == "mn_crash" and self.down_s <= 0:
-            raise ValueError("mn_crash needs down_s > 0 (sim-plane outage)")
+        if self.mn > 0 and self.kind == "cn_crash":
+            raise ValueError("cn_crash targets a CN (use the 'cn' field); "
+                             "leave 'mn' at 0")
+        if self.cn < 0:
+            raise ValueError("cn compute-node index must be >= 0")
+        if self.kind in ("mn_crash", "cn_crash") and self.down_s <= 0:
+            raise ValueError(f"{self.kind} needs down_s > 0 "
+                             f"(sim-plane outage)")
         if self.kind == "nic_saturation" and (self.factor <= 1.0
                                               or self.down_s <= 0):
             raise ValueError("nic_saturation needs factor > 1 and down_s > 0")
@@ -258,6 +270,16 @@ class FaultPlane:
     def crash_open(self, mn: int) -> bool:
         """Is replica ``mn`` inside an ``mn_crash`` window right now?"""
         return any(ev.kind == "mn_crash" and ev.mn == mn
+                   and ev.open_at(self.clock) for ev in self.schedule.events)
+
+    def cn_crash_open(self, cn: int) -> bool:
+        """Is compute node ``cn`` inside a ``cn_crash`` window right now?
+
+        MN-only deployments never ask; the cluster plane consults this
+        (plus its own :class:`repro.cluster.MembershipSchedule`) to fail
+        a dead CN's calls locally and hand its shards over.
+        """
+        return any(ev.kind == "cn_crash" and ev.cn == cn
                    and ev.open_at(self.clock) for ev in self.schedule.events)
 
     def delay_us(self) -> float:

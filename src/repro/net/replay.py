@@ -337,6 +337,214 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
         doorbell_ts=doorbell_ts)
 
 
+def simulate_cluster(traces, *, clients_per_cn: int = 1,
+                     window: int | str = 1, mn_threads: int = 1,
+                     doorbell: bool = True, service: ServiceModel = CX6,
+                     replicas: int = 1,
+                     max_ops: int | None = None) -> SimResult:
+    """Replay N per-CN traces against one shared MN pool.
+
+    The multi-CN companion to :func:`simulate` (``repro.cluster`` records
+    one trace per compute node): every CN gets ``clients_per_cn``
+    closed-loop clients consuming *its own* trace in order, while all CNs
+    contend on the same ``replicas`` MN CPU/NIC server pairs — the
+    disaggregated-memory scaling experiment, where aggregate throughput
+    grows with CNs until the MN side saturates.
+
+    Cluster-specific trace items:
+
+    * segments with ``Segment.cn_dst >= 0`` are CN->CN forward RPCs: they
+      queue on the *destination CN's* RPC thread (one worker per CN)
+      instead of an MN server, costing its NIC + CPU service — so owner
+      CNs serialise the forwards they absorb;
+    * ``FaultMark(kind="cn_crash")`` records an availability window for
+      the marked CN (``replica`` = CN id) without pausing any server —
+      the dead CN's stack already answers degraded on the host plane, and
+      its shards failed over;
+    * ``window="policy"`` honours each CN's own recorded DoorbellMark
+      boundaries independently (per-CN pipeline flushes).
+
+    Latencies/completions aggregate over all CNs in completion order;
+    determinism is inherited from the event heap's insertion-order
+    tie-break, so the same traces replay bit-identically.
+    """
+    policy_window = window == "policy"
+    sim = Simulator()
+    n_rep = max(1, int(replicas))
+    mn_cpus = [Server(sim, workers=max(1, mn_threads), name=f"mn_cpu{r}")
+               for r in range(n_rep)]
+    mn_nics = [Server(sim, workers=1, name=f"mn_nic{r}")
+               for r in range(n_rep)]
+    cn_traces = [list(t) for t in traces]
+    n_cns = max(1, len(cn_traces))
+    cn_rpcs = [Server(sim, workers=1, name=f"cn_rpc{c}")
+               for c in range(n_cns)]
+    if max_ops is not None:  # per-CN cap: each trace keeps its prefix
+        for c, items in enumerate(cn_traces):
+            kept, n = [], 0
+            for it in items:
+                if isinstance(it, OpEvent):
+                    if n >= max_ops:
+                        continue
+                    n += 1
+                kept.append(it)
+            cn_traces[c] = kept
+
+    slow_open = {"n": 0}
+    crash_open = [0] * n_rep
+    sat_open: list[list[float]] = [[] for _ in range(n_rep)]
+    lat_us: list[float] = []
+    done_t: list[float] = []
+    windows: list[tuple[float, float]] = []
+    fwindows: list[tuple[float, float, str, int]] = []
+
+    def _open_fault_window(mark: FaultMark) -> None:
+        if mark.kind == "cn_crash":
+            t0 = sim.now
+            fwindows.append((t0, t0 + mark.down_s, "cn_crash", mark.mn))
+            return  # host-plane failover; no sim-plane server to pause
+        r = mark.mn % n_rep
+        t0 = sim.now
+        fwindows.append((t0, t0 + mark.down_s, mark.kind, r))
+        if mark.kind == "mn_crash":
+            crash_open[r] += 1
+            mn_cpus[r].pause()
+            mn_nics[r].pause()
+
+            def restart():
+                crash_open[r] -= 1
+                if crash_open[r] == 0:
+                    mn_nics[r].resume()
+                    mn_cpus[r].resume()
+
+            sim.schedule(mark.down_s, restart)
+        elif mark.kind == "nic_saturation":
+            sat_open[r].append(mark.factor)
+            mn_nics[r].factor = max(sat_open[r])
+
+            def clear():
+                sat_open[r].remove(mark.factor)
+                mn_nics[r].factor = max(sat_open[r]) if sat_open[r] else 1.0
+
+            sim.schedule(mark.down_s, clear)
+
+    class _CNFeed:
+        """One CN's trace cursor + policy-window state."""
+
+        __slots__ = ("items", "i", "cur_w")
+
+        def __init__(self, items) -> None:
+            self.items = items
+            self.i = 0
+            self.cur_w = {"w": 1 if policy_window else max(1, int(window)),
+                          "left": 0}
+
+        def next_item(self):
+            while self.i < len(self.items):
+                it = self.items[self.i]
+                self.i += 1
+                if isinstance(it, ResizeMark):
+                    _open_resize_window(sim, mn_cpus, it, service, windows,
+                                        slow_open)
+                    continue
+                if isinstance(it, FaultMark):
+                    _open_fault_window(it)
+                    continue
+                if isinstance(it, DoorbellMark):
+                    if policy_window:
+                        self.cur_w["w"] = max(1, it.n_ops)
+                        self.cur_w["left"] = it.n_ops
+                    continue
+                if policy_window:
+                    if self.cur_w["left"] <= 0:
+                        self.cur_w["w"] = 1
+                    else:
+                        self.cur_w["left"] -= 1
+                return it
+            return None
+
+    feeds = [_CNFeed(items) for items in cn_traces]
+
+    class Client:
+        __slots__ = ("post", "inflight", "feed")
+
+        def __init__(self, cid: int, feed: _CNFeed) -> None:
+            self.post = Server(
+                sim, workers=1,
+                coalesce=service.max_doorbell if doorbell else 1,
+                coalesce_extra_s=service.cn_post_batched_s,
+                name=f"qp{cid}")
+            self.inflight = 0
+            self.feed = feed
+
+        def pump(self) -> None:
+            while self.inflight < self.feed.cur_w["w"]:
+                op = self.feed.next_item()
+                if op is None:
+                    return
+                self.inflight += 1
+                t0 = sim.now
+                sim.schedule(service.cn_compute_s(op.cn_hash, op.cn_cmp),
+                             lambda op=op, t0=t0: self._segment(op, 0, t0))
+
+        def _segment(self, op: OpEvent, si: int, t0: float) -> None:
+            if si >= len(op.segments):
+                lat_us.append((sim.now - t0) * 1e6)
+                done_t.append(sim.now)
+                self.inflight -= 1
+                self.pump()
+                return
+            seg = op.segments[si]
+
+            def after_post():
+                sim.schedule(service.wire_s, arrive)
+
+            def arrive():
+                if seg.cn_dst >= 0:
+                    # CN->CN forward: the owner's RPC thread absorbs both
+                    # the NIC handling and the dispatch compute
+                    cn_rpcs[seg.cn_dst % n_cns].request(
+                        service.mn_nic_s(seg) + service.mn_cpu_s(seg),
+                        respond)
+                    return
+                r = seg.mn % n_rep
+                mn_nics[r].request(service.mn_nic_s(seg),
+                                   lambda: after_nic(r))
+
+            def after_nic(r):
+                if seg.one_sided:
+                    respond()
+                else:
+                    mn_cpus[r].request(service.mn_cpu_s(seg), respond)
+
+            def respond():
+                sim.schedule(service.wire_s + service.cn_recv_s(seg),
+                             lambda: self._segment(op, si + 1, t0))
+
+            def start_post():
+                self.post.request(service.cn_post_s, after_post)
+
+            if seg.wait_s > 0:
+                sim.schedule(seg.wait_s, start_post)
+            else:
+                start_post()
+
+    cs = [Client(c * max(1, clients_per_cn) + j, feeds[c])
+          for c in range(n_cns) for j in range(max(1, clients_per_cn))]
+    for cl in cs:
+        cl.pump()
+    sim.run()
+
+    return SimResult(
+        n_ops=len(lat_us), seconds=sim.now,
+        latencies_us=np.asarray(lat_us, dtype=np.float64),
+        completions_s=np.asarray(done_t, dtype=np.float64),
+        resize_windows=windows,
+        mn_cpu_busy_s=sum(s.busy_s for s in mn_cpus),
+        mn_nic_busy_s=sum(s.busy_s for s in mn_nics),
+        fault_windows=fwindows)
+
+
 def _open_resize_window(sim: Simulator, mn_cpus: list[Server],
                         mark: ResizeMark, service: ServiceModel,
                         windows: list[tuple[float, float]],

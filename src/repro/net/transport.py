@@ -58,6 +58,8 @@ class Segment:
     mn_writes: int = 0
     mn: int = 0          # serving replica (replay routes by this index)
     wait_s: float = 0.0  # CN-side stall (delay/backoff/lease) before posting
+    cn_dst: int = -1     # >= 0: CN->CN RPC served by that compute node's
+    #                      RPC thread instead of an MN (cluster forwarding)
 
     def with_mn(self, *, mn_hash=0, mn_cmp=0, mn_reads=0, mn_writes=0):
         return dataclasses.replace(
@@ -127,6 +129,9 @@ class Transport:
         # at their inert defaults unless a ReplicaSetAdapter drives them)
         self.current_mn = 0
         self._pending_wait_s = 0.0
+        # cluster plane: >= 0 while recording a CN->CN forward RPC — the
+        # destination CN's index is stamped into new segments (Segment.cn_dst)
+        self.current_cn_dst = -1
 
     # ------------------------------------------------------- sink protocol
     def on_meter_add(self, n: int, *, rts: int, req: int, resp: int,
@@ -207,7 +212,8 @@ class Transport:
             seg = Segment(req_bytes=req // rts + (req % rts if i == 0 else 0),
                           resp_bytes=resp // rts + (resp % rts if i == 0 else 0),
                           one_sided=one_sided, mn=self.current_mn,
-                          wait_s=wait if i == 0 else 0.0)
+                          wait_s=wait if i == 0 else 0.0,
+                          cn_dst=self.current_cn_dst)
             if i == 0:
                 seg = seg.with_mn(mn_hash=mn_hash, mn_cmp=mn_cmp,
                                   mn_reads=mn_reads, mn_writes=mn_writes)
@@ -282,3 +288,4 @@ class Transport:
         self._cont_used = False
         self.current_mn = 0
         self._pending_wait_s = 0.0
+        self.current_cn_dst = -1

@@ -1,0 +1,425 @@
+"""Multi-CN plane (``repro.cluster``): elastic membership, shard-ownership
+handoff, and cross-CN cache coherence.
+
+The contract under test, in order of importance:
+
+* dormant-plane contract #3 — a Cluster of N=1 with an empty membership
+  schedule is **byte-identical** to the ``open_store`` path: same
+  CommMeter totals, same recorded trace, same final MN state;
+* coherence — two CNs interleaving writes and reads on the same shards,
+  through a live §4.4 split, never serve a stale cached read (every
+  answer matches a host-side oracle), and the whole run is deterministic
+  across seeded reruns;
+* handoff — a CN join/leave moves only the affected shards' CN half
+  (DMPH seeds + othello arrays): bytes metered on the destination equal
+  the moved shards' exact CN-half sizes, O(shards moved) not O(keys);
+* elasticity — a crashed CN answers degraded and rejoins after its
+  window; a clean leave loses zero acknowledged writes;
+* the write-combining reconciliation satellite — combined reads whose
+  buffered write fails are re-read, answers equal ``combine_reads=False``;
+* the replay companion — ``simulate_cluster`` is deterministic and
+  degenerates to ``simulate`` for one CN.
+"""
+
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.api import BatchPolicy, SpecError, StoreSpec, open_store
+from repro.cluster import (Cluster, ClusterSpec, MembershipEvent,
+                           MembershipSchedule, OwnershipTable, ShardEpochs,
+                           cluster_of)
+from repro.net import (FaultEvent, FaultSchedule, Transport, simulate,
+                       simulate_cluster)
+
+N = 2048
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(9)
+    keys = np.unique(rng.integers(1, 1 << 62, 2 * N + 512, dtype=np.uint64))
+    assert len(keys) >= 2 * N
+    vals = np.arange(1, len(keys) + 1, dtype=np.uint64)
+    return keys[:N], vals[:N], keys[N:2 * N], vals[N:2 * N]
+
+
+def _spec(**kw):
+    kw.setdefault("cache_budget_bytes", 32 << 10)
+    return StoreSpec(kind="outback-dir", **kw)
+
+
+def _state_sig(x):
+    if isinstance(x, dict):
+        return tuple(sorted((k, _state_sig(v)) for k, v in x.items()
+                            if k != "cn"))
+    if isinstance(x, np.ndarray):
+        return (x.dtype.str, x.shape, x.tobytes())
+    if isinstance(x, (list, tuple)):
+        return tuple(_state_sig(v) for v in x)
+    return x
+
+
+# ------------------------------------------------------- dormant contract
+
+def test_single_cn_byte_identical_to_open_store(data):
+    keys, vals, extra, evals = data
+    t_ref = Transport()
+    ref = open_store(_spec(), keys, vals, transport=t_ref)
+    cl = cluster_of(_spec(), keys, vals, n_cns=1)
+    cn = cl.cns[0]
+
+    rng = np.random.default_rng(0)
+    for step in range(6):
+        idx = rng.integers(0, N, size=256)
+        for st in (ref, cn):
+            st.get_batch(keys[idx])
+        if step % 2:
+            nv = rng.integers(1, 1 << 32, size=64).astype(np.uint64)
+            for st in (ref, cn):
+                st.update_batch(keys[idx[:64]], nv)
+    for st in (ref, cn):
+        st.insert_batch(extra[:128], evals[:128])
+        st.get(int(extra[0]))
+        st.delete(int(extra[1]))
+
+    assert ref.meter_totals().snapshot() == cl.meter_totals().snapshot()
+    assert t_ref.trace == cl.transports[0].trace
+    assert (pickle.dumps(_state_sig(ref.engine.mn_state()))
+            == pickle.dumps(_state_sig(cl.mn_state())))
+    # nothing cluster-only fired
+    s = cl.stats.snapshot()
+    assert s["forward_rpcs"] == 0 and s["handoffs"] == 0
+    assert cl.epochs.stale_syncs == 0
+
+
+# ---------------------------------------------------- coherence (property)
+
+def _coherence_run(data, seed):
+    """Two CNs interleave writes/reads on shared shards through a live
+    split; returns (answers, meter snapshot, n_tables) for determinism
+    comparison.  Asserts every answer against a host-side oracle."""
+    keys, vals, extra, evals = data
+    cl = cluster_of(_spec(load_factor=0.85), keys, vals, n_cns=2)
+    oracle = {int(k): int(v) for k, v in zip(keys, vals)}
+    rng = np.random.default_rng(seed)
+    n_start = len(cl.engine.tables)
+    answers = []
+    ins = 0
+    for step in range(24):
+        writer, reader = cl.cns[step % 2], cl.cns[(step + 1) % 2]
+        idx = rng.integers(0, N, size=96)
+        # reader warms its cache on these exact keys...
+        r = reader.get_batch(keys[idx])
+        for k, v, f in zip(keys[idx], r.values, r.found):
+            assert f and int(v) == oracle[int(k)]
+        # ...then the *other* CN overwrites some of them
+        nv = rng.integers(1, 1 << 32, size=32).astype(np.uint64)
+        w = writer.update_batch(keys[idx[:32]], nv)
+        for k, v, ok in zip(keys[idx[:32]], nv, w.found):
+            if ok:
+                oracle[int(k)] = int(v)
+        # insert pressure drives organic §4.4 splits mid-run
+        take = extra[ins:ins + 64]
+        tv = evals[ins:ins + 64]
+        ins += 64
+        wi = writer.insert_batch(take, tv)
+        for k, v, ok in zip(take, tv, wi.found):
+            if ok:
+                oracle[int(k)] = int(v)
+        # the stale-read hunt: reader re-reads its (now invalid) hot set
+        r2 = reader.get_batch(keys[idx])
+        for k, v, f in zip(keys[idx], r2.values, r2.found):
+            assert f, int(k)
+            assert int(v) == oracle[int(k)], \
+                f"stale read escaped the epoch check for key {int(k)}"
+        answers.append((r2.values.copy(), r2.found.copy()))
+    assert len(cl.engine.tables) > n_start, \
+        "the scenario must drive a live split"
+    assert cl.epochs.bumps > 0 and cl.stats.epoch_invalidations > 0
+    return answers, cl.meter_totals().snapshot(), len(cl.engine.tables)
+
+
+def test_two_cn_coherence_through_live_split(data):
+    a1, m1, t1 = _coherence_run(data, seed=42)
+    a2, m2, t2 = _coherence_run(data, seed=42)
+    # seeded rerun: identical answers, identical meters, identical topology
+    assert m1 == m2 and t1 == t2
+    for (v1, f1), (v2, f2) in zip(a1, a2):
+        assert (v1 == v2).all() and (f1 == f2).all()
+
+
+def test_non_owner_write_forwards_and_owner_read_does_not(data):
+    keys, vals, _, _ = data
+    for seed in range(16):  # a seed where both CNs own shards
+        cl = cluster_of(_spec(params={"initial_depth": 3}), keys, vals,
+                        n_cns=2, membership=MembershipSchedule(seed=seed))
+        if len(set(cl.ownership.owners)) == 2:
+            break
+    shards = cl.shards_of(keys)
+    owners = cl.ownership.owners_for(shards)
+    mine = keys[owners == 0][:64]
+    theirs = keys[owners == 1][:64]
+    assert len(mine) and len(theirs), "both CNs must own something"
+    before = cl.stats.forward_rpcs
+    cl.cns[0].get_batch(mine)  # owner-local: no forward RPC
+    assert cl.stats.forward_rpcs == before
+    cl.cns[0].update_batch(theirs, np.arange(1, len(theirs) + 1,
+                                             dtype=np.uint64))
+    assert cl.stats.forward_rpcs == before + 1  # one batched forward
+    assert cl.stats.forwarded_write_lanes >= len(theirs)
+
+
+# ----------------------------------------------------------------- handoff
+
+def test_join_handoff_moves_only_affected_shard_bytes(data):
+    keys, vals, _, _ = data
+    sched = MembershipSchedule.single_join(at_op=512, cn=3,
+                                           initial=(0, 1, 2), seed=7)
+    cl = cluster_of(_spec(params={"initial_depth": 3}), keys, vals,
+                    n_cns=4, membership=sched)
+    led3_before = cl.ledgers[3].snapshot()["resp_bytes"]
+    for i in range(8):
+        cl.cns[i % 3].get_batch(keys[i * 128:(i + 1) * 128])
+    assert 3 in cl.live
+    h = [e for e in cl.handoffs if e.reason == "join"]
+    assert len(h) == 1 and h[0].cn == 3 and len(h[0].moved) > 0
+    # O(shards moved): the metered bytes are exactly the moved shards'
+    # CN-half sizes (seeds + othello arrays + header) — keys never appear
+    expect = sum(cl.cn_half_bytes(s) for s, _o, _n in h[0].moved)
+    assert h[0].bytes_moved == expect
+    led3 = cl.ledgers[3].snapshot()
+    assert led3["resp_bytes"] - led3_before >= expect
+    assert led3["fault_wait_us"] > 0  # lease-gated cutover drain
+    # every move lands on the joiner or rebalances onto a live CN
+    for _s, old, new in h[0].moved:
+        assert new in cl.live and new != old
+    # the joiner now serves reads correctly
+    r = cl.cns[3].get_batch(keys[:256])
+    assert r.found.all()
+
+
+def test_leave_loses_no_acked_writes(data):
+    keys, vals, extra, evals = data
+    sched = MembershipSchedule.single_leave(at_op=500, cn=1, seed=3)
+    cl = cluster_of(_spec(), keys, vals, n_cns=2, membership=sched)
+    acked = []
+    w = cl.cns[1].update_batch(keys[:256],
+                               np.arange(1, 257, dtype=np.uint64))
+    acked += [(int(k), int(v)) for k, v, ok in
+              zip(keys[:256], np.arange(1, 257), w.found) if ok]
+    wi = cl.cns[1].insert_batch(extra[:128], evals[:128])
+    acked += [(int(k), int(v)) for k, v, ok in
+              zip(extra[:128], evals[:128], wi.found) if ok]
+    # drive past the leave point
+    for i in range(4):
+        cl.cns[0].get_batch(keys[256 + i * 64:256 + (i + 1) * 64])
+    assert 1 not in cl.live
+    assert any(e.reason == "leave" for e in cl.handoffs)
+    # the departed CN answers degraded, never serves
+    r_dead = cl.cns[1].get_batch(keys[:8])
+    assert not r_dead.found.any()
+    assert set(r_dead.statuses) == {"unavailable"}
+    # every write CN 1 acked is readable through the survivor
+    ak = np.asarray([k for k, _ in acked], dtype=np.uint64)
+    av = np.asarray([v for _, v in acked], dtype=np.uint64)
+    r = cl.cns[0].get_batch(ak)
+    lost = int((~(r.found & (r.values == av))).sum())
+    assert lost == 0, f"{lost} acked writes lost through the leave"
+
+
+def test_cn_crash_degrades_then_rejoins(data):
+    keys, vals, _, _ = data
+    sched = MembershipSchedule(events=(
+        MembershipEvent("cn_crash", at_op=256, cn=1,
+                        duration_ops=512, down_s=2e-4),), seed=1)
+    cl = cluster_of(_spec(), keys, vals, n_cns=2, membership=sched)
+    cl.cns[0].get_batch(keys[:256])     # crosses at_op: CN 1 dies
+    assert 1 not in cl.live
+    r = cl.cns[1].get_batch(keys[:32])  # dead CN: degraded answers
+    assert not r.found.any() and set(r.statuses) == {"unavailable"}
+    assert cl.stats.rejected_lanes >= 32
+    # the crash is recorded on the dead CN's trace for the replay
+    from repro.net.transport import FaultMark
+    marks = [m for m in cl.transports[1].trace
+             if isinstance(m, FaultMark) and m.kind == "cn_crash"]
+    assert len(marks) == 1 and marks[0].down_s == pytest.approx(2e-4)
+    # survivors serve throughout; after the window the CN rejoins
+    cl.cns[0].get_batch(keys[:512])
+    r2 = cl.cns[1].get_batch(keys[:32])
+    assert 1 in cl.live and r2.found.all()
+    reasons = [e.reason for e in cl.handoffs]
+    assert "cn_crash" in reasons and "cn_restart" in reasons
+
+
+def test_ownership_rebalance_is_minimal_and_deterministic():
+    t1 = OwnershipTable(64, live=(0, 1, 2), seed=11)
+    t2 = OwnershipTable(64, live=(0, 1, 2), seed=11)
+    assert t1.owners == t2.owners
+    before = list(t1.owners)
+    moved = t1.rebalance((0, 1, 2, 3))
+    # minimality: every move lands on the joiner; survivors keep the rest
+    assert all(new == 3 for _s, _o, new in moved)
+    for s in range(64):
+        if before[s] != t1.owners[s]:
+            assert t1.owners[s] == 3
+    # removing the joiner restores the original placement exactly
+    t1.rebalance((0, 1, 2))
+    assert t1.owners == before
+
+
+def test_shard_epochs_semantics():
+    ep = ShardEpochs(4, n_cns=2)
+    ep.bump(0, np.asarray([1, 2]))
+    assert list(ep.stale_shards(1, np.asarray([0, 1, 2, 3]))) == [1, 2]
+    assert ep.stale_shards(0, np.asarray([1, 2])).size == 0  # writer current
+    ep.sync(1, np.asarray([1, 2]))
+    assert ep.stale_shards(1, np.asarray([1, 2])).size == 0
+    ep.grow(6)  # split: new shards start current everywhere
+    assert ep.n_shards == 6
+    assert ep.stale_shards(1, np.asarray([4, 5])).size == 0
+
+
+# ------------------------------------------------------------ specs / JSON
+
+def test_membership_schedule_json_roundtrip():
+    sched = MembershipSchedule(
+        events=(MembershipEvent("join", 100, 2),
+                MembershipEvent("cn_crash", 200, 0, duration_ops=50,
+                                down_s=1e-4),
+                MembershipEvent("leave", 400, 1)),
+        seed=9, initial=(0, 1))
+    back = MembershipSchedule.from_json(sched.to_json())
+    assert back == sched
+    gen = MembershipSchedule.generate(5, 4096, n_cns=4)
+    assert MembershipSchedule.from_json(gen.to_json()) == gen
+
+
+def test_cluster_spec_validation_and_roundtrip():
+    spec = ClusterSpec(store=_spec(), n_cns=4, n_mns=2,
+                       membership=MembershipSchedule.single_join(64, 3))
+    spec.validate()
+    assert ClusterSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(SpecError):
+        ClusterSpec(store=StoreSpec(kind="outback"), n_cns=2).validate()
+    with pytest.raises(SpecError):
+        ClusterSpec(store=_spec(), n_cns=0).validate()
+    with pytest.raises(SpecError):  # membership names a CN out of range
+        ClusterSpec(store=_spec(), n_cns=2,
+                    membership=MembershipSchedule.single_join(10, 5)
+                    ).validate()
+    with pytest.raises(SpecError):  # MN pool striping vs replication
+        ClusterSpec(store=StoreSpec(kind="outback-dir", replicas=2),
+                    n_mns=2).validate()
+
+
+def test_fault_schedule_cn_crash_validation(data):
+    keys, vals, _, _ = data
+    with pytest.raises(ValueError):  # cn_crash is CN-side: no mn target
+        FaultEvent("cn_crash", 10, 20, mn=1, cn=0, down_s=1e-4).validate()
+    with pytest.raises(ValueError):  # needs a sim-plane outage
+        FaultEvent("cn_crash", 10, 20, cn=0).validate()
+    # rides a StoreSpec without tripping the replica-bound check...
+    sched = FaultSchedule(events=(
+        FaultEvent("cn_crash", 64, 128, cn=1, down_s=1e-4),),
+        lease_term_ops=32)
+    StoreSpec(kind="outback-dir", faults=sched).validate()
+    # ...and the cluster lifts it into a membership window
+    lifted = MembershipSchedule.from_faults(sched)
+    assert lifted.events[0].kind == "cn_crash"
+    assert lifted.events[0].duration_ops == 128
+    cl = cluster_of(StoreSpec(kind="outback-dir", faults=sched,
+                              cache_budget_bytes=16 << 10),
+                    keys, vals, n_cns=2)
+    cl.cns[0].get_batch(keys[:128])  # crosses at_op 64: CN 1 crashes
+    assert 1 not in cl.live
+
+
+# --------------------------------------- write-combining reconciliation
+
+def _wc_run(data, combine):
+    keys, vals, extra, _ = data
+    spec = _spec(batch=BatchPolicy(window=512, combine_reads=combine))
+    st = open_store(spec, keys, vals)
+    answers = []
+    # failing updates (absent keys) + combined/hazard reads of them
+    st.submit("update", extra[:16], np.arange(1, 17, dtype=np.uint64))
+    h1 = st.submit("get", extra[:16])
+    # succeeding updates + reads (the combine fast path, no fixup needed)
+    st.submit("update", keys[:16], np.arange(101, 117, dtype=np.uint64))
+    h2 = st.submit("get", keys[:16])
+    # delete of an absent key + read
+    st.submit("delete", extra[16:20])
+    h3 = st.submit("get", extra[16:20])
+    st.flush()
+    for h in (h1, h2, h3):
+        r = h.result()
+        answers.append(([int(v) for v in r.values],
+                        [bool(f) for f in r.found]))
+    return answers, st.stats
+
+
+def test_combined_reads_reconcile_to_uncombined_answers(data):
+    a_on, s_on = _wc_run(data, combine=True)
+    a_off, s_off = _wc_run(data, combine=False)
+    assert a_on == a_off
+    assert s_on.combined_reads > 0 and s_on.reconciled_reads > 0
+    assert s_off.combined_reads == 0 and s_off.reconciled_reads == 0
+    # hazard flushes disappear when combining serves the reads locally
+    assert s_on.hazard_flushes < s_off.hazard_flushes
+
+
+# ----------------------------------------------------------------- replay
+
+def test_simulate_cluster_single_cn_matches_simulate(data):
+    keys, vals, _, _ = data
+    cl = cluster_of(_spec(), keys, vals, n_cns=1)
+    cl.cns[0].get_batch(keys[:512])
+    cl.cns[0].update_batch(keys[:64], np.arange(1, 65, dtype=np.uint64))
+    trace = cl.transports[0].trace
+    r1 = simulate(trace, clients=4, window=8)
+    r2 = simulate_cluster([trace], clients_per_cn=4, window=8)
+    assert r1.n_ops == r2.n_ops
+    assert r1.seconds == pytest.approx(r2.seconds, rel=0, abs=0)
+    assert np.array_equal(r1.latencies_us, r2.latencies_us)
+
+
+def test_simulate_cluster_is_deterministic_and_scales(data):
+    keys, vals, _, _ = data
+    cl = cluster_of(_spec(params={"initial_depth": 2}), keys, vals,
+                    n_cns=4, n_mns=2)
+    rng = np.random.default_rng(2)
+    for step in range(12):
+        idx = rng.integers(0, N, size=256)
+        cl.cns[step % 4].get_batch(keys[idx])
+    traces = [t.trace for t in cl.transports]
+    r1 = simulate_cluster(traces, clients_per_cn=2, window=8, replicas=2)
+    r2 = simulate_cluster(traces, clients_per_cn=2, window=8, replicas=2)
+    assert r1.n_ops == r2.n_ops and r1.seconds == r2.seconds
+    assert np.array_equal(r1.latencies_us, r2.latencies_us)
+    # 4 CNs replaying in parallel beat one CN consuming the same ops
+    merged = [it for t in traces for it in t]
+    solo = simulate(merged, clients=2, window=8, replicas=2)
+    assert r1.seconds < solo.seconds
+
+
+def test_cluster_cn_crash_mark_records_availability_window(data):
+    keys, vals, _, _ = data
+    sched = MembershipSchedule(events=(
+        MembershipEvent("cn_crash", 128, 1, duration_ops=256,
+                        down_s=3e-4),), seed=0)
+    cl = cluster_of(_spec(), keys, vals, n_cns=2, membership=sched)
+    for i in range(6):
+        cl.cns[i % 2].get_batch(keys[i * 64:(i + 1) * 64])
+    res = simulate_cluster([t.trace for t in cl.transports],
+                           clients_per_cn=2, window=4)
+    kinds = {k for _a, _b, k, _r in res.fault_windows}
+    assert "cn_crash" in kinds
+    cn_win = [w for w in res.fault_windows if w[2] == "cn_crash"]
+    assert cn_win[0][1] - cn_win[0][0] == pytest.approx(3e-4)
+    # availability dict schema carries the window for the CI validator
+    avail = res.availability()
+    assert avail["schema"] == "outback-availability/v1"
+    assert any(w[2] == "cn_crash" for w in avail["fault_windows"])
