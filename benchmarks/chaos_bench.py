@@ -1,0 +1,253 @@
+"""The ``chaos`` suite: partition tolerance, fencing, seeded chaos runs.
+
+The scenario set for the partition-tolerant cluster plane (ISSUE 9):
+CN<->MN link partitions with epoch-fenced lease arbitration, per-shard
+HRW replica placement on the MN pool, and the seeded chaos harness
+(:mod:`repro.net.chaos`) that composes every fault kind over a live
+multi-CN cluster.  Everything is deterministic — schedules ride the op
+clock, every draw is seeded — so each row reproduces bit-for-bit.
+
+Rows (CSV contract ``name,us_per_call,derived`` + JSON extras):
+
+* ``chaos/partition_heal``   — the acceptance scenario: N=2 CNs over a
+  3-wide MN pool (HRW, k=2); CN 1 is fully partitioned mid-run, its
+  shard leases are arbitrated to the survivor with a fence bump, and its
+  first post-heal write is **fenced** then re-routed.  Asserts zero lost
+  acked writes, zero acked writes while fully cut, a non-zero fenced
+  count, and bit-exact post-heal convergence to the host oracle; the
+  replayed availability curve (partition windows annotated) rides in the
+  extras.
+* ``chaos/seed<N>``          — :func:`repro.net.chaos.run_chaos` on
+  three distinct seeds; raises if any invariant fails (CI acceptance).
+* ``chaos/determinism``      — two runs of one seed must be
+  bit-identical in meter totals, final MN state signature, and exported
+  telemetry; raises on drift.
+* ``chaos/placement_resync`` — an MN crash under HRW placement resyncs
+  only the shards placed on the crashed replica: total response bytes
+  stay below the same scenario under whole-image twins mirroring.
+* ``chaos/dormant_identity`` — a cluster with the partition/fencing
+  plane armed (HRW placement + empty fault schedule) meters, traces and
+  stores byte-identically to the plain PR 8 cluster; raises on drift.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import StoreSpec
+from repro.cluster import cluster_of
+from repro.net import FaultEvent, FaultSchedule, simulate_cluster
+from repro.net.chaos import run_chaos, state_signature
+
+_SEEDS = (1, 2, 3)
+_DEGRADED = ("backoff", "unavailable")
+
+
+def chaos_suite(quick: bool = False):
+    rows = [_partition_heal_row(quick)]
+    rows.extend(_seed_row(s, quick) for s in _SEEDS)
+    rows.append(_determinism_row(quick))
+    rows.append(_placement_resync_row(quick))
+    rows.append(_dormant_identity_row(quick))
+    return rows
+
+
+def _datasets(n: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(2 ** 40, size=n, replace=False).astype(np.uint64)
+    vals = rng.integers(1, 2 ** 50, size=n, dtype=np.uint64)
+    return keys, vals, rng
+
+
+# ------------------------------------------------------- partition + heal
+def _partition_heal_row(quick: bool):
+    n = 1500 if quick else 6000
+    rounds = 2000 if quick else 6000
+    keys, vals, rng = _datasets(n)
+    sched = FaultSchedule(
+        events=(FaultEvent("partition", at_op=rounds // 5,
+                           duration_ops=3 * rounds // 10, mn=-1, cn=1,
+                           down_s=1.5e-3),),
+        seed=3, lease_term_ops=0)
+    spec = StoreSpec(kind="outback-dir", replicas=3, placement="hrw",
+                     placement_k=2, faults=sched, load_factor=0.5,
+                     rng_seed=5)
+    cl = cluster_of(spec, keys, vals, n_cns=2)
+
+    oracle = dict(zip(keys.tolist(), vals.tolist()))
+    wk = rng.choice(keys, size=rounds).astype(np.uint64)
+    wv = rng.integers(1, 2 ** 50, size=rounds, dtype=np.uint64)
+    acked = degraded = acked_while_cut = 0
+    for i in range(0, rounds, 8):
+        cn = (i // 8) % 2
+        ks, vs = wk[i:i + 8], wv[i:i + 8]
+        cut_before = not cl.cn_reachable(cn)
+        res = cl.cns[cn].update_batch(ks, vs)
+        cut = cut_before and not cl.cn_reachable(cn)
+        sts = res.statuses or ("ok",) * len(ks)
+        for k, v, st in zip(ks.tolist(), vs.tolist(), sts):
+            if st in _DEGRADED:
+                degraded += 1
+            else:
+                oracle[k] = v
+                acked += 1
+                if cut:
+                    acked_while_cut += 1
+    for c in cl.cns:
+        c.flush()
+
+    lost = 0
+    for c in range(2):
+        for i in range(0, len(keys), 64):
+            ks = keys[i:i + 64]
+            res = cl.cns[c].get_batch(ks)
+            for k, v, f in zip(ks.tolist(), res.values.tolist(),
+                               res.found.tolist()):
+                if not f or v != oracle[k]:
+                    lost += 1
+
+    st = cl.stats
+    if lost:
+        raise AssertionError(f"partition_heal lost {lost} acked writes")
+    if acked_while_cut:
+        raise AssertionError(f"{acked_while_cut} writes acked while CN "
+                             f"was fully partitioned (split brain)")
+    if st.partition_arbitrations != 1 or st.fenced_write_lanes == 0 \
+            or st.view_syncs != 1:
+        raise AssertionError(
+            f"fencing did not fire: arbitrations="
+            f"{st.partition_arbitrations} fenced={st.fenced_write_lanes} "
+            f"view_syncs={st.view_syncs}")
+
+    sim = simulate_cluster([t.trace for t in cl.transports], replicas=3)
+    part_windows = [w for w in sim.fault_windows if w[2] == "partition"]
+    fence_marks = [w for w in sim.fault_windows if w[2] == "fenced"]
+    return ("chaos/partition_heal", 0.0,
+            f"fenced={st.fenced_write_lanes}",
+            {"acked_writes": acked, "degraded_lanes": degraded,
+             "lost_acked_writes": lost,
+             "acked_while_cut": acked_while_cut,
+             "partition_arbitrations": st.partition_arbitrations,
+             "fenced_write_lanes": st.fenced_write_lanes,
+             "fenced_rpcs": st.fenced_rpcs,
+             "view_syncs": st.view_syncs,
+             "handoff_reasons": [h.reason for h in cl.handoffs],
+             "sim_partition_windows": len(part_windows),
+             "sim_fence_marks": len(fence_marks),
+             "availability": sim.availability(n_buckets=24)})
+
+
+# ------------------------------------------------------------ chaos seeds
+def _seed_row(seed: int, quick: bool):
+    rep = run_chaos(seed, n_ops=2200 if quick else 6000,
+                    n_keys=900 if quick else 3000)
+    if not rep.passed:
+        raise AssertionError(f"chaos seed {seed} failed: {rep.failures}")
+    return (f"chaos/seed{seed}", 0.0,
+            f"avail={rep.availability:.3f}", rep.to_json_dict())
+
+
+def _determinism_row(quick: bool):
+    kw = dict(n_ops=1600 if quick else 4000,
+              n_keys=700 if quick else 2400, telemetry=True)
+    a = run_chaos(5, **kw)
+    b = run_chaos(5, **kw)
+    drift = []
+    if a.meters != b.meters:
+        drift.append("meters")
+    if a.state_sig != b.state_sig:
+        drift.append("mn_state")
+    if a.telemetry_sig != b.telemetry_sig:
+        drift.append("telemetry")
+    if drift:
+        raise AssertionError(f"chaos seed 5 is not deterministic: {drift}")
+    return ("chaos/determinism", 0.0, "bit-identical",
+            {"seed": 5, "lanes": a.lanes, "state_sig": a.state_sig,
+             "telemetry_sig": a.telemetry_sig})
+
+
+# ------------------------------------------------------ placement resync
+def _placement_resync_row(quick: bool):
+    n = 1500 if quick else 6000
+    rounds = 1600 if quick else 4000
+
+    def drive(placement, k):
+        keys, vals, rng = _datasets(n, seed=9)
+        sched = FaultSchedule.single_crash(rounds // 4, rounds // 4,
+                                           mn=1, seed=2, lease_term_ops=0)
+        spec = StoreSpec(kind="outback-dir", replicas=3,
+                         placement=placement, placement_k=k,
+                         faults=sched, load_factor=0.5, rng_seed=5)
+        cl = cluster_of(spec, keys, vals, n_cns=1)
+        oracle = dict(zip(keys.tolist(), vals.tolist()))
+        wk = rng.choice(keys, size=rounds).astype(np.uint64)
+        wv = rng.integers(1, 2 ** 50, size=rounds, dtype=np.uint64)
+        for i in range(0, rounds, 8):
+            ks, vs = wk[i:i + 8], wv[i:i + 8]
+            res = cl.cns[0].update_batch(ks, vs)
+            sts = res.statuses or ("ok",) * len(ks)
+            for key, v, stt in zip(ks.tolist(), vs.tolist(), sts):
+                if stt not in _DEGRADED:
+                    oracle[key] = v
+        cl.cns[0].flush()
+        lost = 0
+        for i in range(0, len(keys), 64):
+            ks = keys[i:i + 64]
+            res = cl.cns[0].get_batch(ks)
+            for key, v, f in zip(ks.tolist(), res.values.tolist(),
+                                 res.found.tolist()):
+                if not f or v != oracle[key]:
+                    lost += 1
+        if lost:
+            raise AssertionError(f"{placement} crash run lost {lost} "
+                                 f"acked writes")
+        m = cl.meter_totals().snapshot()
+        return m["resp_bytes"], m["resyncs"]
+
+    twins_bytes, twins_resyncs = drive("twins", 1)
+    hrw_bytes, hrw_resyncs = drive("hrw", 2)
+    if hrw_resyncs == 0 or twins_resyncs == 0:
+        raise AssertionError("crash window closed without any resync")
+    if hrw_bytes >= twins_bytes:
+        raise AssertionError(
+            f"per-shard resync saved nothing: hrw={hrw_bytes} >= "
+            f"twins={twins_bytes} resp bytes")
+    saved = 1.0 - hrw_bytes / twins_bytes
+    return ("chaos/placement_resync", 0.0, f"saved={saved:.1%}",
+            {"twins_resp_bytes": twins_bytes, "hrw_resp_bytes": hrw_bytes,
+             "twins_resyncs": twins_resyncs, "hrw_resyncs": hrw_resyncs,
+             "resp_bytes_saved_frac": saved})
+
+
+# ---------------------------------------------------- dormant identity
+def _dormant_identity_row(quick: bool):
+    n = 2000 if quick else 6000
+    keys, vals, rng = _datasets(n, seed=11)
+    plain = StoreSpec(kind="outback-dir", load_factor=0.85, rng_seed=2)
+    armed = StoreSpec(kind="outback-dir", load_factor=0.85, rng_seed=2,
+                      placement="hrw", placement_k=1,
+                      faults=FaultSchedule(lease_term_ops=0))
+    a = cluster_of(plain, keys, vals, n_cns=2)
+    b = cluster_of(armed, keys, vals, n_cns=2)
+    rounds = 1500 if quick else 4000
+    wk = rng.choice(keys, size=rounds).astype(np.uint64)
+    wv = rng.integers(1, 2 ** 50, size=rounds, dtype=np.uint64)
+    for i in range(0, rounds, 16):
+        cn = (i // 16) % 2
+        for cl in (a, b):
+            cl.cns[cn].update_batch(wk[i:i + 16], wv[i:i + 16])
+            cl.cns[1 - cn].get_batch(wk[i:i + 16])
+    for cl in (a, b):
+        for c in cl.cns:
+            c.flush()
+    ma, mb = a.meter_totals().snapshot(), b.meter_totals().snapshot()
+    if ma != mb:
+        diff = {k: (ma[k], mb[k]) for k in ma if ma[k] != mb[k]}
+        raise AssertionError(f"armed-plane cluster meters drifted: {diff}")
+    for i in range(2):
+        if a.transports[i].trace != b.transports[i].trace:
+            raise AssertionError(f"armed-plane CN {i} trace drifted")
+    if state_signature(a.mn_state()) != state_signature(b.mn_state()):
+        raise AssertionError("armed-plane MN state drifted")
+    return ("chaos/dormant_identity", 0.0, "identical",
+            {"ops": ma["ops"], "round_trips": ma["round_trips"]})

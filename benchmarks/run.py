@@ -81,6 +81,12 @@ SUITES = (
                 "reconfiguration dip, zero lost acked writes through a "
                 "leave, dormant single-CN byte-identity",
      lambda a, n: _mod("cluster_bench").cluster_suite(a.quick)),
+    ("chaos", "partition-tolerant plane: full-cut partition with fenced "
+              "lease arbitration and post-heal convergence, seeded chaos "
+              "runs (zero lost/split-brain acked writes, linearizable "
+              "reads, availability floor), bit-identical determinism, "
+              "per-shard HRW resync savings, dormant-plane identity",
+     lambda a, n: _mod("chaos_bench").chaos_suite(a.quick)),
     ("kernel_paged", "",
      lambda a, n: _mod("kernel_bench").paged_attention_traffic()),
     ("kernel_lookup", "",

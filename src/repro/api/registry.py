@@ -38,14 +38,14 @@ import numpy as np
 
 from repro.api import adapters
 from repro.api.pipeline import BatchPolicy
-from repro.api.replication import ReplicaSetAdapter
+from repro.api.replication import ReplicaPlacement, ReplicaSetAdapter
 from repro.api.stack import CNStack, TransportBinding
 from repro.core.baselines import ClusterKVS, DummyKVS, MicaKVS, RaceKVS
 from repro.core.cn_cache import CNKeyCache
 from repro.core.outback import OutbackShard
 from repro.core.sharded_kvs import build_sharded
 from repro.core.store import OutbackStore
-from repro.net.faults import FaultPlane, FaultSchedule
+from repro.net.faults import CN_TARGET_KINDS, FaultPlane, FaultSchedule
 from repro.obs import TelemetryConfig, TelemetryHub
 
 
@@ -78,6 +78,14 @@ class StoreSpec:
     # no-fault meter totals stay byte-identical
     replicas: int = 1
     faults: FaultSchedule | None = None
+    # replica placement policy: "twins" mirrors the whole MN image onto
+    # every replica (the PR 6 behaviour, and the default); "hrw" places
+    # each directory shard on ``placement_k`` of the ``replicas`` MNs by
+    # seeded rendezvous hashing (outback-dir only), so an MN crash
+    # degrades only the shards placed there and resync ships only their
+    # MN halves
+    placement: str = "twins"
+    placement_k: int = 1
     # telemetry plane (repro.obs): a TelemetryConfig (or its JSON dict)
     # makes open_store assemble an instrumented stack with a TelemetryHub;
     # None (the default) keeps the plane dormant — contractually
@@ -116,6 +124,8 @@ class StoreSpec:
                 "replicas": self.replicas,
                 "faults": (None if self.faults is None
                            else self.faults.to_json_dict()),
+                "placement": self.placement,
+                "placement_k": self.placement_k,
                 "telemetry": (None if self.telemetry is None
                               else self.telemetry.to_json_dict())}
 
@@ -180,13 +190,29 @@ class StoreSpec:
             except ValueError as e:
                 raise SpecError(str(e)) from e
             for ev in self.faults.events:
-                # cn_crash targets a compute node, not an MN replica; the
-                # CN count is a cluster-level property the StoreSpec
-                # doesn't know, so repro.cluster validates it instead.
-                if ev.kind != "cn_crash" and ev.mn >= self.replicas:
+                # CN-targeting kinds name a compute node, not an MN
+                # replica; the CN count is a deployment-level property
+                # the StoreSpec doesn't know, so repro.cluster (or
+                # open_store, for its single CN) validates it instead.
+                if ev.kind not in ("cn_crash", "cn_delay", "cn_drop") \
+                        and ev.mn >= self.replicas:
                     raise SpecError(
-                        f"fault event targets MN {ev.mn} but the spec "
-                        f"deploys {self.replicas} replica(s)")
+                        f"{ev.kind} fault event targets MN {ev.mn} but "
+                        f"the spec deploys {self.replicas} replica(s)")
+        if self.placement not in ("twins", "hrw"):
+            raise SpecError(f"placement must be 'twins' or 'hrw', "
+                            f"got {self.placement!r}")
+        if not isinstance(self.placement_k, int) or self.placement_k < 1:
+            raise SpecError(f"placement_k must be an int >= 1, "
+                            f"got {self.placement_k!r}")
+        if self.placement == "hrw":
+            if self.kind != "outback-dir":
+                raise SpecError("placement='hrw' is a per-directory-shard "
+                                "policy; it needs kind='outback-dir'")
+            if self.placement_k > self.replicas:
+                raise SpecError(
+                    f"placement_k={self.placement_k} exceeds the "
+                    f"{self.replicas} deployed replica(s)")
         if self.telemetry is not None:
             if not isinstance(self.telemetry, TelemetryConfig):
                 raise SpecError(f"telemetry must be a TelemetryConfig (or "
@@ -270,6 +296,13 @@ def open_store(spec: StoreSpec, keys, values, *, transport=None):
     and each shard's meter.  The hub is a pure observer: meters, traces,
     and final store state stay byte-identical to a telemetry-off build.
     """
+    if spec.faults is not None:
+        for ev in spec.faults.events:
+            if ev.kind in CN_TARGET_KINDS and ev.cn >= 1:
+                raise SpecError(
+                    f"{ev.kind} fault event targets CN {ev.cn} but "
+                    f"open_store deploys a single CN (CN 0); use "
+                    f"repro.cluster for multi-CN deployments")
     adapter, retry = build_adapter(spec, keys, values, transport=transport)
     hub = None
     if spec.telemetry is not None:
@@ -308,7 +341,16 @@ def build_adapter(spec: StoreSpec, keys, values, *, transport=None):
                              for _ in range(spec.replicas - 1)]
         plane = FaultPlane(spec.faults if spec.faults is not None
                            else FaultSchedule(lease_term_ops=0))
-        adapter = ReplicaSetAdapter(group, spec, plane, transport=transport)
+        placement = None
+        if spec.placement == "hrw" and spec.replicas > 1:
+            # one replica makes placement the identity map; skip it so
+            # the serve path (and its metering) stays the plain one —
+            # the dormant-plane guard depends on this
+            placement = ReplicaPlacement(len(adapter.engine.tables),
+                                         spec.replicas, spec.placement_k,
+                                         seed=spec.rng_seed)
+        adapter = ReplicaSetAdapter(group, spec, plane, transport=transport,
+                                    placement=placement)
         retry = plane
     return adapter, retry
 

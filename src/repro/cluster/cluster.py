@@ -53,7 +53,7 @@ import numpy as np
 from repro.api.pipeline import PipelineLayer
 from repro.api.protocol import OpResult
 from repro.api.registry import SpecError, StoreSpec, build_adapter
-from repro.api.replication import UNAVAILABLE
+from repro.api.replication import ReplicaSetAdapter, UNAVAILABLE
 from repro.api.stack import CNCacheLayer, MeterLayer, RetryLayer, StoreLayer
 from repro.cluster.coherence import ShardEpochs
 from repro.cluster.membership import MembershipSchedule
@@ -62,6 +62,7 @@ from repro.core.cn_cache import CNKeyCache
 from repro.core.hashing import hash64_32
 from repro.core.meter import CommMeter, MSG_BYTES
 from repro.core.store import _DIR_SEED
+from repro.net.faults import CN_TARGET_KINDS
 from repro.net.transport import Transport
 
 # CN->CN forward RPC shape: one padded request/response pair per batched
@@ -193,8 +194,8 @@ class ClusterSpec:
                 raise SpecError(str(e)) from e
         if self.store.faults is not None:
             for ev in self.store.faults.events:
-                if ev.kind == "cn_crash" and ev.cn >= self.n_cns:
-                    raise SpecError(f"cn_crash targets CN {ev.cn} but the "
+                if ev.kind in CN_TARGET_KINDS and ev.cn >= self.n_cns:
+                    raise SpecError(f"{ev.kind} targets CN {ev.cn} but the "
                                     f"cluster deploys {self.n_cns} CN(s)")
 
     # ------------------------------------------------------------- JSON
@@ -229,6 +230,8 @@ class HandoffEvent:
 
     at_op: int
     reason: str        # "join" | "leave" | "cn_crash" | "cn_restart"
+    #                  # | "partition" (fully-cut CN arbitrated away)
+    #                  # | "heal" (fenced CN re-synced its view)
     cn: int            # the node that joined/left/crashed/restarted
     moved: tuple       # ((shard, old_owner, new_owner), ...)
     bytes_moved: int   # summed CN-half bytes bulk-read by destinations
@@ -251,6 +254,11 @@ class ClusterStats:
     shards_moved: int = 0
     handoff_bytes: int = 0
     epoch_invalidations: int = 0  # cache entries dropped by epoch checks
+    # partition / fencing plane (all stay 0 without partition windows)
+    partition_arbitrations: int = 0  # fully-cut CNs whose leases moved
+    fenced_write_lanes: int = 0  # stale-epoch write lanes rejected at MN
+    fenced_rpcs: int = 0         # fence-rejected RPCs (1 per fenced call)
+    view_syncs: int = 0          # stale ownership views refreshed post-heal
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -380,6 +388,34 @@ class CNRouter(StoreLayer):
         else:
             cl.stats.forwarded_read_lanes += n_fwd
 
+    # --------------------------------------------------------- fencing
+    def _stale_lanes(self, view: tuple, shards: np.ndarray) -> int:
+        """Write lanes whose shard's live fencing token moved past the
+        token in this CN's frozen snapshot (``view``)."""
+        fence = view[1]
+        live_fence = self.cluster.ownership.fence
+        n_stale = 0
+        for s in np.unique(shards):
+            s = int(s)
+            if s >= len(fence) or fence[s] != live_fence[s]:
+                n_stale += int((shards == s).sum())
+        return n_stale
+
+    def _fence_reject(self, n_stale: int) -> None:
+        """The MN boundary compared this CN's lease epoch against the
+        shard's fencing token and refused the write: one small RPC pair
+        crossed the wire, nothing was applied, nothing is acked."""
+        cl = self.cluster
+        self.ledger.add(1, rts=1, req=MSG_BYTES, resp=MSG_BYTES)
+        self.ledger.fenced_writes += n_stale
+        cl.stats.fenced_write_lanes += n_stale
+        cl.stats.fenced_rpcs += 1
+        cl.transports[self.cn].mark_fault("fenced", cn=self.cn)
+        hub = cl.hubs[self.cn]
+        if hub is not None:
+            hub.count("cluster.fenced_writes", n_stale)
+            hub.count("faults", kind="fenced")
+
     def _dispatch(self, op: str, keys, values, xp, resolve_makeup,
                   scalar: bool) -> OpResult:
         inner = self.inner
@@ -406,8 +442,27 @@ class CNRouter(StoreLayer):
         keys = np.asarray(keys, dtype=np.uint64)
         shards = cl.shards_of(keys)
         write = op != "get"
+        view = cl.stale_views.get(self.cn)
+        if write and view is not None and cl.cn_reachable(self.cn):
+            # the link healed but this CN still routes from its frozen
+            # snapshot: the first write touching a re-arbitrated shard
+            # is fenced at the MN boundary, which forces the view sync;
+            # the call then re-routes on the authoritative table below
+            n_stale = self._stale_lanes(view, shards)
+            if n_stale:
+                self._fence_reject(n_stale)
+                cl.heal_view(self.cn)
+                view = None
         if cl.n_live > 1:
-            self._charge_forwards(cl.ownership.owners_for(shards), write)
+            owners = cl.ownership.owners_for(shards)
+            if view is not None:
+                # a partitioned/stale CN routes from its snapshot
+                vo = np.asarray(view[0], dtype=np.int64)
+                in_view = shards < len(vo)
+                owners = np.where(in_view,
+                                  vo[np.minimum(shards, len(vo) - 1)],
+                                  owners)
+            self._charge_forwards(owners, write)
         cl.switch.current = self.cn
         if cl.n_mns <= 1:
             res = self._dispatch(op, keys, values, xp, resolve_makeup,
@@ -523,6 +578,10 @@ class Cluster:
         self.switch = SwitchingTransport(self.transports, hub_sinks)
         self.shared, self.retry_plane = build_adapter(
             sspec, keys, values, transport=self.switch)
+        if isinstance(self.shared, ReplicaSetAdapter):
+            # CN-scoped fault windows (partition / cn_delay / cn_drop)
+            # need to know which CN is calling the shared adapter
+            self.shared.cn_source = lambda: self.switch.current
 
         # ledgers first: CNRouter construction reads them
         self.ledgers = []
@@ -541,6 +600,16 @@ class Cluster:
             events.extend(MembershipSchedule.from_faults(sspec.faults).events)
         self._events = sorted(events, key=lambda ev: (ev.at_op, ev.cn))
         self._next_ev = 0
+        # partition arbitration: fully-cut CNs lose their shard leases to
+        # the survivors (fence bump); they keep routing from a frozen
+        # ownership snapshot until their first post-heal write is fenced
+        self._partition_evs = tuple(sorted(
+            (ev for ev in (sspec.faults.events if sspec.faults is not None
+                           else ()) if ev.kind == "partition"),
+            key=lambda ev: (ev.at_op, ev.cn, ev.mn)))
+        self._next_part = 0
+        self.stale_views: dict[int, tuple] = {}  # cn -> ownership.snapshot()
+        self._mn_pool_width = max(1, sspec.replicas)
         initial = sched.initial if sched.initial is not None else range(n)
         self.live: set[int] = set(int(c) for c in initial)
         self.crashed: dict[int, int] = {}  # cn -> clock of its restart
@@ -631,6 +700,13 @@ class Cluster:
         membership events (called by every CN's gate, pre-serve)."""
         self.clock += int(n)
         self._process_events()
+        if self.retry_plane is not None and self.hubs[cn] is not None:
+            # per-kind fault counters: each window counted once, on the
+            # targeted CN's hub when the kind is CN-scoped
+            for ev in self.retry_plane.new_window_events():
+                tgt = (ev.cn if ev.kind in CN_TARGET_KINDS
+                       and 0 <= ev.cn < len(self.hubs) else cn)
+                self.hubs[tgt].count("faults", kind=ev.kind)
 
     def _process_events(self) -> None:
         # crash windows that just closed: the node restarts and rejoins
@@ -644,6 +720,11 @@ class Cluster:
             ev = self._events[self._next_ev]
             self._next_ev += 1
             self._apply_event(ev)
+        while (self._next_part < len(self._partition_evs)
+               and self._partition_evs[self._next_part].at_op <= self.clock):
+            ev = self._partition_evs[self._next_part]
+            self._next_part += 1
+            self._on_partition(ev)
 
     def _apply_event(self, ev) -> None:
         if ev.kind == "join":
@@ -665,8 +746,57 @@ class Cluster:
                                               down_s=ev.down_s)
             self._reconfigure("cn_crash", ev.cn)
 
+    # ----------------------------------------------- partition fencing
+    def _cut_links(self, cn: int, at: int) -> set:
+        """MN replica indices whose link to ``cn`` is cut at op ``at``
+        (computed from the schedule — host plane, no wire)."""
+        cut: set[int] = set()
+        for ev in self._partition_evs:
+            if ev.cn == cn and ev.open_at(at):
+                if ev.mn == -1:
+                    cut.update(range(self._mn_pool_width))
+                else:
+                    cut.add(ev.mn)
+        return cut
+
+    def _on_partition(self, ev) -> None:
+        """A partition window just opened.  If it leaves ``ev.cn`` with
+        no route to *any* MN replica, the survivors arbitrate its shard
+        leases away (rendezvous rebalance + fence bump) and the cut CN
+        keeps routing from a frozen snapshot of the ownership table —
+        the split-brain setup the fencing tokens exist to defuse."""
+        if len(self._cut_links(ev.cn, ev.at_op)) < self._mn_pool_width:
+            return  # partial cut: per-link backoff only, no arbitration
+        if (ev.cn not in self.live or self.n_live <= 1
+                or ev.cn in self.stale_views):
+            return
+        self.stale_views[ev.cn] = self.ownership.snapshot()
+        self._reconfigure("partition", ev.cn,
+                          live_set=self.live - {ev.cn})
+        self.stats.partition_arbitrations += 1
+
+    def cn_reachable(self, cn: int) -> bool:
+        """True when CN ``cn`` has a live link to at least one MN
+        replica (on the fault plane's clock, which runs with the engine
+        calls — so reachability flips exactly when the wire does)."""
+        if self.retry_plane is None:
+            return True
+        return not self.retry_plane.fully_partitioned(cn,
+                                                      self._mn_pool_width)
+
+    def heal_view(self, cn: int) -> None:
+        """CN ``cn`` just had a write fenced: it refetches the ownership
+        table (one small one-sided READ), drops its stale snapshot, and
+        rejoins the ownership map — shards whose rendezvous winner it is
+        come back with another fence bump, handoff-metered as usual."""
+        self.ledgers[cn].add(1, rts=1, req=16, resp=MSG_BYTES,
+                             one_sided=True)
+        self.stats.view_syncs += 1
+        del self.stale_views[cn]
+        self._reconfigure("heal", cn)
+
     # ---------------------------------------------------------- handoff
-    def _reconfigure(self, reason: str, cn: int) -> None:
+    def _reconfigure(self, reason: str, cn: int, live_set=None) -> None:
         """DINOMO-style ownership handoff after a membership change.
 
         Rebalances the table over the new live set; each destination CN
@@ -674,12 +804,21 @@ class Cluster:
         one-sided §4.4-shaped fetch: poll + bulk READ + FAA) and waits
         out the previous owner's lease before serving — the same drain
         ``ReplicaSetAdapter.failover`` charges.  Cost is O(shards
-        moved); the key count never appears.
+        moved); the key count never appears.  ``live_set`` overrides the
+        target membership (partition arbitration hands a fully-cut CN's
+        shards to ``live - {cn}`` while the CN itself stays notionally
+        live so its post-heal calls reach the fencing check).
         """
-        if not self.live:
+        live = set(self.live if live_set is None else live_set)
+        # CNs still fully cut keep their arbitrated-away state: don't
+        # hand shards back to a node that cannot reach any replica
+        still_cut = {c for c in self.stale_views if not self.cn_reachable(c)}
+        if live - still_cut:
+            live -= still_cut
+        if not live:
             self.handoffs.append(HandoffEvent(self.clock, reason, cn, (), 0))
             return
-        moved = self.ownership.rebalance(self.live)
+        moved = self.ownership.rebalance(live)
         by_dst: dict[int, list] = {}
         for s, _old, new in moved:
             by_dst.setdefault(new, []).append(s)

@@ -32,6 +32,13 @@ class OwnershipTable:
     inherits the parent's owner, keeping the move local); membership
     changes rebalance it (:meth:`rebalance` — returns exactly the moved
     shards so the caller can meter the handoff).
+
+    ``fence[s]`` is the shard's **fencing token** (DINOMO / PAPERS.md):
+    a monotone epoch bumped every time the shard's owner changes.  A CN
+    routing from a stale snapshot of this table presents stale tokens;
+    the write path compares them against the live tokens before touching
+    MN state and rejects mismatches (``fenced_writes``), so a partition
+    survivor and a healed stale owner can never both mutate a shard.
     """
 
     def __init__(self, n_shards: int, live, seed: int = 0) -> None:
@@ -40,6 +47,7 @@ class OwnershipTable:
         if not self.live:
             raise ValueError("ownership needs at least one live CN")
         self.owners = [self._hrw(s, self.live) for s in range(n_shards)]
+        self.fence = [0] * n_shards
 
     def _hrw(self, shard: int, live: tuple) -> int:
         """Rendezvous winner: the live CN with the highest seeded weight."""
@@ -63,8 +71,10 @@ class OwnershipTable:
     def extend_for_split(self, parent: int) -> None:
         """A §4.4 split appended a successor table: it inherits the
         parent's owner (the split rebuilt both halves at that CN, so no
-        cross-CN bytes move)."""
+        cross-CN bytes move) and the parent's fencing token (a snapshot
+        current on the parent is current on the child)."""
         self.owners.append(self.owners[parent])
+        self.fence.append(self.fence[parent])
 
     def rebalance(self, new_live) -> list:
         """Recompute every owner over ``new_live``; returns the moves.
@@ -82,8 +92,14 @@ class OwnershipTable:
             if new != old:
                 moved.append((s, old, new))
                 self.owners[s] = new
+                self.fence[s] += 1   # new owner => stale snapshots fence
         self.live = new_live
         return moved
+
+    def snapshot(self) -> tuple:
+        """Freeze (owners, fence) — what a partitioned CN keeps routing
+        from until its first post-heal write is fenced and re-synced."""
+        return (list(self.owners), list(self.fence))
 
 
 __all__ = ["OwnershipTable"]

@@ -56,6 +56,9 @@ class CommMeter:
     lease_renewals: int = 0  # MN lease grants/renewals (1 small RT each)
     resyncs: int = 0         # full MN-state re-installs after a restart
     fault_wait_us: int = 0   # CN stall from timeouts/backoff/lease drains
+    fenced_writes: int = 0   # write lanes rejected at the MN boundary
+    #                          because the issuing CN held a stale-epoch
+    #                          lease (post-partition fencing; never acked)
     # Optional event sinks — an explicit per-instance field, NOT a counter:
     # every object here receives each ``add`` call (``on_meter_add``), in
     # attachment order.  A ``repro.net.Transport`` plugged in turns the

@@ -31,6 +31,7 @@ plus ``FaultMark`` windows).  Fault schedules ride inside
 same crash timeline.
 """
 
+from repro.net.chaos import ChaosReport, generate_chaos, run_chaos
 from repro.net.faults import FaultEvent, FaultPlane, FaultSchedule
 from repro.net.replay import SimResult, simulate, simulate_cluster
 from repro.net.service import CX3, CX6, ServiceModel
@@ -38,7 +39,8 @@ from repro.net.sim import Server, Simulator
 from repro.net.transport import (DoorbellMark, FaultMark, OpEvent,
                                  ResizeMark, Segment, Transport)
 
-__all__ = ["CX3", "CX6", "DoorbellMark", "FaultEvent", "FaultMark",
-           "FaultPlane", "FaultSchedule", "OpEvent", "ResizeMark", "Segment",
-           "Server", "ServiceModel", "SimResult", "Simulator", "Transport",
+__all__ = ["CX3", "CX6", "ChaosReport", "DoorbellMark", "FaultEvent",
+           "FaultMark", "FaultPlane", "FaultSchedule", "OpEvent",
+           "ResizeMark", "Segment", "Server", "ServiceModel", "SimResult",
+           "Simulator", "Transport", "generate_chaos", "run_chaos",
            "simulate", "simulate_cluster"]

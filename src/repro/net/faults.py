@@ -31,7 +31,14 @@ from __future__ import annotations
 import dataclasses
 import json
 
-_FAULT_KINDS = ("mn_crash", "delay", "drop", "nic_saturation", "cn_crash")
+_FAULT_KINDS = ("mn_crash", "delay", "drop", "nic_saturation", "cn_crash",
+                "partition", "cn_delay", "cn_drop")
+# Kinds whose target is an MN replica index (validated against the
+# deployed replica count) vs a CN index (validated against the deployed
+# CN count by the cluster plane / ``open_store``).  ``partition`` names a
+# CN<->MN *link pair* and appears in both sets.
+MN_TARGET_KINDS = frozenset(("mn_crash", "nic_saturation", "partition"))
+CN_TARGET_KINDS = frozenset(("cn_crash", "partition", "cn_delay", "cn_drop"))
 _MASK = (1 << 64) - 1
 
 
@@ -81,6 +88,18 @@ class FaultEvent:
       plane (``repro.cluster``) answers its calls ``"unavailable"``
       locally and hands its shards to the survivors (ownership
       failover); the mark is recorded for sim-plane reporting only.
+    * ``"partition"`` — the network link between compute node ``cn`` and
+      MN replica ``mn`` is cut for the window (``mn=-1`` cuts every link
+      from that CN).  Both endpoints stay alive: the CN's calls that
+      need the cut replica answer ``"backoff"``, and when the CN is
+      fully cut the cluster plane re-arbitrates its shard leases onto
+      the survivors with a fencing-token bump (DINOMO-style — the stale
+      owner's post-heal writes are *fenced*, never applied).  The replay
+      stalls recorded segments per link for ``down_s``.
+    * ``"cn_delay"`` — like ``"delay"`` but only calls issued *by*
+      compute node ``cn`` stall ``extra_us`` before posting.
+    * ``"cn_drop"`` — like ``"drop"`` but only calls issued by compute
+      node ``cn`` are drop candidates (seeded draw on ``drop_rate``).
     """
 
     kind: str
@@ -101,23 +120,42 @@ class FaultEvent:
         if self.at_op < 0 or self.duration_ops <= 0:
             raise ValueError("fault window needs at_op >= 0 and "
                              "duration_ops >= 1")
-        if self.mn < 0:
-            raise ValueError("mn replica index must be >= 0")
-        if self.mn > 0 and self.kind == "cn_crash":
-            raise ValueError("cn_crash targets a CN (use the 'cn' field); "
-                             "leave 'mn' at 0")
+        if self.mn < 0 and not (self.kind == "partition" and self.mn == -1):
+            raise ValueError("mn replica index must be >= 0 "
+                             "(partition allows mn=-1: cut every link)")
+        if self.mn > 0 and self.kind in ("cn_crash", "cn_delay", "cn_drop"):
+            raise ValueError(f"{self.kind} targets a CN (use the 'cn' "
+                             f"field); leave 'mn' at 0")
         if self.cn < 0:
             raise ValueError("cn compute-node index must be >= 0")
-        if self.kind in ("mn_crash", "cn_crash") and self.down_s <= 0:
+        if self.kind in ("mn_crash", "cn_crash", "partition") \
+                and self.down_s <= 0:
             raise ValueError(f"{self.kind} needs down_s > 0 "
                              f"(sim-plane outage)")
         if self.kind == "nic_saturation" and (self.factor <= 1.0
                                               or self.down_s <= 0):
             raise ValueError("nic_saturation needs factor > 1 and down_s > 0")
-        if self.kind == "delay" and self.extra_us <= 0:
-            raise ValueError("delay needs extra_us > 0")
-        if self.kind == "drop" and not (0.0 < self.drop_rate <= 1.0):
-            raise ValueError("drop needs 0 < drop_rate <= 1")
+        if self.kind in ("delay", "cn_delay") and self.extra_us <= 0:
+            raise ValueError(f"{self.kind} needs extra_us > 0")
+        if self.kind in ("drop", "cn_drop") \
+                and not (0.0 < self.drop_rate <= 1.0):
+            raise ValueError(f"{self.kind} needs 0 < drop_rate <= 1")
+
+    def target(self) -> tuple:
+        """The (kind-scoped) entity this window acts on — the overlap
+        unit for :meth:`FaultSchedule.validate`.
+
+        ``partition`` windows target a CN<->MN link pair; MN kinds target
+        a replica; CN kinds target a compute node; global ``delay`` /
+        ``drop`` windows target the whole deployment.
+        """
+        if self.kind == "partition":
+            return ("link", self.cn, self.mn)
+        if self.kind in ("cn_crash", "cn_delay", "cn_drop"):
+            return ("cn", self.cn)
+        if self.kind in ("mn_crash", "nic_saturation"):
+            return ("mn", self.mn)
+        return ("all",)
 
     def open_at(self, clock: int) -> bool:
         return self.at_op <= clock < self.at_op + self.duration_ops
@@ -179,6 +217,38 @@ class FaultSchedule:
             if not isinstance(ev, FaultEvent):
                 raise ValueError(f"events must be FaultEvent, got {type(ev)}")
             ev.validate()
+        # Reject overlapping windows of the same kind on the same target:
+        # the oracles would double-apply them (summed delays, doubled
+        # drop draws) or shadow one another (crash windows), which is
+        # never what a schedule author meant.  A ``partition`` with
+        # ``mn=-1`` covers every link from its CN, so it conflicts with
+        # any same-CN partition window.
+        by_bucket: dict = {}
+        for ev in self.events:
+            by_bucket.setdefault((ev.kind,) + ev.target(), []).append(ev)
+            if ev.kind == "partition":
+                by_bucket.setdefault(("partition*", ev.cn), []).append(ev)
+        def _reject(a, b):
+            raise ValueError(
+                f"overlapping {a.kind!r} windows on target {a.target()}"
+                f" / {b.target()}: [{a.at_op}, {a.at_op + a.duration_ops})"
+                f" and [{b.at_op}, {b.at_op + b.duration_ops})")
+
+        for key, evs in by_bucket.items():
+            if key[0] == "partition*":
+                # Only the wildcard-vs-specific case; same-link (and
+                # wildcard-wildcard) pairs are caught by their exact
+                # bucket above.
+                for a in (e for e in evs if e.mn == -1):
+                    for b in (e for e in evs if e.mn != -1):
+                        if a.at_op < b.at_op + b.duration_ops \
+                                and b.at_op < a.at_op + a.duration_ops:
+                            _reject(a, b)
+                continue
+            evs = sorted(evs, key=lambda e: (e.at_op, e.duration_ops))
+            for a, b in zip(evs, evs[1:]):
+                if b.at_op < a.at_op + a.duration_ops:
+                    _reject(a, b)
         if self.timeout_us < 0 or self.backoff_base_us < 0 \
                 or self.backoff_cap_us < self.backoff_base_us:
             raise ValueError("need timeout_us >= 0 and "
@@ -259,6 +329,7 @@ class FaultPlane:
         self.clock = 0
         self._draws = 0
         self._announced: set = set()   # event ids already FaultMark'ed
+        self._counted: set = set()     # event ids already telemetry-counted
         self._lease_at: dict[int, int] = {}  # replica -> clock of last grant
 
     # ------------------------------------------------------------ clock
@@ -282,19 +353,38 @@ class FaultPlane:
         return any(ev.kind == "cn_crash" and ev.cn == cn
                    and ev.open_at(self.clock) for ev in self.schedule.events)
 
-    def delay_us(self) -> float:
-        """Summed CN-side stall of every open ``delay`` window."""
-        return sum(ev.extra_us for ev in self.schedule.events
-                   if ev.kind == "delay" and ev.open_at(self.clock))
+    def partition_open(self, cn: int, mn: int) -> bool:
+        """Is the ``cn`` <-> replica ``mn`` link inside a ``partition``
+        window right now?  (``mn=-1`` windows cut every link from cn.)"""
+        return any(ev.kind == "partition" and ev.cn == cn
+                   and ev.mn in (-1, mn) and ev.open_at(self.clock)
+                   for ev in self.schedule.events)
 
-    def drop_now(self) -> bool:
+    def fully_partitioned(self, cn: int, n_mns: int) -> bool:
+        """Can compute node ``cn`` reach *no* MN replica right now?"""
+        return n_mns > 0 and all(self.partition_open(cn, r)
+                                 for r in range(n_mns))
+
+    def delay_us(self, cn: int = 0) -> float:
+        """Summed CN-side stall of every open ``delay`` window, plus
+        every open ``cn_delay`` window targeting calling node ``cn``."""
+        return sum(ev.extra_us for ev in self.schedule.events
+                   if ((ev.kind == "delay"
+                        or (ev.kind == "cn_delay" and ev.cn == cn))
+                       and ev.open_at(self.clock)))
+
+    def drop_now(self, cn: int = 0) -> bool:
         """Seeded draw: is this call lost before MN application?
 
-        The draw counter advances only inside an open drop window, so a
-        no-drop workload consumes no draws and stays byte-identical.
+        ``drop`` windows apply to every caller; ``cn_drop`` windows only
+        to calls issued by node ``cn``.  The draw counter advances only
+        inside an open drop window, so a no-drop workload consumes no
+        draws and stays byte-identical.
         """
         for ev in self.schedule.events:
-            if ev.kind == "drop" and ev.open_at(self.clock):
+            if (ev.kind == "drop"
+                    or (ev.kind == "cn_drop" and ev.cn == cn)) \
+                    and ev.open_at(self.clock):
                 self._draws += 1
                 if _unit(self.schedule.seed, self.clock,
                          self._draws) < ev.drop_rate:
@@ -303,12 +393,27 @@ class FaultPlane:
 
     def new_marks(self):
         """Events whose window just opened and that the sim plane must
-        see (crash + NIC windows); each is yielded exactly once."""
+        see (crash + NIC + partition windows); each is yielded exactly
+        once."""
         out = []
         for i, ev in enumerate(self.schedule.events):
-            if ev.kind in ("mn_crash", "nic_saturation") \
+            if ev.kind in ("mn_crash", "nic_saturation", "partition") \
                     and i not in self._announced and ev.open_at(self.clock):
                 self._announced.add(i)
+                out.append(ev)
+        return out
+
+    def new_window_events(self):
+        """*Every* event whose window just opened, yielded exactly once —
+        the telemetry plane counts these as ``faults{kind=...}``.
+
+        Separate announce set from :meth:`new_marks` so trace marks and
+        telemetry counters can be consumed by different layers.
+        """
+        out = []
+        for i, ev in enumerate(self.schedule.events):
+            if i not in self._counted and ev.open_at(self.clock):
+                self._counted.add(i)
                 out.append(ev)
         return out
 
@@ -347,4 +452,5 @@ class FaultPlane:
         self._lease_at.pop(mn, None)
 
 
-__all__ = ["FaultEvent", "FaultPlane", "FaultSchedule"]
+__all__ = ["CN_TARGET_KINDS", "FaultEvent", "FaultPlane", "FaultSchedule",
+           "MN_TARGET_KINDS"]

@@ -27,10 +27,15 @@ every segment by its recorded ``Segment.mn``.  A
 for ``down_s`` (queued work survives and drains at restart) or stretches
 its NIC service by ``factor`` (saturation window); ``Segment.wait_s``
 stalls that op's posting — the CN-side cost of timeouts, jittered
-backoff, and lease drains decided on the host plane.  All fault windows
-are reported in :attr:`SimResult.fault_windows` and
-:meth:`SimResult.availability` turns the completion timeline into the
-bench suite's availability curve.
+backoff, and lease drains decided on the host plane.  A
+``FaultMark(kind="partition")`` cuts a CN<->replica *link* (``mn=-1``:
+every link from that CN): segments posted over a cut link hold at the CN
+until the link heals, per link — not per MN, so unpartitioned CNs keep
+full service from the same replica.  ``kind="fenced"`` marks are
+instants (a rejected stale-lease write), reported as zero-length
+windows.  All fault windows are reported in
+:attr:`SimResult.fault_windows` and :meth:`SimResult.availability` turns
+the completion timeline into the bench suite's availability curve.
 """
 
 from __future__ import annotations
@@ -180,6 +185,7 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
     slow_open = {"n": 0}  # rebuild windows currently stealing CPU share
     crash_open = [0] * n_rep       # nested crash windows per replica
     sat_open: list[list[float]] = [[] for _ in range(n_rep)]
+    link_heal = [0.0] * n_rep      # sim time the link to replica r heals
     lat_us: list[float] = []
     done_t: list[float] = []
     windows: list[tuple[float, float]] = []
@@ -192,8 +198,18 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
             srv.log = server_spans
 
     def _open_fault_window(mark: FaultMark) -> None:
-        r = mark.mn % n_rep
         t0 = sim.now
+        if mark.kind == "fenced":  # an instant, not a window
+            fwindows.append((t0, t0, "fenced", max(mark.cn, 0)))
+            return
+        if mark.kind == "partition":  # mn=-1 cuts every link
+            rs = range(n_rep) if mark.mn < 0 else [mark.mn % n_rep]
+            for r in rs:
+                link_heal[r] = max(link_heal[r], t0 + mark.down_s)
+            fwindows.append((t0, t0 + mark.down_s, "partition",
+                             max(mark.cn, 0)))
+            return
+        r = mark.mn % n_rep
         fwindows.append((t0, t0 + mark.down_s, mark.kind, r))
         if mark.kind == "mn_crash":
             crash_open[r] += 1
@@ -315,8 +331,11 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
             def start_post():
                 self.post.request(service.cn_post_s, after_post)
 
-            if seg.wait_s > 0:  # host-plane stall (backoff/lease/delay)
-                sim.schedule(seg.wait_s, start_post)
+            # host-plane stall (backoff/lease/delay) plus any partition
+            # hold: a segment posted over a cut link waits for the heal
+            stall = seg.wait_s + max(0.0, link_heal[r] - sim.now)
+            if stall > 0:
+                sim.schedule(stall, start_post)
             else:
                 start_post()
 
@@ -361,6 +380,13 @@ def simulate_cluster(traces, *, clients_per_cn: int = 1,
       the marked CN (``replica`` = CN id) without pausing any server —
       the dead CN's stack already answers degraded on the host plane, and
       its shards failed over;
+    * ``FaultMark(kind="partition")`` cuts the link between the mark's
+      ``cn`` and replica ``mn`` (``mn=-1``: every link from that CN)
+      *globally*: whichever trace carries the mark, only segments posted
+      by the partitioned CN to cut replicas hold until the heal — other
+      CNs keep full service from the same replica (per-link semantics);
+      ``kind="fenced"`` marks record zero-length windows (a rejected
+      stale-lease write instant);
     * ``window="policy"`` honours each CN's own recorded DoorbellMark
       boundaries independently (per-CN pipeline flushes).
 
@@ -393,18 +419,30 @@ def simulate_cluster(traces, *, clients_per_cn: int = 1,
     slow_open = {"n": 0}
     crash_open = [0] * n_rep
     sat_open: list[list[float]] = [[] for _ in range(n_rep)]
+    link_heal: dict[tuple, float] = {}  # (cn, replica) -> link heal time
     lat_us: list[float] = []
     done_t: list[float] = []
     windows: list[tuple[float, float]] = []
     fwindows: list[tuple[float, float, str, int]] = []
 
-    def _open_fault_window(mark: FaultMark) -> None:
+    def _open_fault_window(mark: FaultMark, src_cn: int = 0) -> None:
+        t0 = sim.now
         if mark.kind == "cn_crash":
-            t0 = sim.now
             fwindows.append((t0, t0 + mark.down_s, "cn_crash", mark.mn))
             return  # host-plane failover; no sim-plane server to pause
+        if mark.kind == "fenced":
+            fwindows.append((t0, t0, "fenced",
+                             mark.cn if mark.cn >= 0 else src_cn))
+            return
+        if mark.kind == "partition":
+            cn = mark.cn if mark.cn >= 0 else src_cn
+            rs = range(n_rep) if mark.mn < 0 else [mark.mn % n_rep]
+            for r in rs:
+                link_heal[(cn, r)] = max(link_heal.get((cn, r), 0.0),
+                                         t0 + mark.down_s)
+            fwindows.append((t0, t0 + mark.down_s, "partition", cn))
+            return
         r = mark.mn % n_rep
-        t0 = sim.now
         fwindows.append((t0, t0 + mark.down_s, mark.kind, r))
         if mark.kind == "mn_crash":
             crash_open[r] += 1
@@ -431,11 +469,12 @@ def simulate_cluster(traces, *, clients_per_cn: int = 1,
     class _CNFeed:
         """One CN's trace cursor + policy-window state."""
 
-        __slots__ = ("items", "i", "cur_w")
+        __slots__ = ("items", "i", "cn", "cur_w")
 
-        def __init__(self, items) -> None:
+        def __init__(self, items, cn: int) -> None:
             self.items = items
             self.i = 0
+            self.cn = cn
             self.cur_w = {"w": 1 if policy_window else max(1, int(window)),
                           "left": 0}
 
@@ -448,7 +487,7 @@ def simulate_cluster(traces, *, clients_per_cn: int = 1,
                                         slow_open)
                     continue
                 if isinstance(it, FaultMark):
-                    _open_fault_window(it)
+                    _open_fault_window(it, self.cn)
                     continue
                 if isinstance(it, DoorbellMark):
                     if policy_window:
@@ -463,7 +502,7 @@ def simulate_cluster(traces, *, clients_per_cn: int = 1,
                 return it
             return None
 
-    feeds = [_CNFeed(items) for items in cn_traces]
+    feeds = [_CNFeed(items, c) for c, items in enumerate(cn_traces)]
 
     class Client:
         __slots__ = ("post", "inflight", "feed")
@@ -524,8 +563,14 @@ def simulate_cluster(traces, *, clients_per_cn: int = 1,
             def start_post():
                 self.post.request(service.cn_post_s, after_post)
 
-            if seg.wait_s > 0:
-                sim.schedule(seg.wait_s, start_post)
+            # partition hold: MN-bound segments over a cut link wait for
+            # the heal; CN->CN forwards ride a different fabric path
+            stall = seg.wait_s
+            if link_heal and seg.cn_dst < 0:
+                stall += max(0.0, link_heal.get(
+                    (self.feed.cn, seg.mn % n_rep), 0.0) - sim.now)
+            if stall > 0:
+                sim.schedule(stall, start_post)
             else:
                 start_post()
 

@@ -89,14 +89,18 @@ class FaultMark:
     """A host-plane fault window opened here (``repro.net.faults``).
 
     ``kind`` is ``"mn_crash"`` (pause replica ``mn``'s CPU+NIC servers
-    for ``down_s`` of sim time) or ``"nic_saturation"`` (stretch that
-    replica's NIC service by ``factor`` for ``down_s``).  Replays that
-    predate the failure plane simply skip these marks."""
+    for ``down_s`` of sim time), ``"nic_saturation"`` (stretch that
+    replica's NIC service by ``factor`` for ``down_s``),
+    ``"partition"`` (cut the ``cn`` <-> replica ``mn`` link for
+    ``down_s``; ``mn=-1`` cuts every link from ``cn``), or ``"fenced"``
+    (instant: a stale-lease write was rejected at the MN boundary).
+    Replays that predate the failure plane simply skip these marks."""
 
     kind: str
     mn: int = 0
     down_s: float = 0.0
     factor: float = 1.0
+    cn: int = -1   # CN endpoint for partition/fenced marks; -1 = n/a
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,14 +169,14 @@ class Transport:
         self._cont_used = False
 
     def mark_fault(self, kind: str, *, mn: int = 0, down_s: float = 0.0,
-                   factor: float = 1.0) -> None:
+                   factor: float = 1.0, cn: int = -1) -> None:
         """Drop a :class:`FaultMark` at the current trace position.
 
         Like :meth:`begin_doorbell` this does **not** move the
         attachment cursor: fault windows open *around* ops and must not
         break Makeup-Get continuation attachment."""
         self.trace.append(FaultMark(kind, mn=mn, down_s=down_s,
-                                    factor=factor))
+                                    factor=factor, cn=cn))
 
     def add_wait(self, seconds: float) -> None:
         """Accrue a CN-side stall charged to the next op recorded.

@@ -1,0 +1,423 @@
+"""Partition-tolerant cluster plane (ISSUE 9): network partitions, fenced
+lease arbitration, per-shard HRW replica placement, and the seeded chaos
+harness.
+
+The contract under test, in order of importance:
+
+* safety through a full cut — a fully-partitioned CN's shard leases are
+  arbitrated to the survivors with a fencing-token bump; its post-heal
+  stale-view write is rejected at the MN boundary (``fenced_writes``),
+  re-routed on the refreshed view, and the final state converges
+  bit-exactly to the host oracle on every CN;
+* validation — fault events targeting undeployed CNs/MNs and
+  overlapping same-kind/same-target windows are rejected at the
+  ``FaultSchedule`` / ``StoreSpec`` / ``open_store`` / ``ClusterSpec``
+  layers;
+* placement — seeded HRW replica placement is deterministic, an MN
+  crash resyncs only the shards placed on the crashed replica;
+* chaos — :func:`repro.net.chaos.run_chaos` passes every invariant on
+  three distinct seeds, and two runs of one seed are bit-identical in
+  meter totals, final MN state, and exported telemetry;
+* observability — per-kind ``faults{kind=...}`` counters reach the
+  hubs, partition/fenced windows land on the Perfetto fault track;
+* dormancy — the armed-but-empty plane (HRW + event-less schedule) is
+  byte-identical to the plain PR 8 cluster.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import SpecError, StoreSpec, open_store
+from repro.api.registry import build_adapter
+from repro.api.replication import ReplicaPlacement
+from repro.cluster import ClusterSpec, cluster_of
+from repro.net import FaultEvent, FaultSchedule, simulate, simulate_cluster
+from repro.net.chaos import generate_chaos, run_chaos, state_signature
+from repro.obs import chrome_trace, telemetry_rows
+from repro.obs.hub import TelemetryConfig
+
+_DEGRADED = ("backoff", "unavailable")
+
+
+def _data(n, seed=9):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(2 ** 40, size=n, replace=False).astype(np.uint64)
+    vals = rng.integers(1, 2 ** 50, size=n, dtype=np.uint64)
+    return keys, vals, rng
+
+
+def _part(at, dur, cn=1, mn=-1, down_s=1e-3):
+    return FaultEvent("partition", at, dur, mn=mn, cn=cn, down_s=down_s)
+
+
+# ---------------------------------------------------------------- validation
+class TestValidation:
+    def test_partition_event_shape(self):
+        _part(10, 5).validate()                      # wildcard link ok
+        _part(10, 5, mn=2).validate()                # specific link ok
+        with pytest.raises(ValueError):              # needs an outage time
+            FaultEvent("partition", 10, 5, mn=-1, cn=0).validate()
+        with pytest.raises(ValueError):              # only partition gets -1
+            FaultEvent("mn_crash", 10, 5, mn=-1, down_s=1e-3).validate()
+
+    def test_cn_kinds_reject_mn_target(self):
+        with pytest.raises(ValueError):
+            FaultEvent("cn_delay", 10, 5, mn=1, cn=0,
+                       extra_us=2.0).validate()
+        FaultEvent("cn_delay", 10, 5, cn=1, extra_us=2.0).validate()
+        with pytest.raises(ValueError):
+            FaultEvent("cn_drop", 10, 5, cn=0, drop_rate=1.5).validate()
+
+    def test_overlapping_windows_rejected(self):
+        with pytest.raises(ValueError, match="overlap"):
+            FaultSchedule(events=(_part(10, 20, mn=1),
+                                  _part(25, 10, mn=1))).validate()
+        # wildcard cut conflicts with any same-CN link window
+        with pytest.raises(ValueError, match="overlap"):
+            FaultSchedule(events=(_part(10, 20, mn=-1),
+                                  _part(25, 10, mn=2))).validate()
+        with pytest.raises(ValueError, match="overlap"):
+            FaultSchedule(events=(
+                FaultEvent("cn_drop", 10, 20, cn=1, drop_rate=0.1),
+                FaultEvent("cn_drop", 15, 20, cn=1,
+                           drop_rate=0.2))).validate()
+
+    def test_disjoint_or_cross_target_windows_pass(self):
+        FaultSchedule(events=(_part(10, 10, mn=1),
+                              _part(30, 10, mn=1))).validate()   # sequential
+        FaultSchedule(events=(_part(10, 20, cn=0, mn=1),
+                              _part(15, 20, cn=1, mn=1))).validate()  # links
+        FaultSchedule(events=(
+            _part(10, 20, mn=1),
+            FaultEvent("cn_drop", 12, 20, cn=1,
+                       drop_rate=0.1))).validate()  # different kinds
+
+    def test_storespec_rejects_undeployed_mn(self):
+        spec = StoreSpec(kind="outback-dir", replicas=3,
+                         faults=FaultSchedule(events=(_part(10, 5, mn=5),)))
+        with pytest.raises(SpecError):
+            spec.validate()
+
+    def test_open_store_rejects_foreign_cn_targets(self):
+        keys, vals, _ = _data(256)
+        bad = StoreSpec(kind="outback-dir", replicas=2,
+                        faults=FaultSchedule(events=(
+                            FaultEvent("cn_drop", 10, 5, cn=1,
+                                       drop_rate=0.2),)))
+        with pytest.raises(SpecError, match="single CN"):
+            open_store(bad, keys, vals)
+        ok = StoreSpec(kind="outback-dir", replicas=2,
+                       faults=FaultSchedule(events=(
+                           FaultEvent("cn_drop", 10, 5, cn=0,
+                                      drop_rate=0.2),)))
+        open_store(ok, keys, vals)  # CN 0 is deployed
+
+    def test_clusterspec_rejects_undeployed_cn(self):
+        store = StoreSpec(kind="outback-dir", replicas=2,
+                          faults=FaultSchedule(events=(_part(10, 5, cn=3),)))
+        with pytest.raises(SpecError, match="CN 3"):
+            ClusterSpec(store=store, n_cns=2).validate()
+        ClusterSpec(store=store, n_cns=4).validate()
+
+    def test_placement_spec_validation(self):
+        with pytest.raises(SpecError):
+            StoreSpec(kind="outback-dir", placement="rr").validate()
+        with pytest.raises(SpecError):   # per-directory-shard property
+            StoreSpec(kind="outback", placement="hrw").validate()
+        with pytest.raises(SpecError):   # k exceeds the pool
+            StoreSpec(kind="outback-dir", replicas=2, placement="hrw",
+                      placement_k=3).validate()
+        spec = StoreSpec(kind="outback-dir", replicas=3, placement="hrw",
+                         placement_k=2)
+        spec.validate()
+        rt = StoreSpec.from_json_dict(spec.to_json_dict())
+        assert rt.placement == "hrw" and rt.placement_k == 2
+
+
+# ----------------------------------------------------------------- placement
+class TestPlacement:
+    def test_hrw_deterministic_k_subset(self):
+        a = ReplicaPlacement(16, 4, 2, seed=3)
+        b = ReplicaPlacement(16, 4, 2, seed=3)
+        for s in range(16):
+            m = a.members(s)
+            assert m == b.members(s)
+            assert len(m) == 2 == len(set(m))
+            assert all(0 <= r < 4 for r in m)
+        assert [a.members(s) for s in range(16)] \
+            != [ReplicaPlacement(16, 4, 2, seed=4).members(s)
+                for s in range(16)]
+        for r in range(4):
+            for s in a.shards_on(r):
+                assert r in a.members(s)
+
+    def test_split_successor_inherits_members(self):
+        p = ReplicaPlacement(4, 3, 2, seed=1)
+        p.extend_for_split(2)
+        assert len(p) == 5
+        assert p.members(4) == p.members(2)
+
+    def test_mn_crash_resyncs_only_placed_shards(self):
+        keys, vals, rng = _data(1500)
+        sched = FaultSchedule.single_crash(300, 200, mn=1, seed=2,
+                                           lease_term_ops=0)
+        spec = StoreSpec(kind="outback-dir", replicas=3, placement="hrw",
+                         placement_k=2, faults=sched, load_factor=0.5,
+                         rng_seed=5, params={"initial_depth": 3})
+        adapter, plane = build_adapter(spec, keys, vals)
+        placed = set(adapter.placement.shards_on(1))
+        assert placed and placed < set(range(len(adapter.placement)))
+
+        installed = []
+        for s, t in enumerate(adapter.replicas[1].engine.tables):
+            orig = t.install_mn_state
+
+            def spy(state, _orig=orig, _s=s):
+                installed.append(_s)
+                return _orig(state)
+
+            t.install_mn_state = spy
+
+        wk = rng.choice(keys, size=1200).astype(np.uint64)
+        wv = rng.integers(1, 2 ** 50, size=1200, dtype=np.uint64)
+        for i in range(0, 1200, 8):
+            adapter.update_batch(wk[i:i + 8], wv[i:i + 8])
+        assert adapter.meter_totals().resyncs > 0
+        assert installed, "crash window closed without a per-shard resync"
+        assert set(installed) == placed
+
+        res = adapter.get_batch(keys[:256])
+        assert res.found.all()
+
+
+# --------------------------------------------------------- cluster fencing
+def _fence_cluster(n=1200, rounds=1600, lanes=8, telemetry=False):
+    keys, vals, rng = _data(n, seed=7)
+    sched = FaultSchedule(
+        events=(_part(rounds // 4, rounds // 3, cn=1, down_s=2e-3),),
+        seed=3, lease_term_ops=0)
+    spec = StoreSpec(kind="outback-dir", replicas=3, placement="hrw",
+                     placement_k=2, faults=sched, load_factor=0.5,
+                     rng_seed=5,
+                     telemetry=TelemetryConfig() if telemetry else None)
+    cl = cluster_of(spec, keys, vals, n_cns=2)
+    oracle = dict(zip(keys.tolist(), vals.tolist()))
+    wk = rng.choice(keys, size=rounds).astype(np.uint64)
+    wv = rng.integers(1, 2 ** 50, size=rounds, dtype=np.uint64)
+    acked_while_cut = 0
+    for i in range(0, rounds, lanes):
+        cn = (i // lanes) % 2
+        ks, vs = wk[i:i + lanes], wv[i:i + lanes]
+        cut_before = not cl.cn_reachable(cn)
+        res = cl.cns[cn].update_batch(ks, vs)
+        cut = cut_before and not cl.cn_reachable(cn)
+        sts = res.statuses or ("ok",) * len(ks)
+        for k, v, st in zip(ks.tolist(), vs.tolist(), sts):
+            if st not in _DEGRADED:
+                oracle[k] = v
+                if cut:
+                    acked_while_cut += 1
+    for c in cl.cns:
+        c.flush()
+    return cl, keys, oracle, acked_while_cut
+
+
+class TestClusterFencing:
+    def test_full_cut_fences_then_converges(self):
+        cl, keys, oracle, acked_while_cut = _fence_cluster()
+        st = cl.stats
+        assert acked_while_cut == 0, "split-brain acked writes"
+        assert st.partition_arbitrations == 1
+        assert st.fenced_write_lanes > 0
+        assert st.fenced_rpcs >= 1
+        assert st.view_syncs == 1
+        assert cl.ledgers[1].fenced_writes == st.fenced_write_lanes
+        assert cl.meter_totals().fenced_writes == st.fenced_write_lanes
+        reasons = [h.reason for h in cl.handoffs]
+        assert "partition" in reasons and "heal" in reasons
+        # post-heal convergence: every CN serves the oracle bit-exactly
+        for c in range(2):
+            for i in range(0, len(keys), 64):
+                ks = keys[i:i + 64]
+                res = cl.cns[c].get_batch(ks)
+                assert res.found.all()
+                assert all(v == oracle[k] for k, v in
+                           zip(ks.tolist(), res.values.tolist()))
+
+    def test_single_link_cut_no_arbitration(self):
+        keys, vals, rng = _data(900)
+        sched = FaultSchedule(
+            events=(_part(200, 300, cn=1, mn=1, down_s=1e-3),),
+            seed=3, lease_term_ops=0)
+        spec = StoreSpec(kind="outback-dir", replicas=3, placement="hrw",
+                         placement_k=2, faults=sched, load_factor=0.5,
+                         rng_seed=5)
+        cl = cluster_of(spec, keys, vals, n_cns=2)
+        oracle = dict(zip(keys.tolist(), vals.tolist()))
+        wk = rng.choice(keys, size=1200).astype(np.uint64)
+        wv = rng.integers(1, 2 ** 50, size=1200, dtype=np.uint64)
+        for i in range(0, 1200, 8):
+            cn = (i // 8) % 2
+            ks, vs = wk[i:i + 8], wv[i:i + 8]
+            res = cl.cns[cn].update_batch(ks, vs)
+            sts = res.statuses or ("ok",) * len(ks)
+            for k, v, st in zip(ks.tolist(), vs.tolist(), sts):
+                if st not in _DEGRADED:
+                    oracle[k] = v
+        cl.cns[0].flush(), cl.cns[1].flush()
+        assert cl.stats.partition_arbitrations == 0
+        assert cl.stats.fenced_write_lanes == 0
+        res = cl.cns[0].get_batch(keys)
+        assert res.found.all()
+        assert all(v == oracle[k]
+                   for k, v in zip(keys.tolist(), res.values.tolist()))
+
+    def test_replay_partition_per_link(self):
+        cl, _keys, _oracle, _ = _fence_cluster(n=800, rounds=800)
+        res = simulate_cluster([t.trace for t in cl.transports], replicas=3)
+        parts = [w for w in res.fault_windows if w[2] == "partition"]
+        fences = [w for w in res.fault_windows if w[2] == "fenced"]
+        assert len(parts) == 1 and parts[0][3] == 1   # keyed by CN
+        assert parts[0][1] - parts[0][0] == pytest.approx(2e-3)
+        assert len(fences) == 1 and fences[0][0] == fences[0][1]
+        # determinism of the replay itself
+        res2 = simulate_cluster([t.trace for t in cl.transports], replicas=3)
+        assert res.fault_windows == res2.fault_windows
+        assert np.array_equal(res.latencies_us, res2.latencies_us)
+
+    def test_single_store_partition_stalls_replay(self):
+        keys, vals, rng = _data(600)
+        sched = FaultSchedule(
+            events=(_part(150, 200, cn=0, down_s=5e-3),),
+            seed=1, lease_term_ops=0)
+        spec = StoreSpec(kind="outback-dir", replicas=2, faults=sched,
+                         load_factor=0.5, rng_seed=5)
+        from repro.net import Transport
+        tr = Transport()
+        st = open_store(spec, keys, vals, transport=tr)
+        for i in range(0, 800, 8):
+            idx = rng.integers(0, len(keys), size=8)
+            st.get_batch(keys[idx])
+        st.flush()
+        res = simulate(tr.trace, replicas=2)
+        parts = [w for w in res.fault_windows if w[2] == "partition"]
+        assert parts, "partition window missing from the replay"
+        # a post-heal segment held at the CN: makespan covers the outage
+        assert res.seconds >= 5e-3
+
+
+# -------------------------------------------------------------------- chaos
+class TestChaos:
+    def test_generated_schedules_are_valid_and_sequential(self):
+        for seed in range(6):
+            sched = generate_chaos(seed, 2000)
+            sched.validate()
+            evs = sorted(sched.events, key=lambda e: e.at_op)
+            for a, b in zip(evs, evs[1:]):
+                assert a.at_op + a.duration_ops <= b.at_op
+            assert evs[0].kind == "partition" and evs[0].mn == -1
+
+    @pytest.mark.parametrize("seed", (1, 2, 3))
+    def test_invariants_hold(self, seed):
+        rep = run_chaos(seed, n_ops=1400, n_keys=600)
+        assert rep.passed, rep.failures
+        assert rep.lost_acked_writes == 0
+        assert rep.split_brain_acked_writes == 0
+        assert rep.linearizability_violations == 0
+        assert rep.partition_arbitrations >= 1   # window 0 is a full cut
+        assert rep.acked_writes > 0 and rep.heal_checks >= 1
+        json.dumps(rep.to_json_dict())           # schema stays serialisable
+
+    def test_same_seed_bit_identical(self):
+        a = run_chaos(5, n_ops=1200, n_keys=500, telemetry=True)
+        b = run_chaos(5, n_ops=1200, n_keys=500, telemetry=True)
+        assert a.meters == b.meters
+        assert a.state_sig == b.state_sig
+        assert a.telemetry_sig == b.telemetry_sig
+        rows_a = [r for h in a.cluster.hubs for r in telemetry_rows(h)]
+        rows_b = [r for h in b.cluster.hubs for r in telemetry_rows(h)]
+        assert json.dumps(rows_a, sort_keys=True) \
+            == json.dumps(rows_b, sort_keys=True)
+        da, db = a.to_json_dict(), b.to_json_dict()
+        assert da == db
+
+
+# ------------------------------------------------------------- observability
+class TestTelemetry:
+    def test_fault_kind_counters_single_store(self):
+        keys, vals, rng = _data(600)
+        sched = FaultSchedule(
+            events=(FaultEvent("delay", 100, 80, extra_us=3.0),
+                    FaultEvent("cn_drop", 260, 80, cn=0, drop_rate=0.2),
+                    _part(420, 120, cn=0, mn=1)),
+            seed=1, lease_term_ops=0)
+        spec = StoreSpec(kind="outback-dir", replicas=2, faults=sched,
+                         load_factor=0.5, telemetry=TelemetryConfig())
+        st = open_store(spec, keys, vals)
+        for _ in range(0, 700, 8):
+            idx = rng.integers(0, len(keys), size=8)
+            st.get_batch(keys[idx])
+        st.flush()
+        c = st.telemetry.counters
+        assert c.get("faults{kind=delay}") == 1
+        assert c.get("faults{kind=cn_drop}") == 1
+        assert c.get("faults{kind=partition}") == 1
+
+    def test_cluster_fence_counters_on_target_hub(self):
+        cl, _keys, _oracle, _ = _fence_cluster(telemetry=True)
+        merged = {}
+        for h in cl.hubs:
+            for k, v in h.counters.items():
+                merged[k] = merged.get(k, 0) + v
+        assert merged.get("faults{kind=partition}") == 1
+        assert cl.hubs[1].counters.get("faults{kind=fenced}") == 1
+        assert cl.hubs[1].counters.get("cluster.fenced_writes") \
+            == cl.stats.fenced_write_lanes
+
+    def test_chrome_trace_fault_track_has_partition(self):
+        keys, vals, rng = _data(500)
+        sched = FaultSchedule(events=(_part(100, 150, cn=0, down_s=2e-3),),
+                              seed=1, lease_term_ops=0)
+        spec = StoreSpec(kind="outback-dir", replicas=2, faults=sched,
+                         load_factor=0.5)
+        from repro.net import Transport
+        tr = Transport()
+        st = open_store(spec, keys, vals, transport=tr)
+        for _ in range(0, 500, 8):
+            idx = rng.integers(0, len(keys), size=8)
+            st.get_batch(keys[idx])
+        st.flush()
+        doc = chrome_trace(tr.trace, replicas=2)
+        slices = [e for e in doc["traceEvents"]
+                  if e.get("pid") == 3 and e.get("name") == "partition"]
+        assert slices and slices[0]["dur"] == pytest.approx(2e3)
+
+
+# ------------------------------------------------------------------ dormancy
+class TestDormant:
+    def test_armed_empty_plane_is_byte_identical(self):
+        keys, vals, rng = _data(1200, seed=11)
+        plain = StoreSpec(kind="outback-dir", load_factor=0.85, rng_seed=2)
+        armed = StoreSpec(kind="outback-dir", load_factor=0.85, rng_seed=2,
+                          placement="hrw", placement_k=1,
+                          faults=FaultSchedule(lease_term_ops=0))
+        a = cluster_of(plain, keys, vals, n_cns=2)
+        b = cluster_of(armed, keys, vals, n_cns=2)
+        wk = rng.choice(keys, size=1000).astype(np.uint64)
+        wv = rng.integers(1, 2 ** 50, size=1000, dtype=np.uint64)
+        for i in range(0, 1000, 16):
+            cn = (i // 16) % 2
+            for cl in (a, b):
+                cl.cns[cn].update_batch(wk[i:i + 16], wv[i:i + 16])
+                cl.cns[1 - cn].get_batch(wk[i:i + 16])
+        for cl in (a, b):
+            for c in cl.cns:
+                c.flush()
+        assert a.meter_totals().snapshot() == b.meter_totals().snapshot()
+        for i in range(2):
+            assert a.transports[i].trace == b.transports[i].trace
+        assert state_signature(a.mn_state()) == state_signature(b.mn_state())
+        assert b.stats.partition_arbitrations == 0
+        assert b.stats.fenced_write_lanes == 0
