@@ -87,6 +87,12 @@ SUITES = (
               "reads, availability floor), bit-identical determinism, "
               "per-shard HRW resync savings, dormant-plane identity",
      lambda a, n: _mod("chaos_bench").chaos_suite(a.quick)),
+    ("slo", "serving front door under open-loop multi-tenant load: "
+            "goodput-vs-offered-load knee, p999 at 2x-knee overload with "
+            "admission on/off, singleflight savings at zipf(0.99), "
+            "per-tenant isolation, zero lost acked writes, dormant "
+            "ingress identity (outback-slo/v1 rows)",
+     lambda a, n: _mod("slo_bench").slo_suite(a.quick)),
     ("kernel_paged", "",
      lambda a, n: _mod("kernel_bench").paged_attention_traffic()),
     ("kernel_lookup", "",

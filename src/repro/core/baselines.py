@@ -24,10 +24,20 @@ has one uniform signature ``(bucket, fp, lo, hi, arrays, xp)`` across all
 four (RACE's raises: one-sided designs have no MN compute to isolate), and
 every baseline also serves the full mutation surface
 (``insert``/``update``/``delete`` plus the batched
-``insert_batch``/``update_batch``/``delete_batch``, which vectorise the
-CN-side locate hashes and keep the scalar MN walks — and their meter
-accounting — as the single source of truth) so ``repro.api`` can drive
-any registered store through one protocol.
+``insert_batch``/``update_batch``/``delete_batch``) so ``repro.api`` can
+drive any registered store through one protocol.
+
+Batched mutations vectorise both the CN-side locate hashes *and* the MN
+walks: MICA's fixed-window probe walk (``_walk_batch``) and Cluster's
+chain walk (``_chain_find_batch``) precompute every lane's walk in one
+numpy wave, then apply lanes in order through the same ``_insert_at`` /
+``_update_at`` / ``_delete_at`` bodies the scalar path uses — same meter
+calls, same arguments, same order, so accounting and traces stay
+byte-identical with the scalar loop (``tests/test_baseline_batch_parity``
+proves it).  A lane whose precomputed walk could be stale — an earlier
+lane in the same batch structurally mutated a bucket this lane's walk
+visited — recomputes its walk scalar, which is exactly what the scalar
+loop would have seen anyway.
 """
 
 from __future__ import annotations
@@ -420,24 +430,115 @@ class MicaKVS(_HeapMixin):
         g = hash_range(lo, hi, 0x111CA, self.nb).astype(np.int64)
         return lo, hi, g, RaceKVS._fp(lo, hi)
 
+    def _walk_batch(self, lo, hi, g, fp):
+        """Vectorised fixed-window probe walks for a mutation batch.
+
+        One numpy wave over a ``SCAN_BUCKETS``-bucket window per lane,
+        reproducing :meth:`_walk_for` exactly: the first *verified* hit
+        wins (a match inside the stop bucket beats the stop), the free
+        lane is the first ``addr < 0`` slot scanned strictly before the
+        hit (or anywhere up to the stop bucket's end on a miss), and
+        ``walked`` counts buckets visited.  Returns
+        ``(walks, window_buckets)``: per-lane ``_walk_for`` tuples, with
+        ``None`` for residual lanes whose walk leaves the window (no hit,
+        no never-used lane — they recompute scalar), plus the ``(n, W)``
+        window bucket ids for the caller's mutation-overlap checks."""
+        n = int(lo.shape[0])
+        W, S = self.SCAN_BUCKETS, self.BUCKET_SLOTS
+        rows = np.arange(n)
+        bucks = (g[:, None] + np.arange(W)[None, :]) % self.nb  # (n, W)
+        addrs = self.addr[bucks]                                # (n, W, S)
+        flat_a = addrs.reshape(n, W * S)
+        flat_f = self.fp[bucks].reshape(n, W * S)
+        cand = (flat_a >= 0) & (flat_f == np.asarray(fp)[:, None])
+        ac = np.clip(flat_a, 0, None)
+        verified = cand & (self.h_klo[ac] == lo[:, None]) \
+            & (self.h_khi[ac] == hi[:, None])
+        found_pos = np.argmax(verified, axis=1)
+        has_found = verified[rows, found_pos]
+        found_b = found_pos // S
+        empty_b = (addrs == self._EMPTY).any(axis=2)            # (n, W)
+        stop_b = np.argmax(empty_b, axis=1)
+        has_stop = empty_b[rows, stop_b]
+        found_ok = has_found & (~has_stop | (found_b <= stop_b))
+        resolved = found_ok | has_stop
+        # free-lane search ends at the hit (exclusive) or covers the
+        # whole stop bucket — the slots the scalar walk actually scanned
+        end_pos = np.where(found_ok, found_pos, (stop_b + 1) * S)
+        freeable = (flat_a < 0) & (np.arange(W * S)[None, :]
+                                   < end_pos[:, None])
+        free_pos = np.argmax(freeable, axis=1)
+        has_free = freeable[rows, free_pos]
+        walks = []
+        for i in range(n):
+            if not resolved[i]:
+                walks.append(None)
+                continue
+            fnd = ((int(bucks[i, found_b[i]]), int(found_pos[i] % S))
+                   if found_ok[i] else None)
+            fr, fdist = None, 0
+            if has_free[i]:
+                fr = (int(bucks[i, free_pos[i] // S]),
+                      int(free_pos[i] % S))
+                fdist = int(free_pos[i] // S) + 1
+            wk = int(found_b[i]) + 1 if found_ok[i] else int(stop_b[i]) + 1
+            walks.append((fnd, fr, fdist, wk))
+        return walks, bucks
+
     def insert_batch(self, keys, values) -> list[str]:
         lo, hi, g, fp = self._home_batch(keys)
-        return [self._insert_at(int(lo[i]), int(hi[i]), int(g[i]),
-                                int(fp[i]), int(v))
-                for i, v in enumerate(np.asarray(values, dtype=np.uint64))]
+        values = np.asarray(values, dtype=np.uint64)
+        walks, bucks = self._walk_batch(lo, hi, g, fp)
+        out = []
+        mutated: set[int] = set()  # buckets structurally changed so far
+        dirty_all = False          # an untracked (scalar-path) mutation
+        for i in range(len(values)):
+            w = walks[i]
+            if dirty_all or (mutated
+                             and not mutated.isdisjoint(bucks[i].tolist())):
+                w = None  # stale precompute: rewalk scalar (what the
+                #           scalar loop would have seen at this point)
+            ret = self._insert_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                  int(fp[i]), int(values[i]), walk=w)
+            if ret == "slot":  # consumed a free lane: structural change
+                if w is not None:
+                    mutated.add(w[1][0])
+                else:
+                    dirty_all = True
+            out.append(ret)
+        return out
 
     def update_batch(self, keys, values) -> np.ndarray:
         lo, hi, g, fp = self._home_batch(keys)
         values = np.asarray(values, dtype=np.uint64)
+        # updates touch heap values only — never fp/addr structure or heap
+        # keys — so precomputed walks cannot go stale mid-batch
+        walks, _ = self._walk_batch(lo, hi, g, fp)
         return np.asarray([self._update_at(int(lo[i]), int(hi[i]), int(g[i]),
-                                           int(fp[i]), int(values[i]))
+                                           int(fp[i]), int(values[i]),
+                                           walk=walks[i])
                            for i in range(len(values))], dtype=bool)
 
     def delete_batch(self, keys) -> np.ndarray:
         lo, hi, g, fp = self._home_batch(keys)
-        return np.asarray([self._delete_at(int(lo[i]), int(hi[i]), int(g[i]),
-                                           int(fp[i]))
-                           for i in range(lo.shape[0])], dtype=bool)
+        walks, bucks = self._walk_batch(lo, hi, g, fp)
+        out = np.zeros(lo.shape[0], dtype=bool)
+        mutated: set[int] = set()
+        dirty_all = False
+        for i in range(lo.shape[0]):
+            w = walks[i]
+            if dirty_all or (mutated
+                             and not mutated.isdisjoint(bucks[i].tolist())):
+                w = None
+            ok = self._delete_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                 int(fp[i]), walk=w)
+            if ok:  # tombstoned a lane: structural change
+                if w is not None:
+                    mutated.add(w[0][0])
+                else:
+                    dirty_all = True
+            out[i] = ok
+        return out
 
     def insert(self, key: int, value: int) -> str:
         """Runtime Insert, bounded by the batched kernel's reach: a new key
@@ -449,8 +550,9 @@ class MicaKVS(_HeapMixin):
         fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
         return self._insert_at(lo, hi, g, fp, value)
 
-    def _insert_at(self, lo, hi, g, fp, value) -> str:
-        found, free, free_dist, walked = self._walk_for(lo, hi, fp, g)
+    def _insert_at(self, lo, hi, g, fp, value, walk=None) -> str:
+        found, free, free_dist, walked = \
+            self._walk_for(lo, hi, fp, g) if walk is None else walk
         self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=walked,
                        mn_cmp=walked * self.BUCKET_SLOTS, mn_writes=1)
         if found is not None:
@@ -482,8 +584,9 @@ class MicaKVS(_HeapMixin):
         fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
         return self._update_at(lo, hi, g, fp, value)
 
-    def _update_at(self, lo, hi, g, fp, value) -> bool:
-        found, _, _, walked = self._walk_for(lo, hi, fp, g)
+    def _update_at(self, lo, hi, g, fp, value, walk=None) -> bool:
+        found, _, _, walked = \
+            self._walk_for(lo, hi, fp, g) if walk is None else walk
         self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=walked,
                        mn_cmp=walked * self.BUCKET_SLOTS,
                        mn_writes=1 if found else 0)
@@ -498,8 +601,9 @@ class MicaKVS(_HeapMixin):
         fp = int(RaceKVS._fp(np.uint32(lo), np.uint32(hi)))
         return self._delete_at(lo, hi, g, fp)
 
-    def _delete_at(self, lo, hi, g, fp) -> bool:
-        found, _, _, walked = self._walk_for(lo, hi, fp, g)
+    def _delete_at(self, lo, hi, g, fp, walk=None) -> bool:
+        found, _, _, walked = \
+            self._walk_for(lo, hi, fp, g) if walk is None else walk
         self.meter.add(rts=1, req=16, resp=8, cn_hash=2, mn_reads=walked,
                        mn_cmp=walked * self.BUCKET_SLOTS,
                        mn_writes=1 if found else 0)
@@ -672,32 +776,121 @@ class ClusterKVS(_HeapMixin):
         g = hash_range(lo, hi, 0xC1C1, self.nb).astype(np.int64)
         return lo, hi, g, self._fp14(lo, hi)
 
+    def _chain_find_batch(self, lo, hi, g, fp):
+        """Vectorised chain walks for a mutation batch.
+
+        Walks every lane's bucket chain in lockstep (chains are bounded:
+        build places within ``MAX_CHAIN`` hops of home, runtime inserts
+        within ``MAX_CHAIN - 1``), reproducing :meth:`_chain_find`: a
+        slot counts only when fingerprint *and* full heap key match, the
+        first matching slot of the first matching bucket wins, and
+        ``hops`` counts buckets read — through the found bucket, or the
+        whole chain on a miss.  Returns ``(walks, visited)``: per-lane
+        ``(found, hops)`` tuples plus an ``(n, steps)`` array of the
+        chain buckets each lane actually read (``-1`` padded) for the
+        caller's mutation-overlap checks."""
+        n = int(lo.shape[0])
+        rows = np.arange(n)
+        gg = np.asarray(g, dtype=np.int64).copy()
+        live = np.ones(n, dtype=bool)
+        found_b = np.full(n, -1, dtype=np.int64)
+        found_s = np.zeros(n, dtype=np.int64)
+        hops = np.zeros(n, dtype=np.int64)
+        steps = self.MAX_CHAIN + 2  # home + MAX_CHAIN hops + slack
+        visited = np.full((n, steps), -1, dtype=np.int64)
+        for step in range(steps):
+            if not live.any():
+                break
+            cur = np.where(live, gg, 0)
+            visited[:, step] = np.where(live, cur, -1)
+            hops += live
+            a = self.addr[cur]                               # (n, S)
+            cand = (a >= 0) & (self.fp[cur] == np.asarray(fp)[:, None]) \
+                & live[:, None]
+            ac = np.clip(a, 0, None)
+            ver = cand & (self.h_klo[ac] == lo[:, None]) \
+                & (self.h_khi[ac] == hi[:, None])
+            first = np.argmax(ver, axis=1)
+            hit = ver[rows, first]
+            found_b = np.where(hit, cur, found_b)
+            found_s = np.where(hit, first, found_s)
+            live = live & ~hit
+            gg = np.where(live, self.nxt[cur], -1)
+            live = live & (gg >= 0)
+        walks = []
+        for i in range(n):
+            if live[i]:  # chain deeper than the bound: rewalk scalar
+                walks.append(None)
+                continue
+            fnd = ((int(found_b[i]), int(found_s[i]))
+                   if found_b[i] >= 0 else None)
+            walks.append((fnd, int(hops[i])))
+        return walks, visited
+
     def insert_batch(self, keys, values) -> list[str]:
         lo, hi, g, fp = self._home_batch(keys)
-        return [self._insert_at(int(lo[i]), int(hi[i]), int(g[i]),
-                                int(fp[i]), int(v))
-                for i, v in enumerate(np.asarray(values, dtype=np.uint64))]
+        values = np.asarray(values, dtype=np.uint64)
+        walks, visited = self._chain_find_batch(lo, hi, g, fp)
+        out = []
+        mutated: set[int] = set()  # buckets structurally changed so far
+        dirty_all = False          # an untracked (scalar-path) mutation
+        for i in range(len(values)):
+            w = walks[i]
+            vis = [int(b) for b in visited[i] if b >= 0]
+            if dirty_all or (mutated and not mutated.isdisjoint(vis)):
+                w = None  # stale precompute: rewalk scalar
+            ret = self._insert_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                  int(fp[i]), int(values[i]), walk=w)
+            if ret == "slot":
+                # the placed slot (and any chain extension's new tail
+                # pointer) lies along this lane's read chain — a chain
+                # extension's fresh bucket existed for nobody's precompute
+                if w is not None:
+                    mutated.update(vis)
+                else:
+                    dirty_all = True
+            out.append(ret)
+        return out
 
     def update_batch(self, keys, values) -> np.ndarray:
         lo, hi, g, fp = self._home_batch(keys)
         values = np.asarray(values, dtype=np.uint64)
+        # heap-value-only writes: precomputed walks cannot go stale
+        walks, _ = self._chain_find_batch(lo, hi, g, fp)
         return np.asarray([self._update_at(int(lo[i]), int(hi[i]), int(g[i]),
-                                           int(fp[i]), int(values[i]))
+                                           int(fp[i]), int(values[i]),
+                                           walk=walks[i])
                            for i in range(len(values))], dtype=bool)
 
     def delete_batch(self, keys) -> np.ndarray:
         lo, hi, g, fp = self._home_batch(keys)
-        return np.asarray([self._delete_at(int(lo[i]), int(hi[i]), int(g[i]),
-                                           int(fp[i]))
-                           for i in range(lo.shape[0])], dtype=bool)
+        walks, visited = self._chain_find_batch(lo, hi, g, fp)
+        out = np.zeros(lo.shape[0], dtype=bool)
+        mutated: set[int] = set()
+        dirty_all = False
+        for i in range(lo.shape[0]):
+            w = walks[i]
+            vis = [int(b) for b in visited[i] if b >= 0]
+            if dirty_all or (mutated and not mutated.isdisjoint(vis)):
+                w = None
+            ok = self._delete_at(int(lo[i]), int(hi[i]), int(g[i]),
+                                 int(fp[i]), walk=w)
+            if ok:  # freed a lane: structural change
+                if w is not None:
+                    mutated.add(w[0][0])
+                else:
+                    dirty_all = True
+            out[i] = ok
+        return out
 
     def insert(self, key: int, value: int) -> str:
         lo, hi = int(key) & 0xFFFFFFFF, (int(key) >> 32) & 0xFFFFFFFF
         g, fp = self._home(lo, hi)
         return self._insert_at(lo, hi, g, fp, value)
 
-    def _insert_at(self, lo, hi, g, fp, value) -> str:
-        found, hops = self._chain_find(lo, hi, fp, g)
+    def _insert_at(self, lo, hi, g, fp, value, walk=None) -> str:
+        found, hops = \
+            self._chain_find(lo, hi, fp, g) if walk is None else walk
         self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=hops,
                        mn_cmp=hops * self.BUCKET_SLOTS, mn_writes=1)
         if found is not None:
@@ -720,8 +913,9 @@ class ClusterKVS(_HeapMixin):
         g, fp = self._home(lo, hi)
         return self._update_at(lo, hi, g, fp, value)
 
-    def _update_at(self, lo, hi, g, fp, value) -> bool:
-        found, hops = self._chain_find(lo, hi, fp, g)
+    def _update_at(self, lo, hi, g, fp, value, walk=None) -> bool:
+        found, hops = \
+            self._chain_find(lo, hi, fp, g) if walk is None else walk
         self.meter.add(rts=1, req=16 + 32, resp=8, cn_hash=2, mn_reads=hops,
                        mn_cmp=hops * self.BUCKET_SLOTS,
                        mn_writes=1 if found else 0)
@@ -735,8 +929,9 @@ class ClusterKVS(_HeapMixin):
         g, fp = self._home(lo, hi)
         return self._delete_at(lo, hi, g, fp)
 
-    def _delete_at(self, lo, hi, g, fp) -> bool:
-        found, hops = self._chain_find(lo, hi, fp, g)
+    def _delete_at(self, lo, hi, g, fp, walk=None) -> bool:
+        found, hops = \
+            self._chain_find(lo, hi, fp, g) if walk is None else walk
         self.meter.add(rts=1, req=16, resp=8, cn_hash=2, mn_reads=hops,
                        mn_cmp=hops * self.BUCKET_SLOTS,
                        mn_writes=1 if found else 0)

@@ -43,6 +43,11 @@ class CommMeter:
     # write answered from the CN's write buffer — like a cache hit, the op
     # happened and the kind's wire costs land in the saved_* counters
     wc_hits: int = 0
+    # serving front door (repro.serve.frontdoor): concurrent identical
+    # Gets collapsed onto one upstream lane (singleflight) — the follower
+    # lanes' wire costs land in the saved_* counters below, exactly like
+    # cache and write-combining hits, so savings stay comparable
+    sf_hits: int = 0
     saved_round_trips: int = 0
     saved_req_bytes: int = 0
     saved_resp_bytes: int = 0
@@ -158,6 +163,17 @@ class CommMeter:
         buffer: the op happened locally; the listed wire costs were saved."""
         self.ops += n
         self.wc_hits += n
+        self.saved_round_trips += n * saved_rts
+        self.saved_req_bytes += n * saved_req
+        self.saved_resp_bytes += n * saved_resp
+
+    def add_sf_hit(self, n: int = 1, *, saved_rts: int = 1,
+                   saved_req: int = MSG_BYTES, saved_resp: int = 0) -> None:
+        """Account ``n`` singleflight-collapsed Gets: each shared a
+        concurrent identical Get's upstream lane, so the op happened and
+        the listed wire costs were saved (``repro.serve.frontdoor``)."""
+        self.ops += n
+        self.sf_hits += n
         self.saved_round_trips += n * saved_rts
         self.saved_req_bytes += n * saved_req
         self.saved_resp_bytes += n * saved_resp

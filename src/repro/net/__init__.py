@@ -33,7 +33,8 @@ same crash timeline.
 
 from repro.net.chaos import ChaosReport, generate_chaos, run_chaos
 from repro.net.faults import FaultEvent, FaultPlane, FaultSchedule
-from repro.net.replay import SimResult, simulate, simulate_cluster
+from repro.net.replay import (SimResult, simulate, simulate_cluster,
+                              simulate_open)
 from repro.net.service import CX3, CX6, ServiceModel
 from repro.net.sim import Server, Simulator
 from repro.net.transport import (DoorbellMark, FaultMark, OpEvent,
@@ -43,4 +44,4 @@ __all__ = ["CX3", "CX6", "ChaosReport", "DoorbellMark", "FaultEvent",
            "FaultMark", "FaultPlane", "FaultSchedule", "OpEvent",
            "ResizeMark", "Segment", "Server", "ServiceModel", "SimResult",
            "Simulator", "Transport", "generate_chaos", "run_chaos",
-           "simulate", "simulate_cluster"]
+           "simulate", "simulate_cluster", "simulate_open"]

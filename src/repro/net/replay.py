@@ -72,6 +72,13 @@ class SimResult:
         dataclasses.field(default_factory=list)
     doorbell_ts: list[tuple[float, int]] = \
         dataclasses.field(default_factory=list)
+    # populated only by simulate_open: per-op latency / completion time
+    # indexed by *trace-op order* (not completion order), so open-loop
+    # callers can join each offered request back to its upstream lane
+    lat_by_op_us: np.ndarray = \
+        dataclasses.field(default_factory=lambda: np.empty(0, np.float64))
+    completions_by_op_s: np.ndarray = \
+        dataclasses.field(default_factory=lambda: np.empty(0, np.float64))
 
     @property
     def tput_mops(self) -> float:
@@ -354,6 +361,182 @@ def simulate(trace, *, clients: int = 1, window: int | str = 1,
         fault_windows=fwindows,
         op_spans=op_spans, server_spans=server_spans,
         doorbell_ts=doorbell_ts)
+
+
+def simulate_open(trace, arrivals_s, *, mn_threads: int = 1,
+                  doorbell: bool = True, service: ServiceModel = CX6,
+                  replicas: int = 1, qps: int = 8) -> SimResult:
+    """Replay ``trace`` **open-loop**: op ``i`` posts at the absolute sim
+    time ``arrivals_s[i]`` whether or not earlier ops completed.
+
+    The closed-loop :func:`simulate` couples offered load to completion
+    rate (a client only posts when a window slot frees), so overload can
+    never be expressed.  Here the arrival schedule *is* the load: the
+    serving plane (``repro.serve``) decides outcomes on the host path and
+    hands the surviving lanes' post instants to this function
+    (``FrontDoor.lane_arrivals``), and queueing delay shows up as
+    latency — the raw material of the ``slo`` suite's
+    goodput-vs-offered-load curves and overload p999.
+
+    ``arrivals_s`` must have exactly one entry per ``OpEvent`` in the
+    trace (``ValueError`` otherwise — the alignment contract; the CN
+    cache must be off when recording, since cache hits never reach the
+    trace).  Arrivals need not be sorted.  Posts from the open-loop
+    client spread across ``qps`` queue pairs round-robin (op ``i`` posts
+    on QP ``i % qps``), each with doorbell coalescing as in
+    :func:`simulate`; recorded :class:`DoorbellMark` boundaries are
+    ignored — flush windows shaped the *host* batching, while posting
+    here is arrival-driven.  ``ResizeMark``/``FaultMark`` items apply at
+    the arrival instant of the next op after them in the trace.
+    Deterministic like everything else: the event heap breaks time ties
+    by insertion order, so the same (trace, arrivals) pair produces
+    bit-identical results on every run.
+
+    The returned :class:`SimResult` additionally carries
+    ``lat_by_op_us`` / ``completions_by_op_s`` indexed by trace-op order,
+    so callers can join request records back to their lanes.
+    """
+    items = list(trace)
+    ops: list[OpEvent] = []
+    marks: list[tuple[int, object]] = []  # (index of next op, mark)
+    for it in items:
+        if isinstance(it, OpEvent):
+            ops.append(it)
+        elif isinstance(it, (ResizeMark, FaultMark)):
+            marks.append((len(ops), it))
+        # DoorbellMarks: host-plane flush shape; ignored open-loop
+    arr = np.asarray(arrivals_s, dtype=np.float64)
+    if arr.shape[0] != len(ops):
+        raise ValueError(
+            f"arrivals/trace misalignment: {arr.shape[0]} arrivals for "
+            f"{len(ops)} trace OpEvents (is a CN cache answering some "
+            f"lanes locally?)")
+    n = len(ops)
+    sim = Simulator()
+    n_rep = max(1, int(replicas))
+    mn_cpus = [Server(sim, workers=max(1, mn_threads), name=f"mn_cpu{r}")
+               for r in range(n_rep)]
+    mn_nics = [Server(sim, workers=1, name=f"mn_nic{r}")
+               for r in range(n_rep)]
+    qpool = [Server(sim, workers=1,
+                    coalesce=service.max_doorbell if doorbell else 1,
+                    coalesce_extra_s=service.cn_post_batched_s,
+                    name=f"qp{q}")
+             for q in range(max(1, int(qps)))]
+
+    slow_open = {"n": 0}
+    crash_open = [0] * n_rep
+    sat_open: list[list[float]] = [[] for _ in range(n_rep)]
+    link_heal = [0.0] * n_rep
+    lat_us: list[float] = []
+    done_t: list[float] = []
+    lat_by_op = np.full(n, np.nan, dtype=np.float64)
+    done_by_op = np.full(n, np.nan, dtype=np.float64)
+    windows: list[tuple[float, float]] = []
+    fwindows: list[tuple[float, float, str, int]] = []
+
+    def _open_fault_window(mark: FaultMark) -> None:
+        t0 = sim.now
+        if mark.kind == "fenced":
+            fwindows.append((t0, t0, "fenced", max(mark.cn, 0)))
+            return
+        if mark.kind == "partition":
+            rs = range(n_rep) if mark.mn < 0 else [mark.mn % n_rep]
+            for r in rs:
+                link_heal[r] = max(link_heal[r], t0 + mark.down_s)
+            fwindows.append((t0, t0 + mark.down_s, "partition",
+                             max(mark.cn, 0)))
+            return
+        r = mark.mn % n_rep
+        fwindows.append((t0, t0 + mark.down_s, mark.kind, r))
+        if mark.kind == "mn_crash":
+            crash_open[r] += 1
+            mn_cpus[r].pause()
+            mn_nics[r].pause()
+
+            def restart():
+                crash_open[r] -= 1
+                if crash_open[r] == 0:
+                    mn_nics[r].resume()
+                    mn_cpus[r].resume()
+
+            sim.schedule(mark.down_s, restart)
+        elif mark.kind == "nic_saturation":
+            sat_open[r].append(mark.factor)
+            mn_nics[r].factor = max(sat_open[r])
+
+            def clear():
+                sat_open[r].remove(mark.factor)
+                mn_nics[r].factor = max(sat_open[r]) if sat_open[r] else 1.0
+
+            sim.schedule(mark.down_s, clear)
+
+    def _segment(op: OpEvent, oi: int, si: int, t0: float) -> None:
+        if si >= len(op.segments):
+            lat = (sim.now - t0) * 1e6
+            lat_us.append(lat)
+            done_t.append(sim.now)
+            lat_by_op[oi] = lat
+            done_by_op[oi] = sim.now
+            return
+        seg = op.segments[si]
+        r = seg.mn % n_rep
+        post = qpool[oi % len(qpool)]
+
+        def after_post():
+            sim.schedule(service.wire_s, arrive_mn)
+
+        def arrive_mn():
+            mn_nics[r].request(service.mn_nic_s(seg), after_nic)
+
+        def after_nic():
+            if seg.one_sided:
+                respond()
+            else:
+                mn_cpus[r].request(service.mn_cpu_s(seg), respond)
+
+        def respond():
+            sim.schedule(service.wire_s + service.cn_recv_s(seg),
+                         lambda: _segment(op, oi, si + 1, t0))
+
+        def start_post():
+            post.request(service.cn_post_s, after_post)
+
+        stall = seg.wait_s + max(0.0, link_heal[r] - sim.now)
+        if stall > 0:
+            sim.schedule(stall, start_post)
+        else:
+            start_post()
+
+    def _launch(op: OpEvent, oi: int) -> None:
+        t0 = sim.now
+        sim.schedule(service.cn_compute_s(op.cn_hash, op.cn_cmp),
+                     lambda: _segment(op, oi, 0, t0))
+
+    # everything is scheduled up front at t=0, so sim.schedule's relative
+    # delays ARE the absolute instants; ties (several arrivals at the
+    # same time, marks at an op's arrival) break by insertion order —
+    # marks first, then ops in trace order
+    for mi, mark in marks:
+        at = float(arr[mi]) if mi < n else (float(arr[-1]) if n else 0.0)
+        if isinstance(mark, ResizeMark):
+            sim.schedule(at, lambda m=mark: _open_resize_window(
+                sim, mn_cpus, m, service, windows, slow_open))
+        else:
+            sim.schedule(at, lambda m=mark: _open_fault_window(m))
+    for oi, op in enumerate(ops):
+        sim.schedule(float(arr[oi]), lambda op=op, oi=oi: _launch(op, oi))
+    sim.run()
+
+    return SimResult(
+        n_ops=len(lat_us), seconds=sim.now,
+        latencies_us=np.asarray(lat_us, dtype=np.float64),
+        completions_s=np.asarray(done_t, dtype=np.float64),
+        resize_windows=windows,
+        mn_cpu_busy_s=sum(s.busy_s for s in mn_cpus),
+        mn_nic_busy_s=sum(s.busy_s for s in mn_nics),
+        fault_windows=fwindows,
+        lat_by_op_us=lat_by_op, completions_by_op_s=done_by_op)
 
 
 def simulate_cluster(traces, *, clients_per_cn: int = 1,

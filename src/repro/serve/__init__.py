@@ -1,4 +1,9 @@
 from repro.serve.engine import Engine, EngineStats, Request
+from repro.serve.frontdoor import (FDRecord, FrontDoor, FrontDoorConfig,
+                                   TenantLimit)
 from repro.serve.session_store import KVSessionStore
+from repro.serve.traffic import Offered, TenantSpec, TrafficSpec, generate
 
-__all__ = ["Engine", "EngineStats", "KVSessionStore", "Request"]
+__all__ = ["Engine", "EngineStats", "FDRecord", "FrontDoor",
+           "FrontDoorConfig", "KVSessionStore", "Offered", "Request",
+           "TenantLimit", "TenantSpec", "TrafficSpec", "generate"]

@@ -100,3 +100,110 @@ def test_meter_counts_scalar_equals_batch(cls, rts, data):
         assert scalar["mn_cmp_ops"] == batch["mn_cmp_ops"] == 0
     else:
         assert (scalar["mn_cmp_ops"] > 0) == (batch["mn_cmp_ops"] > 0)
+
+
+# ----------------------------------------------- batched mutation parity
+#
+# The fixed-window batched mutation paths (vectorised probe/chain walks
+# feeding the per-lane commit loop) must be *observationally identical*
+# to the scalar loop: same results, byte-identical meter accounting, and
+# the same final index + heap image — the staleness tracking (mutated
+# buckets / dirty_all forcing a scalar re-walk) is exactly what makes
+# that safe, so these tests lean on duplicate keys and mixed hits/misses
+# to force those fallbacks.
+
+def _index_arrays(kvs):
+    arrays = [kvs.fp, kvs.addr, kvs.h_klo, kvs.h_khi, kvs.h_vlo, kvs.h_vhi]
+    if hasattr(kvs, "nxt"):
+        arrays.append(kvs.nxt)
+    return arrays
+
+
+def _assert_twins(a, b):
+    assert a.meter.snapshot() == b.meter.snapshot()
+    for x, y in zip(_index_arrays(a), _index_arrays(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _mutation_script(keys):
+    """(kind, keys, values) steps mixing hits, misses, duplicate keys in
+    one batch, re-inserts of live keys, and delete-then-reinsert."""
+    fresh = splitmix64(np.arange(1, 129, dtype=np.uint64)
+                       + np.uint64(1 << 47))
+    dup = np.concatenate([keys[:64], keys[:64]])          # same key twice
+    return [
+        ("update", keys[:256], splitmix64(keys[:256] + np.uint64(1))),
+        ("update", ABSENT[:64], splitmix64(ABSENT[:64])),  # all misses
+        ("update", dup, splitmix64(dup + np.uint64(2))),   # last wins
+        ("delete", keys[256:384], None),
+        ("delete", np.concatenate([keys[300:332], keys[300:332]]), None),
+        ("insert", fresh, splitmix64(fresh)),              # fresh keys
+        ("insert", keys[256:320], splitmix64(keys[256:320])),  # re-insert
+        ("insert", np.concatenate([fresh[:16], fresh[:16]]) + np.uint64(1),
+         splitmix64(np.arange(32, dtype=np.uint64))),      # dup fresh
+        ("update", keys[256:384], splitmix64(keys[256:384] + np.uint64(3))),
+    ]
+
+
+def _apply_batched(kvs, step):
+    kind, ks, vs = step
+    if kind == "update":
+        return list(np.asarray(kvs.update_batch(ks, vs)))
+    if kind == "delete":
+        return list(np.asarray(kvs.delete_batch(ks)))
+    return kvs.insert_batch(ks, vs)
+
+
+def _apply_scalar(kvs, step):
+    kind, ks, vs = step
+    if kind == "update":
+        return [kvs.update(int(k), int(v)) for k, v in zip(ks, vs)]
+    if kind == "delete":
+        return [kvs.delete(int(k)) for k in ks]
+    return [kvs.insert(int(k), int(v)) for k, v in zip(ks, vs)]
+
+
+@pytest.mark.parametrize("cls", [MicaKVS, ClusterKVS])
+def test_batched_mutations_match_scalar_loop(cls, data):
+    keys, vals = data
+    # headroom for the script's fresh inserts (the displacement / chain
+    # bounds are the engines' documented capacity contract, not parity's)
+    batched = cls(keys, vals, load_factor=0.5)
+    scalar = cls(keys, vals, load_factor=0.5)
+    batched.meter.reset()
+    scalar.meter.reset()
+    for step in _mutation_script(keys):
+        got = _apply_batched(batched, step)
+        want = _apply_scalar(scalar, step)
+        assert [bool(g) if not isinstance(g, str) else g for g in got] == \
+            [bool(w) if not isinstance(w, str) else w for w in want], step[0]
+        _assert_twins(batched, scalar)
+    # both twins agree with ground truth afterwards
+    q = np.concatenate([keys[:256], keys[256:320], keys[320:384],
+                        ABSENT[:64]])
+    b_lo, b_hi, b_ok = batched.get_batch(q)
+    s_lo, s_hi, s_ok = scalar.get_batch(q)
+    np.testing.assert_array_equal(np.asarray(b_ok), np.asarray(s_ok))
+    np.testing.assert_array_equal(np.asarray(b_lo), np.asarray(s_lo))
+    np.testing.assert_array_equal(np.asarray(b_hi), np.asarray(s_hi))
+    ok = np.asarray(b_ok)
+    assert ok[:256].all()          # updated keys still live
+    assert ok[256:320].all()       # deleted-then-reinserted
+    assert not ok[320:384].any()   # deleted, never reinserted
+    assert not ok[384:].any()      # absent stays absent
+
+
+@pytest.mark.parametrize("cls", [MicaKVS, ClusterKVS])
+def test_batched_mutations_last_write_wins_in_offer_order(cls, data):
+    keys, vals = data
+    kvs = cls(keys, vals)
+    k = keys[:32]
+    dup = np.concatenate([k, k, k])
+    v = np.concatenate([splitmix64(k + np.uint64(10)),
+                        splitmix64(k + np.uint64(20)),
+                        splitmix64(k + np.uint64(30))])
+    ok = np.asarray(kvs.update_batch(dup, v))
+    assert ok.all()
+    for i, key in enumerate(k):
+        got = kvs.get(int(key))
+        assert got == int(v[64 + i])  # the batch's last occurrence wins

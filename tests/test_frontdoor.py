@@ -1,0 +1,317 @@
+"""The serving front door: singleflight, admission, limits, dormancy.
+
+The FrontDoor sits between tenants and the ``repro.api`` stack, so its
+contracts are the serving plane's ground truth: collapsed Gets must
+return the leader's exact answer, window hazards must preserve program
+order, rejections must be typed answers (never hangs), the upstream-lane
+accounting must align 1:1 with the recorded transport trace, and the
+default config must be byte-invisible.
+"""
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.api import BatchPolicy, StoreSpec, open_store
+from repro.net import Transport
+from repro.net.faults import FaultSchedule
+from repro.net.replay import simulate_open
+from repro.serve import (FrontDoor, FrontDoorConfig, TenantLimit, TenantSpec,
+                         TrafficSpec, generate)
+
+N = 8_000
+
+
+@pytest.fixture(scope="module")
+def data():
+    from repro.core.store import make_uniform_keys
+    keys = make_uniform_keys(N, 3)
+    from repro.core.hashing import splitmix64
+    return keys, splitmix64(keys)
+
+
+def _open(keys, vals, **spec_kw):
+    tr = Transport()
+    spec = StoreSpec("outback", load_factor=0.85,
+                     batch=BatchPolicy(window=256), **spec_kw)
+    return open_store(spec, keys, vals, transport=tr), tr
+
+
+# ------------------------------------------------------------ singleflight
+def test_collapsed_gets_share_the_leaders_answer(data):
+    keys, vals = data
+    st, tr = _open(keys, vals)
+    fd = FrontDoor(st, FrontDoorConfig(singleflight=True, window=64))
+    k = int(keys[5])
+    recs = [fd.offer("a", "get", k, t_s=i * 1e-6) for i in range(5)]
+    miss = fd.offer("b", "get", int(keys[5]) ^ 0x1357_9BDF, t_s=6e-6)
+    fd.flush()
+    leader, followers = recs[0], recs[1:]
+    assert leader.outcome == "ok" and leader.found
+    assert leader.result == int(vals[5])
+    for f in followers:
+        assert f.outcome == "collapsed"
+        assert (f.found, f.result, f.lane) == (True, int(vals[5]),
+                                               leader.lane)
+    assert not miss.found and miss.outcome == "ok"
+    # 2 upstream lanes (leader + miss), 4 collapsed, metered as savings
+    assert fd.stats()["lanes"] == 2
+    m = st.meter_totals()
+    assert m.sf_hits == 4
+    assert m.saved_round_trips >= 4
+
+
+def test_singleflight_window_scope(data):
+    """Collapse is window-scoped: a flush ends the leader's flight, so
+    the next identical Get opens a fresh lane (it is *concurrent*
+    duplicates that collapse, not a cache)."""
+    keys, vals = data
+    st, tr = _open(keys, vals)
+    fd = FrontDoor(st, FrontDoorConfig(singleflight=True, window=64))
+    k = int(keys[9])
+    fd.offer("a", "get", k, t_s=0.0)
+    fd.flush()
+    again = fd.offer("a", "get", k, t_s=1e-6)
+    fd.flush()
+    assert again.outcome == "ok"  # not collapsed
+    assert fd.stats()["lanes"] == 2
+    assert st.meter_totals().sf_hits == 0
+
+
+def test_write_after_collapsed_read_hazard_flushes(data):
+    """A write to a key with in-flight (collapsed) Gets closes the window
+    first: the Gets see the pre-write value, a later Get sees the new
+    one, program order per key is preserved."""
+    keys, vals = data
+    st, tr = _open(keys, vals)
+    fd = FrontDoor(st, FrontDoorConfig(singleflight=True, window=4096))
+    k = int(keys[11])
+    g1 = fd.offer("a", "get", k, t_s=0.0)
+    g2 = fd.offer("b", "get", k, t_s=1e-6)
+    assert g2.outcome == "collapsed"
+    w = fd.offer("a", "update", k, 0xBEEF, t_s=2e-6)
+    # the hazard closed the read window before buffering the write
+    assert g1.found and g1.result == int(vals[11])
+    assert g2.found and g2.result == int(vals[11])
+    g3 = fd.offer("b", "get", k, t_s=3e-6)
+    fd.flush()
+    assert w.outcome == "ok" and w.found
+    assert g3.found and g3.result == 0xBEEF
+    assert g3.outcome == "ok"  # g2's flight ended with its window
+
+
+def test_get_then_write_then_get_orders_without_singleflight(data):
+    keys, vals = data
+    st, tr = _open(keys, vals)
+    fd = FrontDoor(st, FrontDoorConfig(max_inflight=64, queue_depth=64,
+                                       window=4096))
+    k = int(keys[13])
+    g1 = fd.offer("a", "get", k, t_s=0.0)
+    fd.offer("a", "update", k, 0xCAFE, t_s=1e-6)
+    g2 = fd.offer("a", "get", k, t_s=2e-6)
+    fd.flush()
+    assert g1.result == int(vals[13]) and g2.result == 0xCAFE
+
+
+# ------------------------------------------------- admission + rate limits
+def test_admission_sheds_deterministically(data):
+    keys, vals = data
+    st, tr = _open(keys, vals)
+    cfg = FrontDoorConfig(max_inflight=2, queue_depth=2, service_us=10.0,
+                          window=64)
+    fd = FrontDoor(st, cfg)
+    # 8 simultaneous arrivals into 2 lanes x 10us + 2 queue slots:
+    # 2 start at t=0, 2 queue, 4 shed — all decided at arrival
+    recs = [fd.offer("a", "get", int(keys[i]), t_s=0.0) for i in range(8)]
+    fd.flush()
+    outcomes = [r.outcome for r in recs]
+    assert outcomes == ["ok"] * 4 + ["shed"] * 4
+    assert [r.release_s for r in recs[:4]] == \
+        pytest.approx([0.0, 0.0, 10e-6, 10e-6])
+    # shed requests never reached the stack: 4 lanes, 4 trace ops
+    assert fd.stats()["lanes"] == 4
+    assert len(fd.lane_arrivals()) == 4
+    # rerun is bit-identical (no RNG anywhere on the host path)
+    st2, _ = _open(keys, vals)
+    fd2 = FrontDoor(st2, cfg)
+    recs2 = [fd2.offer("a", "get", int(keys[i]), t_s=0.0) for i in range(8)]
+    fd2.flush()
+    assert [(r.outcome, r.release_s) for r in recs2] == \
+        [(r.outcome, r.release_s) for r in recs]
+
+
+def test_token_bucket_limits_one_tenant_only(data):
+    keys, vals = data
+    st, tr = _open(keys, vals)
+    cfg = FrontDoorConfig(window=64,
+                          limits=(TenantLimit("b", 100_000.0, burst=2.0),))
+    fd = FrontDoor(st, cfg)
+    a_ok = b_ok = b_lim = 0
+    for i in range(40):
+        t = i * 1e-6  # 1 Mops offered each: 10x tenant b's bucket
+        ra = fd.offer("a", "get", int(keys[i]), t_s=t)
+        rb = fd.offer("b", "get", int(keys[40 + i]), t_s=t)
+        a_ok += ra.outcome == "ok"
+        b_ok += rb.outcome == "ok"
+        b_lim += rb.outcome == "ratelimited"
+    fd.flush()
+    assert a_ok == 40  # unlimited tenant untouched
+    # burst 2 up front, then ~0.1 tokens/us over 39us
+    assert b_ok + b_lim == 40 and 2 <= b_ok <= 7
+    assert fd.stats()["ratelimited"] == b_lim
+
+
+def test_rejections_are_answers_not_hangs(data):
+    keys, vals = data
+    st, tr = _open(keys, vals)
+    fd = FrontDoor(st, FrontDoorConfig(max_inflight=1, queue_depth=0,
+                                       service_us=50.0, window=16))
+    r1 = fd.offer("a", "get", int(keys[0]), t_s=0.0)
+    r2 = fd.offer("a", "get", int(keys[1]), t_s=0.0)
+    fd.flush()
+    assert r1.outcome == "ok"
+    assert r2.outcome == "shed" and not r2.found and r2.lane == -1
+
+
+def test_unavailable_surfaces_as_typed_outcome(data):
+    """RetryLayer's degraded answers become per-request outcomes — for
+    leaders *and* their collapsed followers."""
+    keys, vals = data
+    sched = FaultSchedule.single_crash(at_op=2, duration_ops=4_096,
+                                       max_retries=1, lease_term_ops=0)
+    st, tr = _open(keys, vals, faults=sched)
+    fd = FrontDoor(st, FrontDoorConfig(singleflight=True, window=32))
+    recs = []
+    for i in range(256):
+        recs.append(fd.offer("a", "get", int(keys[i % 16]), t_s=i * 1e-6))
+    fd.flush()
+    outcomes = {r.outcome for r in recs}
+    assert "unavailable" in outcomes
+    assert outcomes <= {"ok", "collapsed", "unavailable"}
+    for r in recs:
+        if r.outcome == "unavailable":
+            assert not r.found
+
+
+# ------------------------------------------------------- config round trip
+def test_config_json_round_trip():
+    cfg = FrontDoorConfig(max_inflight=8, queue_depth=32, service_us=3.5,
+                          singleflight=True, window=128,
+                          limits=(TenantLimit("a", 1e5, burst=4.0),))
+    back = FrontDoorConfig.from_json_dict(cfg.to_json_dict())
+    assert back == cfg
+    assert not cfg.passthrough and FrontDoorConfig().passthrough
+
+
+@pytest.mark.parametrize("bad", [
+    dict(max_inflight=-1),
+    dict(queue_depth=4),               # queue without admission
+    dict(service_us=0.0),
+    dict(window=0),
+    dict(limits=(TenantLimit("a", 1e5), TenantLimit("a", 2e5))),
+    dict(limits=(TenantLimit("a", 0.0),)),
+    dict(limits=(TenantLimit("a", 1e5, burst=0.5),)),
+])
+def test_invalid_configs_raise(bad):
+    with pytest.raises(ValueError):
+        FrontDoorConfig(**bad).validate()
+
+
+def test_config_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown FrontDoorConfig"):
+        FrontDoorConfig.from_json_dict({"max_inflight": 2, "qps": 8})
+
+
+def test_offers_must_be_time_ordered(data):
+    keys, vals = data
+    st, _ = _open(keys, vals)
+    fd = FrontDoor(st, FrontDoorConfig(singleflight=True))
+    fd.offer("a", "get", int(keys[0]), t_s=5e-6)
+    with pytest.raises(ValueError, match="non-decreasing"):
+        fd.offer("a", "get", int(keys[1]), t_s=4e-6)
+    with pytest.raises(ValueError, match="unknown op"):
+        fd.offer("a", "scan", int(keys[0]), t_s=6e-6)
+
+
+# ------------------------------------------------------ telemetry counters
+def test_hub_counters_follow_outcomes(data):
+    from repro.obs import TelemetryConfig
+    keys, vals = data
+    st, tr = _open(keys, vals, telemetry=TelemetryConfig(window_ops=1024))
+    cfg = FrontDoorConfig(max_inflight=2, queue_depth=1, service_us=25.0,
+                          singleflight=True, window=64,
+                          limits=(TenantLimit("b", 50_000.0),))
+    fd = FrontDoor(st, cfg)
+    for i in range(64):
+        fd.offer("a", "get", int(keys[i % 4]), t_s=i * 1e-6)
+        fd.offer("b", "get", int(keys[8 + i % 4]), t_s=i * 1e-6)
+    fd.flush()
+    s = fd.stats()
+    c = st.hub.counters
+    assert c.get("frontdoor.singleflight_hits", 0) == s["collapsed"]
+    assert c.get("frontdoor.shed{reason=queue_full}", 0) == s["shed"]
+    assert c.get("frontdoor.ratelimited{tenant=b}", 0) == s["ratelimited"]
+    admitted = sum(v for k, v in c.items()
+                   if k.startswith("frontdoor.admitted"))
+    assert admitted == s["ok"] + s["collapsed"]
+    hw = [h for name, h in st.hub.hists.items()
+          if name.startswith("frontdoor.queue_wait_us")]
+    assert hw and sum(h.n for h in hw) == s["ok"]
+
+
+# ------------------------------------------------------- dormant identity
+def test_default_frontdoor_is_byte_invisible(data):
+    keys, vals = data
+    spec = TrafficSpec(
+        tenants=(TenantSpec(name="a", rate_ops_per_s=300_000.0,
+                            read_frac=0.7, insert_frac=0.1),),
+        duration_s=0.004, seed=21)
+    offered = generate(spec, keys)
+    snaps, traces, states = [], [], []
+    for through_door in (False, True):
+        st, tr = _open(keys, vals)
+        if through_door:
+            fd = FrontDoor(st)  # default config: passthrough
+            recs = fd.run(offered)
+            assert [r.outcome for r in recs] == ["ok"] * len(recs)
+            assert len(fd.lane_arrivals()) == len(recs)
+        else:
+            for o in offered:
+                st.submit(o.op, o.key, o.value)
+            st.flush()
+        snaps.append(st.meter_totals().snapshot())
+        traces.append(tr.trace)
+        states.append(pickle.dumps(st.engine.mn_state()))
+    assert snaps[0] == snaps[1]
+    assert traces[0] == traces[1]
+    assert states[0] == states[1]
+
+
+# --------------------------------------------------- open-loop sim joining
+def test_lane_arrivals_align_with_trace(data):
+    keys, vals = data
+    spec = TrafficSpec(
+        tenants=(TenantSpec(name="a", rate_ops_per_s=400_000.0,
+                            keyspace=256),),
+        duration_s=0.004, seed=33)
+    offered = generate(spec, keys)
+    st, tr = _open(keys, vals)
+    fd = FrontDoor(st, FrontDoorConfig(singleflight=True, window=128))
+    recs = fd.run(offered)
+    arr = np.asarray(fd.lane_arrivals())
+    n_ops = sum(1 for it in tr.trace if type(it).__name__ == "OpEvent")
+    assert len(arr) == n_ops == fd.stats()["lanes"]
+    res = simulate_open(tr.trace, arr)
+    assert len(res.lat_by_op_us) == n_ops
+    # every answered request joins a completed lane (a collapsed follower
+    # may arrive after its leader's lane finished in sim time — it still
+    # joins that lane; the slo bench clamps its latency at zero)
+    for r in recs:
+        if r.outcome == "ok":
+            assert res.completions_by_op_s[r.lane] >= r.release_s
+        elif r.outcome == "collapsed":
+            assert res.completions_by_op_s[r.lane] > 0.0
+    # mismatched arrivals are the documented alignment error
+    with pytest.raises(ValueError, match="arrival"):
+        simulate_open(tr.trace, arr[:-1])
